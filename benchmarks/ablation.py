@@ -1,0 +1,54 @@
+"""Paper Table 3 / Figure 9 analogue: incremental ablation V1 -> V4.
+
+V1 baseline: symbolic-only two-pass, no assisted sizing, no hybrid
+accumulators. V2 adds the estimation workflow (E), V3 adds assisted kernels
+(AS), V4 adds the hybrid accumulator (HA) = full Ocean. Reports per-version
+geomean GFLOPS and incremental speedups, plus the per-stage runtime
+breakdown (paper Fig. 9).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import workflow
+
+from .common import flops_of, geomean, suite, timeit
+
+VERSIONS = {
+    "V1_baseline": dict(force_workflow="symbolic", assisted=False,
+                        hybrid=False),
+    "V2_+E": dict(force_workflow=None, assisted=False, hybrid=False),
+    "V3_+AS": dict(force_workflow=None, assisted=True, hybrid=False),
+    "V4_+HA": dict(force_workflow=None, assisted=True, hybrid=True),
+}
+
+
+def run(rows: list, scale: int = 1):
+    gf = {v: [] for v in VERSIONS}
+    stage_shares = {v: {} for v in VERSIONS}
+    for name, a in suite(scale):
+        fl = flops_of(a, a)
+        for v, kw in VERSIONS.items():
+            t = timeit(lambda: workflow.ocean_spgemm(a, a, **kw))
+            gf[v].append(fl / t / 1e9)
+            _, rep = workflow.ocean_spgemm(a, a, **kw)
+            tot = max(rep.total_seconds, 1e-9)
+            for st, sec in rep.stage_seconds.items():
+                stage_shares[v].setdefault(st, []).append(sec / tot)
+    prev = None
+    for v in VERSIONS:
+        g = geomean(gf[v])
+        line = f"gflops_geomean={g:.3f}"
+        if prev is not None:
+            line += f" speedup_vs_prev=x{g / prev:.3f}"
+        prev = g
+        rows.append((f"ablation/{v}", 0.0, line))
+    v1, v4 = geomean(gf["V1_baseline"]), geomean(gf["V4_+HA"])
+    rows.append(("ablation/overall_V4_vs_V1", 0.0,
+                 f"x{v4 / v1:.3f} (paper overall avg 1.25x)"))
+    # stage breakdown (Fig. 9): prediction share under V1 vs V4
+    for v in ("V1_baseline", "V4_+HA"):
+        shares = {st: float(np.mean(s))
+                  for st, s in stage_shares[v].items()}
+        pretty = " ".join(f"{st}={sh:.2f}" for st, sh in shares.items())
+        rows.append((f"ablation/stage_share/{v}", 0.0, pretty))

@@ -1,0 +1,38 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+from repro.core import formats
+
+
+def flops_of(a, b) -> int:
+    """Paper convention: FLOPs = 2 x number of intermediate products."""
+    import jax.numpy as jnp
+    from repro.core.analysis import products_per_row
+    prod = products_per_row(a.indptr, a.indices, b.indptr, num_rows_a=a.m)
+    return 2 * int(jnp.sum(prod))
+
+
+def timeit(fn: Callable, warmup: int = 2, iters: int = 3) -> float:
+    """Median wall-clock seconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def suite(scale: int = 1) -> List[Tuple[str, formats.CSR]]:
+    return formats.make_suite(scale=scale)
+
+
+def geomean(xs) -> float:
+    xs = np.asarray([x for x in xs if x > 0], np.float64)
+    return float(np.exp(np.log(xs).mean())) if len(xs) else 0.0

@@ -1,0 +1,61 @@
+"""Paper Table 2 / Figures 6-7 analogue: overall SpGEMM performance.
+
+Compares Ocean's full estimation-based workflow against the baselines the
+paper competes with, re-implemented in this repo on the same substrate:
+
+* ``two_pass``    — classic exact symbolic + numeric (spECK-style paradigm;
+                    Ocean's V1 baseline: no estimation/assist/hybrid)
+* ``upper_bound`` — symbolic-free upper-bound allocation (MOSparse's
+                    "upper-bound" method)
+* ``esc_global``  — one global expand-sort-compact pass (AC-SpGEMM-style)
+* ``ocean``       — full Ocean (analysis -> workflow selection -> hybrid)
+
+Computes AA over the synthetic suite (the paper's square dataset stands in);
+GFLOPS uses the paper's 2 x products FLOP convention. Wall times are CPU
+(XLA-CPU + interpreted Pallas), so *relative* numbers are the signal.
+"""
+from __future__ import annotations
+
+from repro.core import workflow
+from repro.core.analysis import OceanConfig
+
+from .common import flops_of, geomean, suite, timeit
+
+
+def run(rows: list, scale: int = 1):
+    per_method = {m: [] for m in ("ocean", "two_pass", "upper_bound",
+                                  "esc_global")}
+    for name, a in suite(scale):
+        fl = flops_of(a, a)
+
+        def ocean():
+            workflow.ocean_spgemm(a, a)
+
+        def two_pass():
+            workflow.ocean_spgemm(a, a, force_workflow="symbolic",
+                                  assisted=False, hybrid=False)
+
+        def upper_bound():
+            workflow.ocean_spgemm(a, a, force_workflow="upper_bound",
+                                  assisted=False, hybrid=True)
+
+        def esc_global():
+            workflow.spgemm_reference(a, a)
+
+        for mname, fn in [("ocean", ocean), ("two_pass", two_pass),
+                          ("upper_bound", upper_bound),
+                          ("esc_global", esc_global)]:
+            t = timeit(fn)
+            gflops = fl / t / 1e9
+            per_method[mname].append(gflops)
+            rows.append((f"overall/{name}/{mname}", t * 1e6,
+                         f"gflops={gflops:.3f}"))
+
+    for mname, gs in per_method.items():
+        rows.append((f"overall/geomean/{mname}", 0.0,
+                     f"gflops_geomean={geomean(gs):.3f}"))
+    oc = geomean(per_method["ocean"])
+    for mname in ("two_pass", "upper_bound", "esc_global"):
+        base = geomean(per_method[mname])
+        rows.append((f"overall/speedup_vs_{mname}", 0.0,
+                     f"x{oc / base:.2f}" if base else "n/a"))

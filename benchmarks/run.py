@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``--scale`` grows the matrix suite;
+``--only`` runs a single module.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (ablation, cr_sampling, estimation_precision,
+                   estimator_vs_cohen, moe_dispatch, overall,
+                   selection_validation)
+
+    modules = {
+        "overall": overall,                       # Table 2 / Fig 6-7
+        "estimation_precision": estimation_precision,  # Fig 8
+        "estimator_vs_cohen": estimator_vs_cohen,  # §5.3
+        "cr_sampling": cr_sampling,                # §5.3 sampling
+        "ablation": ablation,                      # Table 3 / Fig 9
+        "selection_validation": selection_validation,  # §5.4
+        "moe_dispatch": moe_dispatch,              # beyond-paper
+    }
+    if args.only:
+        modules = {args.only: modules[args.only]}
+
+    rows: list = []
+    for name, mod in modules.items():
+        t0 = time.time()
+        print(f"# running {name} ...", file=sys.stderr, flush=True)
+        mod.run(rows, scale=args.scale)
+        print(f"#   {name} done in {time.time() - t0:.1f}s", file=sys.stderr,
+              flush=True)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Paper §5.4 cost-model validation: is the selected workflow (near-)
+optimal? For every suite matrix, time all three workflows and check whether
+the analysis step picked the fastest (within 5%, the paper's threshold).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import workflow
+
+from .common import suite, timeit
+
+
+def run(rows: list, scale: int = 1):
+    correct, total = 0, 0
+    for name, a in suite(scale):
+        _, rep = workflow.ocean_spgemm(a, a)
+        chosen = rep.workflow
+        times = {}
+        for wf in ("symbolic", "estimation", "upper_bound"):
+            times[wf] = timeit(
+                lambda wf=wf: workflow.ocean_spgemm(a, a, force_workflow=wf),
+                warmup=1, iters=3)
+        best = min(times, key=times.get)
+        ok = times[chosen] <= times[best] * 1.05
+        correct += ok
+        total += 1
+        rows.append((f"selection/{name}", times[chosen] * 1e6,
+                     f"chosen={chosen} best={best} ok={ok}"))
+    rows.append(("selection/accuracy", 0.0,
+                 f"{correct}/{total} within 5% of optimal (paper: ~90%)"))

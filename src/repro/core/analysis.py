@@ -1,0 +1,213 @@
+"""Ocean's analysis step (paper §3.2, §4.3): cheap statistics + sampling that
+select the workflow and configure the accumulators.
+
+Everything here is O(nnz_A) + O(nnz_B) + O(sample * m_regs), mirroring the
+paper's lightweight analysis. Results surface as host scalars because
+workflow/kernel selection happens on the host (exactly as CUDA SpGEMM picks
+kernels on the host after its analysis step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hll
+from .formats import CSR
+from .hll import row_ids_from_indptr
+
+
+@dataclasses.dataclass(frozen=True)
+class OceanConfig:
+    """Paper §4.3 constants (faithful defaults)."""
+    # HLL register count: 32 when ER < er_register_switch else 64.
+    m_regs_small: int = 32
+    m_regs_large: int = 64
+    er_register_switch: float = 48.0
+    # Workflow selection thresholds (Table 1).
+    upper_bound_avg_products: float = 64.0
+    er_threshold: float = 8.0
+    cr_threshold: float = 8.0
+    # Sampling (paper: ratio 0.03, clamped to [600, 10000]).
+    sample_ratio: float = 0.03
+    sample_min: int = 600
+    sample_max: int = 10_000
+    # Hash-table/bin expansion: 1.5x (2.0x at m=32 per §5.3).
+    expansion: float = 1.5
+    expansion_small_regs: float = 2.0
+    # Assisted sizing (§4.1): conservative CR = mean - cr_sigma * std, >= 1.
+    cr_sigma: float = 1.0
+    # Dense-accumulator bitmap-query threshold (§4.1) — GPU-latency-specific,
+    # kept for the cost model/ablation bookkeeping.
+    bitmap_query_cr: float = 2.0
+    seed: int = 0
+
+    def m_regs(self, er: float) -> int:
+        return self.m_regs_small if er < self.er_register_switch else self.m_regs_large
+
+    def expansion_for(self, m_regs: int) -> float:
+        return self.expansion_small_regs if m_regs <= 32 else self.expansion
+
+
+@partial(jax.jit, static_argnames=("num_rows_a",))
+def products_per_row(a_indptr, a_indices, b_indptr, *, num_rows_a: int):
+    """Number of intermediate products per output row — O(nnz_A)."""
+    cap = a_indices.shape[0]
+    nnz_a = a_indptr[-1]
+    valid = jnp.arange(cap, dtype=jnp.int32) < nnz_a
+    b_len = (b_indptr[1:] - b_indptr[:-1]).astype(jnp.int32)
+    k = jnp.clip(a_indices, 0, b_len.shape[0] - 1)
+    contrib = jnp.where(valid, b_len[k], 0)
+    row = jnp.where(valid, jnp.clip(row_ids_from_indptr(a_indptr, cap), 0,
+                                    num_rows_a - 1), 0)
+    return jax.ops.segment_sum(contrib, row, num_segments=num_rows_a)
+
+
+@partial(jax.jit, static_argnames=("num_rows",))
+def row_col_ranges(indptr, indices, *, num_rows: int):
+    """Per-row (min_col, max_col) — used to bound dense-accumulator windows."""
+    cap = indices.shape[0]
+    nnz = indptr[-1]
+    valid = jnp.arange(cap, dtype=jnp.int32) < nnz
+    row = jnp.where(valid, jnp.clip(row_ids_from_indptr(indptr, cap), 0,
+                                    num_rows - 1), 0)
+    big = jnp.int32(2**31 - 1)
+    mins = jax.ops.segment_min(jnp.where(valid, indices, big), row,
+                               num_segments=num_rows)
+    maxs = jax.ops.segment_max(jnp.where(valid, indices, -1), row,
+                               num_segments=num_rows)
+    return mins, maxs
+
+
+@partial(jax.jit, static_argnames=("num_rows_a",))
+def output_col_ranges(a_indptr, a_indices, b_min, b_max, *, num_rows_a: int):
+    """Upper bound on each C row's column range from B-row ranges."""
+    cap = a_indices.shape[0]
+    nnz_a = a_indptr[-1]
+    valid = jnp.arange(cap, dtype=jnp.int32) < nnz_a
+    row = jnp.where(valid, jnp.clip(row_ids_from_indptr(a_indptr, cap), 0,
+                                    num_rows_a - 1), 0)
+    k = jnp.clip(a_indices, 0, b_min.shape[0] - 1)
+    big = jnp.int32(2**31 - 1)
+    lo = jax.ops.segment_min(jnp.where(valid, b_min[k], big), row,
+                             num_segments=num_rows_a)
+    hi = jax.ops.segment_max(jnp.where(valid, b_max[k], -1), row,
+                             num_segments=num_rows_a)
+    return lo, hi
+
+
+@dataclasses.dataclass
+class AnalysisResult:
+    """Everything the workflow selector and binning need."""
+    nnz_a: int
+    nnz_b: int
+    total_products: int
+    products_row: jax.Array          # (m,) int32
+    er: float                        # Input Expansion Ratio
+    nproducts_avg: float
+    m_regs: int
+    b_sketches: Optional[jax.Array]  # (nB, m_regs) int32 (None if skipped)
+    sampled_cr: Optional[float]      # Sampled Output Compression Ratio
+    cr_mean: Optional[float]         # per-row CR sample mean
+    cr_std: Optional[float]          # per-row CR sample std
+    out_lo: jax.Array                # (m,) per-row output col-range bounds
+    out_hi: jax.Array
+    workflow: str                    # 'upper_bound' | 'estimation' | 'symbolic'
+    sample_rows: Optional[np.ndarray] = None
+
+    @property
+    def conservative_cr(self) -> float:
+        """§4.1 assisted sizing: mean - sigma*std, clipped to >= 1."""
+        if self.cr_mean is None:
+            return 1.0
+        return max(1.0, self.cr_mean - self.cr_std)
+
+
+def _pick_sample_rows(num_rows: int, cfg: OceanConfig) -> np.ndarray:
+    n = int(round(num_rows * cfg.sample_ratio))
+    n = int(np.clip(n, min(cfg.sample_min, num_rows), cfg.sample_max))
+    rng = np.random.default_rng(cfg.seed)
+    return rng.choice(num_rows, size=n, replace=False).astype(np.int32)
+
+
+def analyze(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(),
+            build_sketches: bool = True) -> AnalysisResult:
+    """The Ocean analysis step. Selects the workflow per Table 1:
+
+        upper_bound  if nproducts_avg < 64
+        estimation   if nproducts_avg >= 64 and ER >= 8 and sampled CR >= 8
+        symbolic     otherwise
+    """
+    prod_row = products_per_row(a.indptr, a.indices, b.indptr, num_rows_a=a.m)
+    total_products = int(jnp.sum(prod_row))
+    nnz_a, nnz_b = a.nnz, b.nnz
+    er = total_products / max(nnz_a, 1)
+    nproducts_avg = total_products / max(a.m, 1)
+
+    b_min, b_max = row_col_ranges(b.indptr, b.indices, num_rows=b.m)
+    out_lo, out_hi = output_col_ranges(a.indptr, a.indices, b_min, b_max,
+                                       num_rows_a=a.m)
+
+    m_regs = cfg.m_regs(er)
+
+    if nproducts_avg < cfg.upper_bound_avg_products:
+        return AnalysisResult(
+            nnz_a=nnz_a, nnz_b=nnz_b, total_products=total_products,
+            products_row=prod_row, er=er, nproducts_avg=nproducts_avg,
+            m_regs=m_regs, b_sketches=None, sampled_cr=None, cr_mean=None,
+            cr_std=None, out_lo=out_lo, out_hi=out_hi, workflow="upper_bound")
+
+    sketches = None
+    sampled_cr = cr_mean = cr_std = None
+    sample_rows = None
+    if er >= cfg.er_threshold and build_sketches:
+        # Sketch construction O(nnz_B) + sampled merge (paper: ~3% of runtime).
+        sketches = hll.sketch_rows(b, m_regs, seed=cfg.seed)
+        sample_rows = _pick_sample_rows(a.m, cfg)
+        sub = _sample_sub_csr(a, sample_rows)
+        est = hll.estimate_row_nnz(sub, sketches, b.n)
+        est = np.maximum(np.asarray(est), 1.0)
+        prods = np.asarray(prod_row)[sample_rows].astype(np.float64)
+        mask = prods > 0
+        if mask.any():
+            per_row_cr = prods[mask] / est[mask]
+            sampled_cr = float(prods[mask].sum() / est[mask].sum())
+            cr_mean = float(per_row_cr.mean())
+            cr_std = float(per_row_cr.std())
+        else:
+            sampled_cr, cr_mean, cr_std = 1.0, 1.0, 0.0
+
+    if (er >= cfg.er_threshold and sampled_cr is not None
+            and sampled_cr >= cfg.cr_threshold):
+        workflow = "estimation"
+    else:
+        workflow = "symbolic"
+
+    return AnalysisResult(
+        nnz_a=nnz_a, nnz_b=nnz_b, total_products=total_products,
+        products_row=prod_row, er=er, nproducts_avg=nproducts_avg,
+        m_regs=m_regs, b_sketches=sketches, sampled_cr=sampled_cr,
+        cr_mean=cr_mean, cr_std=cr_std, out_lo=out_lo, out_hi=out_hi,
+        workflow=workflow, sample_rows=sample_rows)
+
+
+def _sample_sub_csr(a: CSR, rows: np.ndarray) -> CSR:
+    """Host-side: a small CSR containing only the sampled rows of A."""
+    indptr = np.asarray(a.indptr)
+    indices = np.asarray(a.indices)
+    values = np.asarray(a.values)
+    parts_i, parts_v = [], []
+    new_ptr = [0]
+    for r in rows:
+        s, e = int(indptr[r]), int(indptr[r + 1])
+        parts_i.append(indices[s:e])
+        parts_v.append(values[s:e])
+        new_ptr.append(new_ptr[-1] + (e - s))
+    from .formats import csr_from_arrays
+    ii = np.concatenate(parts_i) if parts_i else np.zeros(0, np.int32)
+    vv = np.concatenate(parts_v) if parts_v else np.zeros(0, values.dtype)
+    return csr_from_arrays(np.asarray(new_ptr), ii, vv, (len(rows), a.n))

@@ -1,0 +1,149 @@
+"""Per-row accumulator binning (paper §2.3 / §3.3 / §4.3).
+
+Rows are assigned to accumulator configurations by two attributes:
+
+* predicted output nnz (expansion-factored, rounded up the capacity ladder —
+  exactly the paper's binning-absorbs-estimation-error mechanism), and
+* output column-range width (bounds the dense VMEM window).
+
+TPU note: GPU Ocean bins hash kernels by nnz and dense kernels by range;
+here hash kernels do not exist (no atomics), so the ladder is dense windows
+by range with per-row capacities by predicted nnz, an ESC bin for short rows
+(upper-bound workflow only, as in the paper), and the column-tiled long-row
+kernel when the range exceeds the widest VMEM window.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+# Dense VMEM window ladder. The largest window (4096 f32 accum + 4096 f32
+# counts = 32 KB) times 8 concurrently-resident rows stays well under the
+# ~16 MB/core VMEM budget with room for the B-row stream.
+WINDOW_LADDER = (256, 512, 1024, 2048, 4096)
+# Capacity (slab) ladder — the accumulator sizes rows are rounded up to.
+CAP_LADDER = (32, 64, 128, 256, 512, 1024, 2048, 4096)
+# Column tile for the long-row kernel.
+LONGROW_TILE = 2048
+# Paper: smallest block size / ESC threshold.
+ESC_THRESHOLD = 64
+
+
+def round_up_ladder(x: int, ladder=CAP_LADDER) -> int:
+    for v in ladder:
+        if x <= v:
+            return v
+    return ladder[-1]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return max(mult, ((x + mult - 1) // mult) * mult)
+
+
+def _pow2_at_least(x: int, floor: int = 8) -> int:
+    v = floor
+    while v < x:
+        v *= 2
+    return v
+
+
+@dataclasses.dataclass
+class DenseBin:
+    window: int               # dense window width (or tile width for longrow)
+    col_tiles: int            # 1 for windowed bins; >1 for the long-row kernel
+    cap: int                  # output slab width per row
+    rows: np.ndarray          # row ids (original matrix row indices)
+    ell_width: int            # padded A-row nnz width for this bin
+
+    @property
+    def is_longrow(self) -> bool:
+        return self.col_tiles > 1
+
+
+@dataclasses.dataclass
+class BinPlan:
+    dense_bins: List[DenseBin]
+    esc_rows: np.ndarray      # rows handled by the ESC accumulator
+    esc_caps: np.ndarray      # per-row capacity for ESC rows
+    empty_rows: np.ndarray    # rows with zero products
+
+    def describe(self) -> Dict[str, int]:
+        d = {f"dense_w{b.window}x{b.col_tiles}": len(b.rows)
+             for b in self.dense_bins}
+        d["esc"] = len(self.esc_rows)
+        d["empty"] = len(self.empty_rows)
+        return d
+
+
+def plan_bins(pred_nnz: np.ndarray, products: np.ndarray,
+              range_lo: np.ndarray, range_hi: np.ndarray,
+              a_row_nnz: np.ndarray, n_cols: int, *,
+              expansion: float, workflow: str,
+              esc_enabled: bool = True,
+              assisted_cr: float | None = None) -> BinPlan:
+    """Assign every output row to an accumulator configuration.
+
+    pred_nnz:   per-row predicted output nnz (estimate / exact / upper bound)
+    products:   per-row intermediate-product counts (safe upper bound)
+    range_*:    per-row output column-range bounds from the analysis step
+    a_row_nnz:  nnz of each A row (sizes the ELL blocks)
+    expansion:  hash-expansion analogue applied to estimates (1.5x / 2.0x)
+    workflow:   'upper_bound' | 'estimation' | 'symbolic'
+    assisted_cr: §4.1 — divide upper-bound capacities by a conservative CR.
+    """
+    m = len(pred_nnz)
+    products = np.asarray(products)
+    pred = np.asarray(pred_nnz, np.float64)
+
+    if workflow == "estimation":
+        alloc = np.ceil(pred * expansion)
+    elif workflow == "upper_bound":
+        alloc = pred.copy()
+        if assisted_cr is not None and assisted_cr > 1.0:
+            # assisted sizing, still clamped to a hard upper bound's safety
+            alloc = np.maximum(np.ceil(pred / assisted_cr), 1.0)
+    else:  # symbolic: exact sizes, no slack needed
+        alloc = pred.copy()
+    # capacity can never usefully exceed the range width or the product count
+    width = np.maximum(range_hi - range_lo + 1, 0)
+    alloc = np.minimum(alloc, np.maximum(width, 1))
+    alloc = np.minimum(alloc, np.maximum(products, 1))
+
+    empty = products == 0
+    esc_mask = np.zeros(m, bool)
+    if esc_enabled and workflow == "upper_bound":
+        # Paper §3.3: ESC only in the upper-bound workflow, for short rows.
+        esc_mask = (~empty) & (products < ESC_THRESHOLD)
+
+    dense_mask = (~empty) & (~esc_mask)
+    caps = np.array([round_up_ladder(int(x)) for x in alloc], np.int64)
+
+    bins: Dict[tuple, List[int]] = {}
+    idx = np.nonzero(dense_mask)[0]
+    max_w = WINDOW_LADDER[-1]
+    for r in idx:
+        w = int(width[r])
+        cap = int(min(caps[r], max_w))
+        if w <= max_w:
+            window = round_up_ladder(max(w, cap), WINDOW_LADDER)
+            key = (window, 1)
+        else:
+            tiles = int(np.ceil(n_cols / LONGROW_TILE))
+            key = (LONGROW_TILE, tiles)
+        bins.setdefault(key, []).append(r)
+
+    dense_bins = []
+    for (window, tiles), rows_list in sorted(bins.items()):
+        rows_arr = np.asarray(rows_list, np.int64)
+        bin_cap = int(min(int(caps[rows_arr].max()), window * tiles))
+        ell = _pow2_at_least(int(a_row_nnz[rows_arr].max()))
+        dense_bins.append(DenseBin(window=window, col_tiles=tiles,
+                                   cap=bin_cap, rows=rows_arr,
+                                   ell_width=ell))
+
+    esc_rows = np.nonzero(esc_mask)[0]
+    esc_caps = products[esc_rows].astype(np.int64)
+    return BinPlan(dense_bins=dense_bins, esc_rows=esc_rows,
+                   esc_caps=esc_caps, empty_rows=np.nonzero(empty)[0])

@@ -1,0 +1,166 @@
+"""ESC (Expand-Sort-Compact) accumulation and the exact symbolic pass.
+
+On TPU, sorting is a first-class XLA primitive, so ESC maps almost verbatim
+from the paper (§2.2/§3.3): expansion is a vectorized gather driven by a
+``cumsum``+``searchsorted`` product enumeration; sorting uses packed
+``row*n + col`` keys (int32 when they fit — the paper's key/ptr bit-packing
+insight, §4.2); compaction is a segmented sum.
+
+The same machinery with indices only implements the *exact symbolic pass*
+(the two-pass baseline Ocean replaces), and serves as the overflow-fallback
+kernel (paper §3.2) with upper-bound capacity.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .formats import CSR, PAD_COL
+from .hll import row_ids_from_indptr
+
+
+class Expanded(NamedTuple):
+    rows: jax.Array   # (p_cap,) int32 — output row of each product
+    cols: jax.Array   # (p_cap,) int32 — output col of each product
+    vals: jax.Array   # (p_cap,) float — a_ik * b_kj
+    valid: jax.Array  # (p_cap,) bool
+    total: jax.Array  # () int32 — true number of products
+
+
+def _b_row_nnz(b_indptr):
+    return b_indptr[1:] - b_indptr[:-1]
+
+
+@partial(jax.jit, static_argnames=("p_cap", "num_rows_a", "with_values"))
+def expand(a_indptr, a_indices, a_values, b_indptr, b_indices, b_values,
+           *, p_cap: int, num_rows_a: int, with_values: bool = True) -> Expanded:
+    """Enumerate all intermediate products of C = A @ B into flat arrays.
+
+    Product ``p`` maps to A-nonzero ``j`` (via searchsorted over per-nnz
+    product offsets) and within-B-row position ``t``.
+    """
+    cap_a = a_indices.shape[0]
+    nnz_a = a_indptr[-1]
+    slot_valid = jnp.arange(cap_a, dtype=jnp.int32) < nnz_a
+
+    b_len = _b_row_nnz(b_indptr)
+    k_of_slot = jnp.clip(a_indices, 0, b_len.shape[0] - 1)
+    len_of_slot = jnp.where(slot_valid, b_len[k_of_slot], 0)
+    offsets = jnp.concatenate([jnp.zeros((1,), len_of_slot.dtype),
+                               jnp.cumsum(len_of_slot)])
+    total = offsets[-1].astype(jnp.int32)
+
+    p = jnp.arange(p_cap, dtype=jnp.int32)
+    j = jnp.searchsorted(offsets, p, side="right").astype(jnp.int32) - 1
+    j = jnp.clip(j, 0, cap_a - 1)
+    t = p - offsets[j].astype(jnp.int32)
+    valid = p < total
+
+    a_row = jnp.clip(row_ids_from_indptr(a_indptr, cap_a), 0, num_rows_a - 1)
+    rows = jnp.where(valid, a_row[j], num_rows_a)  # pads -> sentinel row
+    k = k_of_slot[j]
+    b_pos = jnp.clip(b_indptr[k].astype(jnp.int32) + t, 0, b_indices.shape[0] - 1)
+    cols = jnp.where(valid, b_indices[b_pos], PAD_COL)
+    if with_values:
+        vals = jnp.where(valid, a_values[j] * b_values[b_pos], 0)
+    else:
+        vals = jnp.zeros((p_cap,), jnp.float32)
+    return Expanded(rows, cols, vals, valid, total)
+
+
+def _pack_keys(rows, cols, n_cols: int, valid):
+    """Paper §4.2: pack (row, col) into the narrowest integer key that fits."""
+    if True:  # decide statically from n_cols & worst-case rows at trace time
+        max_key = None
+    rows64 = rows.astype(jnp.int64)
+    key = rows64 * jnp.int64(n_cols) + jnp.where(valid, cols, 0).astype(jnp.int64)
+    key = jnp.where(valid, key, jnp.iinfo(jnp.int64).max)
+    return key
+
+
+def pack_keys(rows, cols, n_cols: int, num_rows: int, valid):
+    """int32 keys when (num_rows+1) * n_cols fits in int31, else int64."""
+    if (num_rows + 1) * n_cols < 2**31:
+        key = rows.astype(jnp.int32) * jnp.int32(n_cols) + \
+            jnp.where(valid, cols, 0).astype(jnp.int32)
+        return jnp.where(valid, key, jnp.iinfo(jnp.int32).max)
+    return _pack_keys(rows, cols, n_cols, valid)
+
+
+class ESCResult(NamedTuple):
+    indptr: jax.Array    # (m+1,) int32
+    indices: jax.Array   # (out_cap,) int32 (PAD_COL beyond nnz)
+    values: jax.Array    # (out_cap,) float
+    nnz: jax.Array       # () int32 — true output nnz (may exceed out_cap!)
+
+
+@partial(jax.jit, static_argnames=("p_cap", "out_cap", "num_rows_a", "n_cols_b"))
+def esc_spgemm(a_indptr, a_indices, a_values, b_indptr, b_indices, b_values,
+               *, p_cap: int, out_cap: int, num_rows_a: int,
+               n_cols_b: int) -> ESCResult:
+    """Full ESC SpGEMM. Caller checks ``nnz <= out_cap`` (overflow handling)."""
+    ex = expand(a_indptr, a_indices, a_values, b_indptr, b_indices, b_values,
+                p_cap=p_cap, num_rows_a=num_rows_a)
+    key = pack_keys(ex.rows, ex.cols, n_cols_b, num_rows_a, ex.valid)
+    key_s, val_s = jax.lax.sort((key, ex.vals), num_keys=1)
+    valid_s = key_s != jnp.iinfo(key_s.dtype).max
+
+    head = jnp.ones_like(valid_s)
+    head = head.at[1:].set(key_s[1:] != key_s[:-1])
+    head = head & valid_s
+    seg = jnp.cumsum(head.astype(jnp.int32)) - 1          # compacted slot id
+    nnz = jnp.sum(head.astype(jnp.int32))
+
+    seg_cl = jnp.where(valid_s, jnp.clip(seg, 0, out_cap - 1), out_cap)
+    out_vals = jax.ops.segment_sum(val_s, seg_cl, num_segments=out_cap + 1)[:-1]
+    # column index and row id of each compacted slot
+    key_of_slot = jax.ops.segment_max(
+        jnp.where(head, key_s, jnp.iinfo(key_s.dtype).min), seg_cl,
+        num_segments=out_cap + 1)[:-1]
+    slot_valid = jnp.arange(out_cap) < jnp.minimum(nnz, out_cap)
+    row_of_slot = jnp.where(
+        slot_valid, (key_of_slot // n_cols_b).astype(jnp.int32), num_rows_a)
+    col_of_slot = jnp.where(
+        slot_valid, (key_of_slot % n_cols_b).astype(jnp.int32), PAD_COL)
+    out_vals = jnp.where(slot_valid, out_vals, 0)
+
+    counts = jax.ops.segment_sum(
+        jnp.ones((out_cap,), jnp.int32) * slot_valid.astype(jnp.int32),
+        row_of_slot, num_segments=num_rows_a + 1)[:-1]
+    indptr = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts).astype(jnp.int32)])
+    return ESCResult(indptr, col_of_slot, out_vals, nnz)
+
+
+@partial(jax.jit, static_argnames=("p_cap", "num_rows_a", "n_cols_b"))
+def symbolic_exact(a_indptr, a_indices, b_indptr, b_indices,
+                   *, p_cap: int, num_rows_a: int, n_cols_b: int) -> jax.Array:
+    """Exact per-row output nnz — the classical symbolic pass (indices only).
+
+    This is the step Ocean's HLL estimation replaces; it remains both the
+    fallback workflow and the two-pass baseline for benchmarks.
+    """
+    ex = expand(a_indptr, a_indices, None, b_indptr, b_indices, None,
+                p_cap=p_cap, num_rows_a=num_rows_a, with_values=False)
+    key = pack_keys(ex.rows, ex.cols, n_cols_b, num_rows_a, ex.valid)
+    key_s = jax.lax.sort(key)
+    valid_s = key_s != jnp.iinfo(key_s.dtype).max
+    head = jnp.ones_like(valid_s)
+    head = head.at[1:].set(key_s[1:] != key_s[:-1])
+    head = head & valid_s
+    row_s = (key_s // n_cols_b).astype(jnp.int32)
+    row_s = jnp.where(valid_s, row_s, num_rows_a)
+    counts = jax.ops.segment_sum(head.astype(jnp.int32), row_s,
+                                 num_segments=num_rows_a + 1)[:-1]
+    return counts
+
+
+def esc_to_csr(res: ESCResult, shape, out_cap: int) -> CSR:
+    """Host-side wrapper: materialize an ESCResult as a CSR (nnz <= out_cap)."""
+    nnz = int(res.nnz)
+    if nnz > out_cap:
+        raise ValueError(f"ESC overflow: nnz {nnz} > capacity {out_cap}")
+    return CSR(res.indptr, res.indices, res.values, tuple(shape), nnz)

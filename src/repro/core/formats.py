@@ -1,0 +1,317 @@
+"""Static-capacity CSR containers and host-side synthetic matrix generators.
+
+JAX needs static shapes, so the CSR container carries a fixed ``capacity``
+(>= nnz); entries past ``nnz`` are padding (index = ``PAD_COL``, value = 0).
+All per-row structure lives in ``indptr`` exactly as in standard CSR, so the
+padding only affects the tail of ``indices``/``values``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAD_COL = np.int32(2**31 - 1)  # sorts after every real column index
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Compressed-sparse-row matrix with static capacity.
+
+    indptr:  (m+1,) int32 — row offsets into indices/values (<= nnz).
+    indices: (capacity,) int32 — column indices, padded with PAD_COL.
+    values:  (capacity,) float — values, padded with 0.
+    shape:   (m, n) static.
+    nnz:     python int, number of valid entries (static).
+    """
+
+    indptr: jax.Array
+    indices: jax.Array
+    values: jax.Array
+    shape: Tuple[int, int]
+    nnz: int
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.indptr, self.indices, self.values), (self.shape, self.nnz)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        indptr, indices, values = children
+        shape, nnz = aux
+        return cls(indptr, indices, values, shape, nnz)
+
+    # -- convenience --------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def m(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.shape[1]
+
+    def row_nnz(self) -> jax.Array:
+        return self.indptr[1:] - self.indptr[:-1]
+
+    def to_dense(self) -> jax.Array:
+        return csr_to_dense(self)
+
+    def to_scipy_like(self):
+        """Return (indptr, indices, values) trimmed to nnz as numpy arrays."""
+        return (
+            np.asarray(self.indptr),
+            np.asarray(self.indices[: self.nnz]),
+            np.asarray(self.values[: self.nnz]),
+        )
+
+
+def csr_from_arrays(indptr, indices, values, shape, capacity=None) -> CSR:
+    """Build a CSR from host/device arrays, padding to ``capacity``."""
+    indptr = jnp.asarray(indptr, jnp.int32)
+    indices = jnp.asarray(indices, jnp.int32)
+    values = jnp.asarray(values)
+    nnz = int(indices.shape[0])
+    capacity = nnz if capacity is None else int(capacity)
+    if capacity < nnz:
+        raise ValueError(f"capacity {capacity} < nnz {nnz}")
+    pad = capacity - nnz
+    if pad:
+        indices = jnp.concatenate([indices, jnp.full((pad,), PAD_COL, jnp.int32)])
+        values = jnp.concatenate([values, jnp.zeros((pad,), values.dtype)])
+    return CSR(indptr, indices, values, tuple(shape), nnz)
+
+
+def csr_from_dense(dense, capacity=None) -> CSR:
+    """Host-side dense -> CSR (numpy; for tests and small inputs)."""
+    a = np.asarray(dense)
+    m, n = a.shape
+    rows, cols = np.nonzero(a)
+    order = np.lexsort((cols, rows))
+    rows, cols = rows[order], cols[order]
+    vals = a[rows, cols]
+    indptr = np.zeros(m + 1, np.int64)
+    np.add.at(indptr, rows + 1, 1)
+    indptr = np.cumsum(indptr)
+    return csr_from_arrays(indptr, cols, vals, (m, n), capacity)
+
+
+@partial(jax.jit, static_argnames=("n", "row_start", "num_rows"))
+def _dense_block(indptr, indices, values, n, row_start, num_rows):
+    # scatter valid entries of the requested row block into a dense block
+    starts = indptr[row_start : row_start + num_rows]
+    ends = indptr[row_start + 1 : row_start + num_rows + 1]
+    out = jnp.zeros((num_rows, n), values.dtype)
+    cap = indices.shape[0]
+    pos = jnp.arange(cap, dtype=jnp.int32)
+    # row id of each nnz: searchsorted over indptr
+    row_of = (
+        jnp.searchsorted(indptr, pos, side="right").astype(jnp.int32) - 1
+    )
+    valid = (row_of >= row_start) & (row_of < row_start + num_rows)
+    valid &= pos < indptr[-1]
+    r = jnp.where(valid, row_of - row_start, 0)
+    c = jnp.where(valid, indices, 0)
+    v = jnp.where(valid, values, 0)
+    del starts, ends
+    return out.at[r, c].add(v)
+
+
+def csr_to_dense(a: CSR) -> jax.Array:
+    return _dense_block(a.indptr, a.indices, a.values, a.n, 0, a.m)
+
+
+def dense_to_csr_np(a: np.ndarray) -> CSR:
+    return csr_from_dense(a)
+
+
+@partial(jax.jit, static_argnames=("num_rows", "ell_width", "pad_index"))
+def csr_rows_to_ell(indptr, indices, values, *, num_rows: int, ell_width: int,
+                    pad_index: int = -1):
+    """CSR -> ELL (padded row-major) layout for Pallas kernels.
+
+    Returns (ell_idx (num_rows, ell_width) int32, ell_val or None). Rows
+    longer than ell_width are truncated — callers must size ell_width to the
+    max row length of the binned rows.
+    """
+    e = jnp.arange(ell_width, dtype=jnp.int32)[None, :]
+    starts = indptr[:num_rows, None].astype(jnp.int32)
+    lens = (indptr[1 : num_rows + 1] - indptr[:num_rows])[:, None].astype(jnp.int32)
+    pos = jnp.clip(starts + e, 0, indices.shape[0] - 1)
+    valid = e < lens
+    ell_idx = jnp.where(valid, indices[pos], pad_index)
+    ell_val = None
+    if values is not None:
+        ell_val = jnp.where(valid, values[pos], 0)
+    return ell_idx, ell_val
+
+
+def pad_axis(x, length: int, axis: int = 0, value=0):
+    """Pad ``x`` along ``axis`` up to ``length`` with ``value``."""
+    cur = x.shape[axis]
+    if cur >= length:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, length - cur)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic matrix generators (host-side, numpy). These stand in for the
+# SuiteSparse collections used in the paper: the suite spans uniform-random,
+# power-law (graph-like), banded (PDE-like), block-sparse, and
+# near-dense-output regimes so every Ocean workflow branch is exercised.
+# ---------------------------------------------------------------------------
+
+def _dedupe_rows(rows, cols, vals, m, n):
+    key = rows.astype(np.int64) * n + cols
+    order = np.argsort(key, kind="stable")
+    key, rows, cols, vals = key[order], rows[order], cols[order], vals[order]
+    keep = np.ones(len(key), bool)
+    keep[1:] = key[1:] != key[:-1]
+    # sum duplicate values into the kept slot
+    seg = np.cumsum(keep) - 1
+    out_vals = np.zeros(int(seg[-1]) + 1 if len(seg) else 0, vals.dtype)
+    np.add.at(out_vals, seg, vals)
+    return rows[keep], cols[keep], out_vals
+
+
+def _to_csr(rows, cols, vals, m, n, capacity=None) -> CSR:
+    indptr = np.zeros(m + 1, np.int64)
+    np.add.at(indptr, rows + 1, 1)
+    indptr = np.cumsum(indptr)
+    return csr_from_arrays(indptr, cols, vals, (m, n), capacity)
+
+
+def random_uniform_csr(key: int, m: int, n: int, nnz_per_row: float,
+                       dtype=np.float32) -> CSR:
+    """Uniform random sparsity — ER moderate, CR ~ 1-2."""
+    rng = np.random.default_rng(key)
+    counts = rng.poisson(nnz_per_row, m).clip(0, n)
+    rows = np.repeat(np.arange(m), counts)
+    cols = rng.integers(0, n, rows.shape[0])
+    vals = rng.standard_normal(rows.shape[0]).astype(dtype)
+    rows, cols, vals = _dedupe_rows(rows, cols, vals, m, n)
+    return _to_csr(rows, cols, vals, m, n)
+
+
+def powerlaw_csr(key: int, m: int, n: int, nnz_per_row: float,
+                 alpha: float = 1.5, dtype=np.float32) -> CSR:
+    """Power-law column popularity (graph adjacency-like) — high CR rows."""
+    rng = np.random.default_rng(key)
+    counts = rng.zipf(alpha, m).clip(1, max(1, n // 4))
+    scale = nnz_per_row / max(counts.mean(), 1e-9)
+    counts = np.maximum(1, (counts * scale).astype(np.int64)).clip(1, n)
+    popularity = (1.0 / np.arange(1, n + 1) ** 0.8)
+    popularity /= popularity.sum()
+    rows = np.repeat(np.arange(m), counts)
+    cols = rng.choice(n, rows.shape[0], p=popularity)
+    vals = rng.standard_normal(rows.shape[0]).astype(dtype)
+    rows, cols, vals = _dedupe_rows(rows, cols, vals, m, n)
+    return _to_csr(rows, cols, vals, m, n)
+
+
+def banded_csr(key: int, m: int, n: int, bandwidth: int,
+               fill: float = 0.7, dtype=np.float32) -> CSR:
+    """Banded (stencil/PDE-like) — narrow column span, dense-accumulator-friendly."""
+    rng = np.random.default_rng(key)
+    rows_l, cols_l, vals_l = [], [], []
+    for i in range(m):
+        lo = max(0, int(i * n / m) - bandwidth)
+        hi = min(n, int(i * n / m) + bandwidth + 1)
+        mask = rng.random(hi - lo) < fill
+        c = np.arange(lo, hi)[mask]
+        rows_l.append(np.full(c.shape[0], i))
+        cols_l.append(c)
+        vals_l.append(rng.standard_normal(c.shape[0]).astype(dtype))
+    rows = np.concatenate(rows_l)
+    cols = np.concatenate(cols_l)
+    vals = np.concatenate(vals_l)
+    return _to_csr(rows, cols, vals, m, n)
+
+
+def block_sparse_csr(key: int, m: int, n: int, block: int,
+                     block_density: float = 0.05, fill: float = 0.8,
+                     dtype=np.float32) -> CSR:
+    """Block-sparse (TileSpGEMM's favourable case)."""
+    rng = np.random.default_rng(key)
+    mb, nb = (m + block - 1) // block, (n + block - 1) // block
+    active = rng.random((mb, nb)) < block_density
+    rows_l, cols_l, vals_l = [], [], []
+    bi, bj = np.nonzero(active)
+    for i, j in zip(bi, bj):
+        r0, c0 = i * block, j * block
+        h = min(block, m - r0)
+        w = min(block, n - c0)
+        mask = rng.random((h, w)) < fill
+        rr, cc = np.nonzero(mask)
+        rows_l.append(rr + r0)
+        cols_l.append(cc + c0)
+        vals_l.append(rng.standard_normal(rr.shape[0]).astype(dtype))
+    if not rows_l:
+        return random_uniform_csr(key, m, n, 1.0, dtype)
+    rows = np.concatenate(rows_l)
+    cols = np.concatenate(cols_l)
+    vals = np.concatenate(vals_l)
+    rows, cols, vals = _dedupe_rows(rows, cols, vals, m, n)
+    return _to_csr(rows, cols, vals, m, n)
+
+
+def skewed_rows_csr(key: int, m: int, n: int, nnz_per_row: float,
+                    heavy_frac: float = 0.02, heavy_mult: float = 50.0,
+                    dtype=np.float32) -> CSR:
+    """A few extremely long rows (load-imbalance stressor; long-row kernel)."""
+    rng = np.random.default_rng(key)
+    counts = rng.poisson(nnz_per_row, m).clip(1, n)
+    heavy = rng.random(m) < heavy_frac
+    counts = np.where(heavy, np.minimum(n, (counts * heavy_mult).astype(np.int64)), counts)
+    rows = np.repeat(np.arange(m), counts)
+    cols = rng.integers(0, n, rows.shape[0])
+    vals = rng.standard_normal(rows.shape[0]).astype(dtype)
+    rows, cols, vals = _dedupe_rows(rows, cols, vals, m, n)
+    return _to_csr(rows, cols, vals, m, n)
+
+
+def hypersparse_csr(key: int, m: int, n: int, dtype=np.float32) -> CSR:
+    """<1 nnz per row on average — the upper-bound-workflow regime."""
+    rng = np.random.default_rng(key)
+    nnz = max(1, int(0.6 * m))
+    rows = np.sort(rng.integers(0, m, nnz))
+    cols = rng.integers(0, n, nnz)
+    vals = rng.standard_normal(nnz).astype(dtype)
+    rows, cols, vals = _dedupe_rows(rows, cols, vals, m, n)
+    return _to_csr(rows, cols, vals, m, n)
+
+
+GENERATORS = {
+    "uniform": random_uniform_csr,
+    "powerlaw": powerlaw_csr,
+    "banded": banded_csr,
+    "block": block_sparse_csr,
+    "skewed": skewed_rows_csr,
+    "hypersparse": hypersparse_csr,
+}
+
+
+def make_suite(scale: int = 1, seed: int = 0):
+    """A dataset of diverse matrices standing in for the paper's SuiteSparse
+    selection. ``scale`` multiplies matrix dimensions."""
+    s = scale
+    suite = []
+    suite.append(("uniform_small", random_uniform_csr(seed + 1, 256 * s, 256 * s, 8)))
+    suite.append(("uniform_mid", random_uniform_csr(seed + 2, 1024 * s, 1024 * s, 16)))
+    suite.append(("powerlaw", powerlaw_csr(seed + 3, 768 * s, 768 * s, 12)))
+    suite.append(("banded_narrow", banded_csr(seed + 4, 512 * s, 512 * s, 8)))
+    suite.append(("banded_wide", banded_csr(seed + 5, 512 * s, 512 * s, 48)))
+    suite.append(("block", block_sparse_csr(seed + 6, 512 * s, 512 * s, 32)))
+    suite.append(("skewed", skewed_rows_csr(seed + 7, 1024 * s, 1024 * s, 6)))
+    suite.append(("hypersparse", hypersparse_csr(seed + 8, 2048 * s, 2048 * s)))
+    return suite

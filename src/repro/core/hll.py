@@ -1,0 +1,163 @@
+"""HyperLogLog sketches for per-row SpGEMM output-size estimation (paper §3.1).
+
+Pure-jnp implementation; the Pallas TPU kernels in ``repro.kernels.hll``
+compute the same quantities with explicit VMEM tiling and are validated
+against these functions.
+
+Sketch layout: one sketch per row of B, ``m`` registers each (m = 32/64/128,
+power of two). Register values are small ints (<= 32 - log2(m) + 1); stored
+as int32 for arithmetic convenience (the cost model accounts 1 byte/register
+as in the paper).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .formats import CSR
+
+HASH_MULT = jnp.uint32(0x9E3779B9)
+
+
+def hash32(x: jax.Array, seed: int = 0) -> jax.Array:
+    """Murmur3 fmix32 finalizer over uint32 lanes — avalanching, vectorizable."""
+    h = x.astype(jnp.uint32) * HASH_MULT + jnp.uint32(seed)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def _rho(h: jax.Array, p: int) -> jax.Array:
+    """Leading-zero rank of the (32-p)-bit suffix, in [1, 32-p+1]."""
+    w = (h >> p).astype(jnp.int32)
+    # clz over the 32-bit container; top p bits of w are zero, so the rank
+    # within the (32-p)-bit field is clz - p (+1); works for w == 0 too.
+    return jax.lax.clz(w) - p + 1
+
+
+def _alpha(m: int) -> float:
+    return {16: 0.673, 32: 0.697, 64: 0.709}.get(m, 0.7213 / (1 + 1.079 / m))
+
+
+def row_ids_from_indptr(indptr: jax.Array, capacity: int) -> jax.Array:
+    """Row id of each nnz slot (padding slots get the last row id, masked later)."""
+    pos = jnp.arange(capacity, dtype=jnp.int32)
+    return jnp.searchsorted(indptr, pos, side="right").astype(jnp.int32) - 1
+
+
+@partial(jax.jit, static_argnames=("m_regs", "num_rows", "seed"))
+def build_sketches(indptr, indices, *, m_regs: int, num_rows: int,
+                   seed: int = 0) -> jax.Array:
+    """Sketches for every row of a CSR matrix: (num_rows, m_regs) int32."""
+    p = m_regs.bit_length() - 1
+    assert 1 << p == m_regs, "m_regs must be a power of two"
+    cap = indices.shape[0]
+    nnz_total = indptr[-1]
+    valid = jnp.arange(cap, dtype=jnp.int32) < nnz_total
+    h = hash32(indices)
+    reg = (h & jnp.uint32(m_regs - 1)).astype(jnp.int32)
+    rho = _rho(h, p)
+    row = row_ids_from_indptr(indptr, cap)
+    row = jnp.clip(row, 0, num_rows - 1)
+    seg = jnp.where(valid, row * m_regs + reg, 0)
+    val = jnp.where(valid, rho, 0)
+    regs = jax.ops.segment_max(val, seg, num_segments=num_rows * m_regs)
+    regs = jnp.maximum(regs, 0)  # empty segments come back as INT_MIN
+    return regs.reshape(num_rows, m_regs)
+
+
+def sketch_rows(b: CSR, m_regs: int, seed: int = 0) -> jax.Array:
+    return build_sketches(b.indptr, b.indices, m_regs=m_regs,
+                          num_rows=b.m, seed=seed)
+
+
+@partial(jax.jit, static_argnames=("num_rows_a",))
+def merge_sketches(a_indptr, a_indices, b_sketches, *, num_rows_a: int) -> jax.Array:
+    """Sketch of each C row = elementwise max of the B-row sketches selected
+    by the corresponding A row. Returns (num_rows_a, m_regs) int32."""
+    cap = a_indices.shape[0]
+    m_regs = b_sketches.shape[1]
+    nnz_total = a_indptr[-1]
+    valid = jnp.arange(cap, dtype=jnp.int32) < nnz_total
+    row = jnp.clip(row_ids_from_indptr(a_indptr, cap), 0, num_rows_a - 1)
+    k = jnp.clip(a_indices, 0, b_sketches.shape[0] - 1)
+    gathered = jnp.where(valid[:, None], b_sketches[k], 0)
+    seg = jnp.where(valid, row, 0)
+    merged = jax.ops.segment_max(gathered, seg, num_segments=num_rows_a)
+    return jnp.maximum(merged, 0)
+
+
+@partial(jax.jit, static_argnames=("clip_max",))
+def estimate_cardinality(sketches: jax.Array, clip_max: int | None = None) -> jax.Array:
+    """HLL estimate per sketch row with small-range correction. f32 output."""
+    m = sketches.shape[-1]
+    regs = sketches.astype(jnp.float32)
+    inv_sum = jnp.sum(jnp.exp2(-regs), axis=-1)
+    e_raw = _alpha(m) * m * m / inv_sum
+    v = jnp.sum(sketches == 0, axis=-1).astype(jnp.float32)
+    e_small = m * jnp.log(jnp.where(v > 0, m / jnp.maximum(v, 1e-9), 1.0))
+    e = jnp.where((e_raw <= 2.5 * m) & (v > 0), e_small, e_raw)
+    if clip_max is not None:
+        e = jnp.clip(e, 0.0, float(clip_max))
+    return e
+
+
+def estimate_row_nnz(a: CSR, b_sketches: jax.Array, n_cols_b: int) -> jax.Array:
+    """Estimated nnz of each row of C = A @ B."""
+    merged = merge_sketches(a.indptr, a.indices, b_sketches, num_rows_a=a.m)
+    return estimate_cardinality(merged, clip_max=n_cols_b)
+
+
+# ---------------------------------------------------------------------------
+# Cohen's estimator (paper §5.3 comparison): exponential min-rank sketches.
+# k independent Exp(1) ranks per column of B; a set's min-rank vector
+# estimates its cardinality as (k - 1) / sum(min_ranks).
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k", "num_rows", "n_cols", "seed"))
+def cohen_build(indptr, indices, *, k: int, num_rows: int, n_cols: int,
+                seed: int = 0) -> jax.Array:
+    """Per-row min-rank sketches: (num_rows, k) f32."""
+    cap = indices.shape[0]
+    nnz_total = indptr[-1]
+    valid = jnp.arange(cap, dtype=jnp.int32) < nnz_total
+    row = jnp.clip(row_ids_from_indptr(indptr, cap), 0, num_rows - 1)
+    # Exp(1) rank of column j for replica r, derived from a counter hash.
+    j = indices.astype(jnp.uint32)
+    ranks = []
+    for r in range(k):
+        u = hash32(j, seed=seed * 131 + r + 1).astype(jnp.float32) / 4294967296.0
+        ranks.append(-jnp.log(jnp.clip(u, 1e-12, 1.0)))
+    ranks = jnp.stack(ranks, axis=-1)  # (cap, k)
+    ranks = jnp.where(valid[:, None], ranks, jnp.inf)
+    seg = jnp.where(valid, row, 0)
+    mins = jax.ops.segment_min(ranks, seg, num_segments=num_rows)
+    return mins
+
+
+@partial(jax.jit, static_argnames=("num_rows_a",))
+def cohen_merge(a_indptr, a_indices, b_mins, *, num_rows_a: int) -> jax.Array:
+    cap = a_indices.shape[0]
+    nnz_total = a_indptr[-1]
+    valid = jnp.arange(cap, dtype=jnp.int32) < nnz_total
+    row = jnp.clip(row_ids_from_indptr(a_indptr, cap), 0, num_rows_a - 1)
+    k = jnp.clip(a_indices, 0, b_mins.shape[0] - 1)
+    gathered = jnp.where(valid[:, None], b_mins[k], jnp.inf)
+    seg = jnp.where(valid, row, 0)
+    return jax.ops.segment_min(gathered, seg, num_segments=num_rows_a)
+
+
+def cohen_estimate(mins: jax.Array, clip_max: int | None = None) -> jax.Array:
+    k = mins.shape[-1]
+    finite = jnp.isfinite(mins)
+    s = jnp.sum(jnp.where(finite, mins, 0.0), axis=-1)
+    any_f = jnp.any(finite, axis=-1)
+    e = jnp.where(any_f & (s > 0), (k - 1) / jnp.maximum(s, 1e-20), 0.0)
+    if clip_max is not None:
+        e = jnp.clip(e, 0.0, float(clip_max))
+    return e

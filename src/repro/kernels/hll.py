@@ -1,0 +1,137 @@
+"""Pallas TPU kernels for HyperLogLog sketch construction and merging.
+
+TPU adaptation of the paper's atomicMax register updates (§3.1): a scatter-max
+of ``rho`` values into ``m`` registers becomes a one-hot masked max-reduction
+executed on the VPU — `regs = max_e onehot(reg_e) * rho_e` — with the ELL
+nonzero stream tiled through VMEM by BlockSpec.
+
+Sketch merging uses the canonical TPU gather idiom: a scalar-prefetched index
+array drives the BlockSpec ``index_map`` so each grid step DMAs exactly the
+B-row sketch it needs from HBM into VMEM, accumulating an elementwise max.
+The final grid step fuses the HLL estimate (harmonic mean + small-range
+correction), so estimates leave the kernel without a second pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.hll import _alpha
+
+# Block shapes: rows-per-block x ELL-chunk. The (8, 128) granularity matches
+# the TPU vector lane/sublane tiling; m registers (<=128) sit in the minor
+# dimension so the one-hot reduction stays lane-aligned.
+ROW_BLOCK = 8
+ELL_BLOCK = 128
+
+
+def _hash32_u32(x):
+    h = x.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def _sketch_kernel(cols_ref, out_ref, *, m_regs: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    p = m_regs.bit_length() - 1
+    cols = cols_ref[...]                            # (ROW_BLOCK, ELL_BLOCK)
+    valid = cols >= 0
+    h = _hash32_u32(jnp.maximum(cols, 0))
+    reg = (h & jnp.uint32(m_regs - 1)).astype(jnp.int32)
+    w = (h >> p).astype(jnp.int32)
+    rho = jax.lax.clz(w) - p + 1
+    rho = jnp.where(valid, rho, 0)
+    onehot = reg[:, :, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, m_regs), 2)
+    contrib = jnp.max(jnp.where(onehot, rho[:, :, None], 0), axis=1)
+    out_ref[...] = jnp.maximum(out_ref[...], contrib)
+
+
+@functools.partial(jax.jit, static_argnames=("m_regs", "interpret"))
+def hll_sketch(ell_cols: jax.Array, *, m_regs: int,
+               interpret: bool = False) -> jax.Array:
+    """Build per-row HLL sketches from an ELL index block.
+
+    ell_cols: (R, E) int32, pad = -1; R % ROW_BLOCK == 0, E % ELL_BLOCK == 0.
+    Returns (R, m_regs) int32 registers.
+    """
+    r, e = ell_cols.shape
+    assert r % ROW_BLOCK == 0 and e % ELL_BLOCK == 0, (r, e)
+    grid = (r // ROW_BLOCK, e // ELL_BLOCK)
+    return pl.pallas_call(
+        functools.partial(_sketch_kernel, m_regs=m_regs),
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROW_BLOCK, ELL_BLOCK), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((ROW_BLOCK, m_regs), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, m_regs), jnp.int32),
+        interpret=interpret,
+    )(ell_cols)
+
+
+def _merge_kernel(a_ell_ref, sk_ref, merged_ref, est_ref, *, m_regs: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        merged_ref[...] = jnp.zeros_like(merged_ref)
+
+    merged_ref[...] = jnp.maximum(merged_ref[...], sk_ref[...])
+
+    @pl.when(k == pl.num_programs(1) - 1)
+    def _finalize():
+        regs = merged_ref[...].astype(jnp.float32)       # (1, m)
+        inv_sum = jnp.sum(jnp.exp2(-regs))
+        e_raw = _alpha(m_regs) * m_regs * m_regs / inv_sum
+        v = jnp.sum(regs == 0).astype(jnp.float32)
+        e_small = m_regs * jnp.log(
+            jnp.where(v > 0, m_regs / jnp.maximum(v, 1e-9), 1.0))
+        est = jnp.where((e_raw <= 2.5 * m_regs) & (v > 0), e_small, e_raw)
+        est_ref[0, 0] = est
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hll_merge(a_ell: jax.Array, sketches: jax.Array,
+              *, interpret: bool = False):
+    """Merge B-row sketches per A row and estimate cardinalities.
+
+    a_ell:    (RA, K) int32 B-row ids; pad entries must index the all-zero
+              sentinel sketch row (sketches.shape[0] - 1).
+    sketches: (NB1, m) int32, last row all zeros.
+    Returns (merged (RA, m) int32, est (RA,) f32).
+    """
+    ra, k = a_ell.shape
+    m_regs = sketches.shape[1]
+    grid = (ra, k)
+    merged, est = pl.pallas_call(
+        functools.partial(_merge_kernel, m_regs=m_regs),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, m_regs), lambda i, k, a_ell: (a_ell[i, k], 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, m_regs), lambda i, k, a_ell: (i, 0)),
+                pl.BlockSpec((1, 1), lambda i, k, a_ell: (i, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((ra, m_regs), jnp.int32),
+            jax.ShapeDtypeStruct((ra, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a_ell, sketches)
+    return merged, est[:, 0]

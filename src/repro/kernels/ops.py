@@ -1,0 +1,219 @@
+"""jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) kernels execute with ``interpret=True``, which runs
+the kernel body as traced JAX ops — bit-accurate against the TPU lowering
+for these integer/float ops. On TPU backends the same calls compile via
+Mosaic. ``REPRO_FORCE_INTERPRET=0/1`` overrides the auto-detection.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import CSR, PAD_COL, csr_rows_to_ell, pad_axis
+from . import hll as khll
+from . import spgemm_dense as kdense
+
+ROW_BLOCK = khll.ROW_BLOCK
+ELL_BLOCK = khll.ELL_BLOCK
+F_CHUNK = kdense.F_CHUNK
+
+
+def use_interpret() -> bool:
+    env = os.environ.get("REPRO_FORCE_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() == "cpu"
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# HLL ops
+# ---------------------------------------------------------------------------
+
+def _use_pallas_path() -> bool:
+    return (not use_interpret()
+            or os.environ.get("REPRO_CPU_NUMERIC") == "pallas")
+
+
+def build_sketches_op(b: CSR, m_regs: int) -> jax.Array:
+    """Per-row sketches of B via the Pallas construction kernel (TPU) or the
+    segment-max jnp implementation (CPU executor).
+
+    Returns (b.m + 1, m_regs) — the extra all-zero sentinel row is the merge
+    kernel's padding target.
+    """
+    if not _use_pallas_path():
+        from repro.core import hll as chll
+        regs = chll.build_sketches(b.indptr, b.indices, m_regs=m_regs,
+                                   num_rows=b.m)
+        return jnp.concatenate([regs, jnp.zeros((1, m_regs), jnp.int32)],
+                               axis=0)
+    max_len = int(jnp.max(b.indptr[1:] - b.indptr[:-1]))
+    e = max(_round_up(max(max_len, 1), ELL_BLOCK), ELL_BLOCK)
+    r = max(_round_up(b.m, ROW_BLOCK), ROW_BLOCK)
+    ell, _ = csr_rows_to_ell(b.indptr, b.indices, None, num_rows=b.m,
+                             ell_width=e, pad_index=-1)
+    ell = pad_axis(ell, r, axis=0, value=-1)
+    regs = khll.hll_sketch(ell, m_regs=m_regs, interpret=use_interpret())
+    regs = regs[: b.m]
+    return jnp.concatenate([regs, jnp.zeros((1, m_regs), jnp.int32)], axis=0)
+
+
+def merge_estimate_op(a: CSR, sketches_with_sentinel: jax.Array,
+                      clip_max: int | None = None):
+    """Merged C-row sketches + estimates (Pallas on TPU, jnp on CPU)."""
+    if not _use_pallas_path():
+        from repro.core import hll as chll
+        merged = chll.merge_sketches(a.indptr, a.indices,
+                                     sketches_with_sentinel[:-1],
+                                     num_rows_a=a.m)
+        est = chll.estimate_cardinality(merged, clip_max=clip_max)
+        return merged, est
+    nb1 = sketches_with_sentinel.shape[0]
+    max_len = int(jnp.max(a.indptr[1:] - a.indptr[:-1]))
+    k = max(max_len, 1)
+    ell, _ = csr_rows_to_ell(a.indptr, a.indices, None, num_rows=a.m,
+                             ell_width=k, pad_index=nb1 - 1)
+    # clamp any stray index (safety) to the sentinel row
+    ell = jnp.where((ell < 0) | (ell >= nb1), nb1 - 1, ell)
+    merged, est = khll.hll_merge(ell, sketches_with_sentinel,
+                                 interpret=use_interpret())
+    if clip_max is not None:
+        est = jnp.clip(est, 0.0, float(clip_max))
+    return merged, est
+
+
+# ---------------------------------------------------------------------------
+# Dense-accumulator bin op + window -> CSR-slab extraction
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def extract_window_rows(acc, cnt, row_lo, *, cap: int):
+    """Compact dense windows into per-row CSR slabs of width ``cap``.
+
+    Presence comes from the product-count accumulator (cnt > 0), preserving
+    structural zeros exactly as the paper's dense bitmap does.
+    Returns (cols (R, cap) int32 global indices padded with PAD_COL,
+             vals (R, cap), nnz (R,) int32). Rows with nnz > cap overflowed.
+    """
+    w = acc.shape[1]
+    pres = cnt > 0
+    big = jnp.int32(2**30)
+    local = jax.lax.broadcasted_iota(jnp.int32, acc.shape, 1)
+    key = jnp.where(pres, local, big)
+    key_s, val_s = jax.lax.sort((key, acc), dimension=1, num_keys=1)
+    nnz = jnp.sum(pres, axis=1).astype(jnp.int32)
+    take = min(cap, w)
+    cols = key_s[:, :take]
+    vals = val_s[:, :take]
+    slot = jax.lax.broadcasted_iota(jnp.int32, cols.shape, 1)
+    ok = (slot < nnz[:, None]) & (cols < big)
+    cols = jnp.where(ok, cols + row_lo, PAD_COL)
+    vals = jnp.where(ok, vals, 0)
+    if take < cap:
+        cols = pad_axis(cols, cap, axis=1, value=int(PAD_COL))
+        vals = pad_axis(vals, cap, axis=1, value=0)
+    return cols, vals, nnz
+
+
+def _pow2_at_least(x: int, floor: int = 64) -> int:
+    v = floor
+    while v < x:
+        v *= 2
+    return v
+
+
+@functools.partial(jax.jit, static_argnames=("window", "col_tiles", "p_cap"))
+def _dense_bin_xla(a_rows, a_vals, a_starts, a_lens, row_lo, b_cols, b_vals,
+                   *, window: int, col_tiles: int, p_cap: int):
+    """Vectorized XLA executor for a dense bin — identical semantics to the
+    Pallas kernel (same binning/window/capacity), used on CPU where
+    interpret-mode grids are too slow for benchmark volume. O(P) expansion
+    + scatter-add, the same product enumeration as ``core.esc.expand``."""
+    r, e = a_rows.shape
+    w = window * col_tiles
+    lens_flat = a_lens.reshape(-1).astype(jnp.int32)        # (R*E,)
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.cumsum(lens_flat).astype(jnp.int32)])
+    total = offs[-1]
+    p = jnp.arange(p_cap, dtype=jnp.int32)
+    j = jnp.clip(jnp.searchsorted(offs, p, side="right").astype(jnp.int32)
+                 - 1, 0, r * e - 1)
+    t = p - offs[j]
+    valid = p < total
+    row = j // e
+    bpos = jnp.clip(a_starts.reshape(-1)[j] + t, 0, b_cols.shape[0] - 1)
+    col = b_cols[bpos]
+    val = a_vals.reshape(-1)[j] * b_vals[bpos]
+    local = col - row_lo[row, 0]
+    ok = valid & (local >= 0) & (local < w) & (col >= 0)
+    rr = jnp.where(ok, row, r)
+    cc = jnp.where(ok, local, 0)
+    acc = jnp.zeros((r + 1, w), b_vals.dtype).at[rr, cc].add(
+        jnp.where(ok, val, 0))[:r]
+    cnt = jnp.zeros((r + 1, w), jnp.float32).at[rr, cc].add(
+        jnp.where(ok, 1.0, 0.0))[:r]
+    return acc, cnt
+
+
+def dense_bin_op(a_rows, a_vals, a_starts, a_lens, row_lo, b_cols_pad,
+                 b_vals_pad, *, window: int, col_tiles: int = 1,
+                 cap: int | None = None):
+    """Run one bin through the dense-accumulator kernel and compact it.
+
+    Returns (cols (R, cap), vals (R, cap), nnz (R,)). On TPU this is the
+    Pallas kernel; on CPU the vectorized XLA executor with identical
+    semantics runs instead (``REPRO_CPU_NUMERIC=pallas`` forces the
+    interpret-mode kernel, as the per-kernel tests do).
+    """
+    use_pallas = (not use_interpret()
+                  or os.environ.get("REPRO_CPU_NUMERIC") == "pallas")
+    if use_pallas:
+        acc, cnt = kdense.spgemm_dense_bin(
+            a_rows, a_vals, a_starts, a_lens, row_lo, b_cols_pad, b_vals_pad,
+            window=window, col_tiles=col_tiles, interpret=use_interpret())
+    else:
+        p_cap = _pow2_at_least(int(jnp.sum(a_lens)) + 1)
+        acc, cnt = _dense_bin_xla(
+            a_rows, a_vals, a_starts, a_lens, row_lo, b_cols_pad, b_vals_pad,
+            window=window, col_tiles=col_tiles, p_cap=p_cap)
+    if cap is None:
+        cap = window * col_tiles
+    return extract_window_rows(acc, cnt, row_lo, cap=cap)
+
+
+def prep_bin_inputs(a: CSR, b: CSR, rows: np.ndarray, ell_width: int):
+    """Host-side: gather the A rows of one bin into ELL blocks plus
+    pregathered B-row starts/lengths (keeps b_indptr out of kernel SMEM)."""
+    indptr = np.asarray(a.indptr)
+    indices = np.asarray(a.indices)
+    values = np.asarray(a.values)
+    b_indptr = np.asarray(b.indptr)
+    r = len(rows)
+    a_rows = np.full((r, ell_width), -1, np.int32)
+    a_vals = np.zeros((r, ell_width), values.dtype)
+    for i, row in enumerate(rows):
+        s, e = int(indptr[row]), int(indptr[row + 1])
+        ln = min(e - s, ell_width)
+        a_rows[i, :ln] = indices[s : s + ln]
+        a_vals[i, :ln] = values[s : s + ln]
+    k = np.maximum(a_rows, 0)
+    a_starts = np.where(a_rows >= 0, b_indptr[k], 0).astype(np.int32)
+    a_lens = np.where(a_rows >= 0, b_indptr[k + 1] - b_indptr[k], 0).astype(np.int32)
+    return (jnp.asarray(a_rows), jnp.asarray(a_vals), jnp.asarray(a_starts),
+            jnp.asarray(a_lens))
+
+
+def pad_b_flat(b: CSR):
+    """Flat B arrays padded by F_CHUNK so chunked DMA never over-reads."""
+    cols = pad_axis(b.indices, b.capacity + F_CHUNK, axis=0, value=-1)
+    vals = pad_axis(b.values, b.capacity + F_CHUNK, axis=0, value=0)
+    return cols, vals

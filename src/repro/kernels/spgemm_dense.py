@@ -1,0 +1,226 @@
+"""Binned dense-accumulator SpGEMM numeric kernel (Pallas TPU).
+
+TPU adaptation of the paper's accumulation kernels (§3.3):
+
+* GPU hash/dense accumulators update scratchpad slots with atomics. TPU has
+  no fine-grained atomics, so scatter-add of a chunk of ``F`` intermediate
+  products into a width-``W`` dense window is reformulated as a matmul on
+  the MXU: ``acc += vals(1,F) @ onehot(F,W)``. Presence (the paper's dense
+  bitmap) accumulates the same way from the validity mask, which preserves
+  the *structural* nnz semantics the symbolic pass would have produced.
+
+* The enhanced hash accumulator's shared/global split (hot index structure
+  on-chip, cold values off-chip) maps to the VMEM/HBM hierarchy: the active
+  accumulator window and the B-row chunk live in VMEM; the B nonzero stream
+  and the output slab stay in HBM and are moved by explicit async DMA.
+
+* Long rows (window > VMEM budget) run the same kernel with a column-tile
+  grid dimension: each tile re-streams the row's B rows and accumulates only
+  columns in its window — trading HBM reads for bounded VMEM, the same
+  trade the paper's global-memory fallback makes (its §5.4 ``torso1``
+  pathology corresponds exactly to a high re-stream factor here).
+
+Grid: ``(rows, col_tiles)``; col_tiles == 1 for windowed (binned) rows.
+Each program owns one ``(1, W)`` output block: no cross-program races, which
+is what the per-row binning guarantees on GPU too.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# B-row nonzeros are streamed through VMEM in chunks of F_CHUNK; 128 matches
+# the MXU contraction dimension.
+F_CHUNK = 128
+
+
+def _dense_kernel(a_rows_ref, a_vals_ref, a_starts_ref, a_lens_ref,
+                  row_lo_ref, b_cols_hbm, b_vals_hbm,
+                  acc_ref, cnt_ref,
+                  bcol_scratch, bval_scratch, sem_c, sem_v,
+                  *, window: int, f_chunk: int):
+    t = pl.program_id(1)
+    lo = row_lo_ref[0, 0] + t * window
+
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    e_total = a_rows_ref.shape[1]
+    nnz_pad = b_cols_hbm.shape[0]
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (f_chunk, window), 1)
+
+    def e_body(e, _):
+        k = a_rows_ref[0, e]
+        av = a_vals_ref[0, e]
+        active = k >= 0
+        start = a_starts_ref[0, e]
+        length = jnp.where(active, a_lens_ref[0, e], 0)
+        n_chunks = pl.cdiv(length, f_chunk)
+
+        def c_body(c, _):
+            src = jnp.clip(start + c * f_chunk, 0, nnz_pad - f_chunk)
+            cp_c = pltpu.make_async_copy(
+                b_cols_hbm.at[pl.ds(src, f_chunk)], bcol_scratch, sem_c)
+            cp_v = pltpu.make_async_copy(
+                b_vals_hbm.at[pl.ds(src, f_chunk)], bval_scratch, sem_v)
+            cp_c.start()
+            cp_v.start()
+            cp_c.wait()
+            cp_v.wait()
+            # chunk may start below `start` after the clip; recompute offsets
+            pos = jax.lax.broadcasted_iota(jnp.int32, (1, f_chunk), 1) + src
+            in_row = (pos >= start) & (pos < start + length)
+            cols = bcol_scratch[...].reshape(1, f_chunk)
+            cols_local = cols - lo
+            ok = in_row & (cols_local >= 0) & (cols_local < window)
+            onehot = (jnp.where(ok, cols_local, -1).reshape(f_chunk, 1)
+                      == col_iota)
+            vals = jnp.where(ok, av * bval_scratch[...].reshape(1, f_chunk), 0)
+            acc_ref[...] += jax.lax.dot_general(
+                vals, onehot.astype(vals.dtype),
+                dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=acc_ref.dtype)
+            ones = jnp.where(ok, 1.0, 0.0).astype(jnp.float32)
+            cnt_ref[...] += jax.lax.dot_general(
+                ones, onehot.astype(jnp.float32),
+                dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            return 0
+
+        jax.lax.fori_loop(0, n_chunks, c_body, 0)
+        return 0
+
+    jax.lax.fori_loop(0, e_total, e_body, 0)
+
+
+def _count_kernel(a_rows_ref, a_starts_ref, a_lens_ref, row_lo_ref,
+                  b_cols_hbm, cnt_ref, bcol_scratch, sem_c,
+                  *, window: int, f_chunk: int):
+    """Symbolic (count-only) variant: no value DMA, no value matmul — the
+    TPU analogue of the paper's cheaper symbolic accumulation (§2.3:
+    'numerical values are discarded')."""
+    t = pl.program_id(1)
+    lo = row_lo_ref[0, 0] + t * window
+    cnt_ref[...] = jnp.zeros_like(cnt_ref)
+    e_total = a_rows_ref.shape[1]
+    nnz_pad = b_cols_hbm.shape[0]
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (f_chunk, window), 1)
+
+    def e_body(e, _):
+        k = a_rows_ref[0, e]
+        active = k >= 0
+        start = a_starts_ref[0, e]
+        length = jnp.where(active, a_lens_ref[0, e], 0)
+        n_chunks = pl.cdiv(length, f_chunk)
+
+        def c_body(c, _):
+            src = jnp.clip(start + c * f_chunk, 0, nnz_pad - f_chunk)
+            cp_c = pltpu.make_async_copy(
+                b_cols_hbm.at[pl.ds(src, f_chunk)], bcol_scratch, sem_c)
+            cp_c.start()
+            cp_c.wait()
+            pos = jax.lax.broadcasted_iota(jnp.int32, (1, f_chunk), 1) + src
+            in_row = (pos >= start) & (pos < start + length)
+            cols = bcol_scratch[...].reshape(1, f_chunk)
+            cols_local = cols - lo
+            ok = in_row & (cols_local >= 0) & (cols_local < window)
+            onehot = (jnp.where(ok, cols_local, -1).reshape(f_chunk, 1)
+                      == col_iota)
+            ones = jnp.where(ok, 1.0, 0.0).astype(jnp.float32)
+            cnt_ref[...] += jax.lax.dot_general(
+                ones, onehot.astype(jnp.float32),
+                dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            return 0
+
+        jax.lax.fori_loop(0, n_chunks, c_body, 0)
+        return 0
+
+    jax.lax.fori_loop(0, e_total, e_body, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "col_tiles", "interpret"))
+def spgemm_count_bin(a_rows, a_starts, a_lens, row_lo, b_cols,
+                     *, window: int, col_tiles: int = 1,
+                     interpret: bool = False):
+    """Count-only (symbolic) pass over one bin: returns counts
+    (R, col_tiles*window) f32; exact per-row nnz = sum(counts > 0)."""
+    r, e = a_rows.shape
+    out_w = col_tiles * window
+    kernel = functools.partial(_count_kernel, window=window, f_chunk=F_CHUNK)
+    return pl.pallas_call(
+        kernel,
+        grid=(r, col_tiles),
+        in_specs=[
+            pl.BlockSpec((1, e), lambda i, t: (i, 0)),
+            pl.BlockSpec((1, e), lambda i, t: (i, 0)),
+            pl.BlockSpec((1, e), lambda i, t: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, t: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, window), lambda i, t: (i, t)),
+        out_shape=jax.ShapeDtypeStruct((r, out_w), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((F_CHUNK,), jnp.int32),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(a_rows, a_starts, a_lens, row_lo, b_cols)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "col_tiles", "interpret"))
+def spgemm_dense_bin(a_rows, a_vals, a_starts, a_lens, row_lo,
+                     b_cols, b_vals, *, window: int, col_tiles: int = 1,
+                     interpret: bool = False):
+    """Run the dense-accumulator kernel over one bin of output rows.
+
+    a_rows:   (R, E) int32 — B-row ids per output row (pad = -1)
+    a_vals:   (R, E) float — matching A values
+    a_starts: (R, E) int32 — b_indptr[k] pregathered (pad = 0)
+    a_lens:   (R, E) int32 — B-row lengths (pad = 0)
+    row_lo:   (R, 1) int32 — dense-window base column per row
+    b_cols:   (nnzB_pad,) int32 — flat B column indices (HBM), padded by
+              >= F_CHUNK
+    b_vals:   (nnzB_pad,) float
+    Returns (acc (R, col_tiles*window) float, counts (R, col_tiles*window)
+    f32); presence = counts > 0.
+    """
+    r, e = a_rows.shape
+    out_w = col_tiles * window
+    dtype = b_vals.dtype
+    kernel = functools.partial(_dense_kernel, window=window, f_chunk=F_CHUNK)
+    acc, cnt = pl.pallas_call(
+        kernel,
+        grid=(r, col_tiles),
+        in_specs=[
+            pl.BlockSpec((1, e), lambda i, t: (i, 0)),
+            pl.BlockSpec((1, e), lambda i, t: (i, 0)),
+            pl.BlockSpec((1, e), lambda i, t: (i, 0)),
+            pl.BlockSpec((1, e), lambda i, t: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, t: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, window), lambda i, t: (i, t)),
+            pl.BlockSpec((1, window), lambda i, t: (i, t)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, out_w), dtype),
+            jax.ShapeDtypeStruct((r, out_w), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((F_CHUNK,), jnp.int32),
+            pltpu.VMEM((F_CHUNK,), dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(a_rows, a_vals, a_starts, a_lens, row_lo, b_cols, b_vals)
+    return acc, cnt

@@ -1,0 +1,619 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any jax import — jax locks the
+# device count at first init (see MULTI-POD DRY-RUN instructions).
+
+_DOC = """Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers,
+compiles, and fits — and extract the roofline terms (deliverables e + g).
+
+Per cell this compiles several artifacts:
+
+* ``full``   — the real step (chunked attention/CE, scan-over-layers) with
+  explicit in/out shardings: ``memory_analysis()`` proves it fits, its HLO
+  provides the collective schedule, and compiling it at all is the
+  multi-pod proof.
+* ``body``   — one layer-period (forward, or fwd+bwd for train) compiled
+  standalone with the same shardings but loop-free internals. XLA's
+  HloCostAnalysis counts a while body once, so scanned-layer FLOPs/bytes
+  are reconstructed as ``n_scan x body + outer`` from these artifacts.
+* ``outer``  — embedding + unembed + CE (+grad) at full length (train),
+* ``opt``    — the AdamW update (train).
+
+Roofline terms use TPU v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (see EXPERIMENTS.md §Roofline for the methodology notes).
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro import configs
+from repro.configs.shapes import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import ShardingPolicy
+from repro.models import attention as attn_mod
+from repro.models import lm
+from repro.models import mamba as mamba_mod
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_init
+from repro.optim.adamw import AdamWState, adamw_update
+
+HW = {"flops_bf16": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
+HBM_PER_CHIP = 16e9  # v5e
+
+# per-arch train-cell gradient-accumulation microbatch (fits-driven)
+TRAIN_MICROBATCH = {
+    "qwen2-vl-72b": 32,
+    "jamba-v0.1-52b": 32,
+    "llama4-scout-17b-a16e": 32,
+    "falcon-mamba-7b": 32,
+}
+DEFAULT_TRAIN_MICROBATCH = 64
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],{}\s]*?\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+class _cost_mode:
+    """Context manager: trace with loop-free internals for cost artifacts."""
+
+    def __enter__(self):
+        attn_mod.set_unchunked_for_cost(True)
+        mamba_mod.set_unchunked_for_cost(True)
+
+    def __exit__(self, *a):
+        attn_mod.set_unchunked_for_cost(False)
+        mamba_mod.set_unchunked_for_cost(False)
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum result-shape bytes of every collective in the optimized HLO."""
+    out: Dict[str, Dict[str, float]] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        result, op = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(result):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        rec = out.setdefault(op, {"count": 0, "bytes": 0.0})
+        rec["count"] += 1
+        rec["bytes"] += nbytes
+    return out
+
+
+def _artifact(fn, args, in_sh, out_sh, mesh, *, cost_mode=False,
+              want_text=True) -> Dict[str, Any]:
+    t0 = time.time()
+    ctx = _cost_mode() if cost_mode else _nullcontext()
+    with ctx:
+        with mesh:
+            jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jfn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    ca = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    rec = {
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "mem": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        },
+    }
+    if want_text:
+        rec["collectives"] = collective_stats(compiled.as_text())
+    return rec
+
+
+class _nullcontext:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+def _strip_layers(spec: PartitionSpec) -> PartitionSpec:
+    parts = tuple(spec)
+    if parts and parts[0] == "layers":
+        return PartitionSpec(*parts[1:])
+    return PartitionSpec(*parts)
+
+
+def _index_tree(tree, i=0):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), tree)
+
+
+def _combine(total: Dict, rec: Dict, mult: float):
+    total["flops"] += rec["flops"] * mult
+    total["bytes"] += rec["bytes"] * mult
+    for op, s in rec.get("collectives", {}).items():
+        t = total["collectives"].setdefault(op, {"count": 0, "bytes": 0.0})
+        t["count"] += s["count"] * mult
+        t["bytes"] += s["bytes"] * mult
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+def serve_param_shapes(cfg: ModelConfig):
+    """Serving uses bf16 weights."""
+    shapes, specs = lm.abstract_params(cfg)
+    shapes = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+        shapes)
+    return shapes, specs
+
+
+def _block_body_args(cfg, policy, shapes, specs, batch, seq, dtype,
+                     caches_shapes=None, caches_sh=None):
+    """Shapes/shardings for one period-body artifact."""
+    plan = tf.StackPlan.from_config(cfg)
+    bp_shapes = [_index_tree(b) for b in shapes["blocks"]]
+    bp_sh = [jax.tree_util.tree_map(
+        lambda sp: NamedSharding(policy.mesh,
+                                 policy.param_spec(
+                                     (1,), PartitionSpec())) if False else sp,
+        b) for b in shapes["blocks"]]
+    # shardings: strip the leading 'layers' axis from the stacked specs
+    bp_sh = []
+    for b_shape, b_spec in zip(shapes["blocks"], specs["blocks"]):
+        def one(sds, spec):
+            inner = _strip_layers(spec)
+            return NamedSharding(
+                policy.mesh,
+                policy.param_spec(sds.shape[1:], inner))
+        bp_sh.append(jax.tree_util.tree_map(
+            one, b_shape, b_spec,
+            is_leaf=lambda x: isinstance(x, PartitionSpec)))
+    x_sds = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), dtype)
+    x_sh = NamedSharding(policy.mesh,
+                         PartitionSpec(policy.batch_spec(batch)[0], None,
+                                       None))
+    out = {"plan": plan, "bp_shapes": bp_shapes, "bp_sh": bp_sh,
+           "x_sds": x_sds, "x_sh": x_sh}
+    if caches_shapes is not None:
+        out["bc_shapes"] = [_index_tree(c) for c in caches_shapes["blocks"]]
+        out["bc_sh"] = [jax.tree_util.tree_map(
+            lambda ns: NamedSharding(
+                policy.mesh, PartitionSpec(*tuple(ns.spec)[1:])), c)
+            for c in caches_sh["blocks"]]
+    return out
+
+
+def build_train_cell(cfg: ModelConfig, shape, policy: ShardingPolicy,
+                     remat: str, mesh, microbatch: int = 0) -> Dict[str, Any]:
+    b_, l_ = shape.global_batch, shape.seq_len
+    dtype = cfg.compute_dtype
+    shapes, specs = lm.abstract_params(cfg)
+    psh = policy.param_shardings(shapes, specs)
+    opt_shapes = jax.eval_shape(adamw_init, shapes)
+    opt_sh = AdamWState(step=NamedSharding(mesh, PartitionSpec()),
+                        mu=psh, nu=psh)
+    opt_cfg = AdamWConfig()
+
+    if cfg.is_encoder_decoder:
+        dec_len = min(448, max(l_ // 8, 64))
+        batch_sds = {
+            "audio_embeds": jax.ShapeDtypeStruct((b_, l_, cfg.d_model),
+                                                 dtype),
+            "tokens": jax.ShapeDtypeStruct((b_, dec_len + 1), jnp.int32)}
+        batch_sh = {"audio_embeds": policy.data_sharding(b_, 3),
+                    "tokens": policy.data_sharding(b_, 2)}
+        step = lm.make_encdec_train_step(cfg, opt_cfg,
+                                         shard_fn=policy.shard_fn)
+    else:
+        batch_sds = {"tokens": jax.ShapeDtypeStruct((b_, l_ + 1), jnp.int32)}
+        batch_sh = {"tokens": policy.data_sharding(b_, 2)}
+        step = lm.make_train_step(cfg, opt_cfg, remat=remat,
+                                  microbatch=microbatch,
+                                  shard_fn=policy.shard_fn)
+
+    result: Dict[str, Any] = {"artifacts": {}}
+    result["artifacts"]["full"] = _artifact(
+        step, (shapes, opt_shapes, batch_sds), (psh, opt_sh, batch_sh),
+        None, mesh)
+
+    total = {"flops": 0.0, "bytes": 0.0, "collectives": {}}
+    if cfg.is_encoder_decoder:
+        # no scan: the full program is loop-free apart from attention chunks;
+        # recompile it in cost mode for exact counts.
+        cost = _artifact(step, (shapes, opt_shapes, batch_sds),
+                         (psh, opt_sh, batch_sh), None, mesh, cost_mode=True)
+        result["artifacts"]["cost_full"] = cost
+        _combine(total, cost, 1.0)
+        result["totals"] = total
+        return result
+
+    # --- body (one period, fwd+bwd via grad of a scalar) ---
+    bb = _block_body_args(cfg, policy, shapes, specs, b_, l_, dtype)
+    plan = bb["plan"]
+    kinds = plan.period_kinds
+    positions = None
+
+    def body_grad(bp, x):
+        def run(bp, x):
+            h = x
+            for j, kind in enumerate(kinds):
+                h, _, _ = tf.apply_layer(
+                    bp[j], h, cfg, kind,
+                    positions=jnp.broadcast_to(
+                        jnp.arange(x.shape[1], dtype=jnp.int32),
+                        (x.shape[0], x.shape[1])),
+                    mode="train", shard_fn=policy.shard_fn)
+            return jnp.sum(h.astype(jnp.float32))
+        # mirror the scan-body remat policy so recompute FLOPs are counted
+        if remat == "full":
+            run = jax.checkpoint(run, prevent_cse=False)
+        elif remat == "dots":
+            run = jax.checkpoint(
+                run, prevent_cse=False,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+        l, grads = jax.value_and_grad(run, argnums=(0, 1))(bp, x)
+        return l, grads
+
+    body = _artifact(body_grad, (bb["bp_shapes"], bb["x_sds"]),
+                     (bb["bp_sh"], bb["x_sh"]), None, mesh, cost_mode=True)
+    result["artifacts"]["body_grad"] = body
+    _combine(total, body, plan.n_scan)
+
+    # --- outer: embed + unembed + CE grad at full length ---
+    outer_keys = ["embed", "final_norm"]
+    if not cfg.tie_embeddings:
+        outer_keys.append("lm_head")
+    op_sds = {k: shapes[k] for k in outer_keys}
+    op_sh = {k: psh[k] for k in outer_keys}
+    tok_sds = jax.ShapeDtypeStruct((b_, l_), jnp.int32)
+    lab_sds = jax.ShapeDtypeStruct((b_, l_), jnp.int32)
+    tok_sh = policy.data_sharding(b_, 2)
+
+    def outer_loss_grad(op, tokens, labels):
+        def run(op):
+            x = op["embed"].astype(dtype)[tokens] * jnp.asarray(
+                cfg.d_model ** 0.5, dtype)
+            x = policy.shard_fn("activations", x)
+            from repro.models.layers import rms_norm
+            x = rms_norm(x, op["final_norm"] - 1.0, cfg.norm_eps)
+            return lm.chunked_cross_entropy(op, x, labels, cfg,
+                                            chunk=l_,
+                                            shard_fn=policy.shard_fn)
+        l, g = jax.value_and_grad(run)(op)
+        return l, g
+
+    outer = _artifact(outer_loss_grad, (op_sds, tok_sds, lab_sds),
+                      (op_sh, tok_sh, tok_sh), None, mesh,
+                      cost_mode=True)
+    result["artifacts"]["outer_grad"] = outer
+    _combine(total, outer, 1.0)
+
+    # --- optimizer update ---
+    def opt_step(params, grads, state):
+        return adamw_update(params, grads, state, opt_cfg, 1.0)
+
+    opt = _artifact(opt_step, (shapes, shapes, opt_shapes),
+                    (psh, psh, opt_sh), None, mesh)
+    result["artifacts"]["opt"] = opt
+    _combine(total, opt, 1.0)
+    result["totals"] = total
+    return result
+
+
+def build_serve_cell(cfg: ModelConfig, shape, policy: ShardingPolicy,
+                     mesh, decode: bool) -> Dict[str, Any]:
+    b_, l_ = shape.global_batch, shape.seq_len
+    dtype = cfg.compute_dtype
+    shapes, specs = serve_param_shapes(cfg)
+    psh = policy.param_shardings(shapes, specs)
+
+    if cfg.is_encoder_decoder:
+        dec_len = min(448, max(l_ // 8, 64))
+        caches_shapes = jax.eval_shape(
+            lambda: lm.init_caches(cfg, b_, dec_len, dtype=dtype, src_len=l_))
+        caches_sh = policy.cache_sharding(caches_shapes, b_)
+        if decode:
+            tok_sds = jax.ShapeDtypeStruct((b_, 1), jnp.int32)
+            len_sds = jax.ShapeDtypeStruct((b_,), jnp.int32)
+            fn = lm.make_encdec_decode_step(cfg, policy.shard_fn)
+            args = (shapes, caches_shapes, tok_sds, len_sds)
+            in_sh = (psh, caches_sh, policy.data_sharding(b_, 2),
+                     policy.data_sharding(b_, 1))
+        else:
+            audio_sds = jax.ShapeDtypeStruct((b_, l_, cfg.d_model), dtype)
+            tok_sds = jax.ShapeDtypeStruct((b_, dec_len), jnp.int32)
+
+            def fn(params, caches, audio, tokens):
+                logits, caches, _ = tf.apply_encdec(
+                    params, audio, tokens, cfg, mode="prefill",
+                    caches=caches, shard_fn=policy.shard_fn)
+                return logits[:, -1], caches
+
+            args = (shapes, caches_shapes, audio_sds, tok_sds)
+            in_sh = (psh, caches_sh, policy.data_sharding(b_, 3),
+                     policy.data_sharding(b_, 2))
+        result = {"artifacts": {}}
+        result["artifacts"]["full"] = _artifact(fn, args, in_sh, None, mesh)
+        cost = _artifact(fn, args, in_sh, None, mesh, cost_mode=True)
+        result["artifacts"]["cost_full"] = cost
+        total = {"flops": 0.0, "bytes": 0.0, "collectives": {}}
+        _combine(total, cost, 1.0)
+        result["totals"] = total
+        return result
+
+    max_len = l_ if decode else l_
+    caches_shapes = jax.eval_shape(
+        lambda: lm.init_caches(cfg, b_, max_len, dtype=dtype))
+    caches_sh = policy.cache_sharding(caches_shapes, b_)
+
+    result = {"artifacts": {}}
+    total = {"flops": 0.0, "bytes": 0.0, "collectives": {}}
+    plan = tf.StackPlan.from_config(cfg)
+
+    if decode:
+        tok_sds = jax.ShapeDtypeStruct((b_, 1), jnp.int32)
+        len_sds = jax.ShapeDtypeStruct((b_,), jnp.int32)
+        fn = lm.make_decode_step(cfg, policy.shard_fn)
+        args = (shapes, caches_shapes, tok_sds, len_sds)
+        in_sh = (psh, caches_sh, policy.data_sharding(b_, 2),
+                 policy.data_sharding(b_, 1))
+        full = _artifact(fn, args, in_sh, None, mesh)
+        result["artifacts"]["full"] = full
+        # body: one period decode (loop-free) x n_scan + full-once-overhead
+        bb = _block_body_args(cfg, policy, shapes, specs, b_, 1, dtype,
+                              caches_shapes, caches_sh)
+
+        def body_decode(bp, bc, x, cache_len):
+            h = x
+            new_c = []
+            for j, kind in enumerate(plan.period_kinds):
+                pos = jnp.asarray(cache_len).reshape(-1)[:, None] * \
+                    jnp.ones((x.shape[0], 1), jnp.int32)
+                h, nc, _ = tf.apply_layer(bp[j], h, cfg, kind,
+                                          positions=pos, cache=bc[j],
+                                          cache_len=cache_len, mode="decode",
+                                          shard_fn=policy.shard_fn)
+                new_c.append(nc)
+            return h, new_c
+
+        body = _artifact(
+            body_decode,
+            (bb["bp_shapes"], bb["bc_shapes"], bb["x_sds"], len_sds),
+            (bb["bp_sh"], bb["bc_sh"], bb["x_sh"],
+             policy.data_sharding(b_, 1)),
+            None, mesh, cost_mode=True)
+        result["artifacts"]["body_decode"] = body
+        _combine(total, body, plan.n_scan)
+        # unembed once (decode logits)
+        def unemb(embed, x):
+            return tf.unembed({"embed": embed, "lm_head": embed}, x, cfg) \
+                if cfg.tie_embeddings else None
+        if cfg.tie_embeddings:
+            ue = _artifact(
+                unemb,
+                (shapes["embed"],
+                 jax.ShapeDtypeStruct((b_, 1, cfg.d_model), dtype)),
+                (psh["embed"], policy.data_sharding(b_, 3)), None, mesh)
+            _combine(total, ue, 1.0)
+    else:  # prefill
+        tok_sds = jax.ShapeDtypeStruct((b_, l_), jnp.int32)
+        fn = lm.make_prefill_step(cfg, policy.shard_fn)
+        args = (shapes, caches_shapes, tok_sds)
+        in_sh = (psh, caches_sh, policy.data_sharding(b_, 2))
+        full = _artifact(fn, args, in_sh, None, mesh)
+        result["artifacts"]["full"] = full
+        bb = _block_body_args(cfg, policy, shapes, specs, b_, l_, dtype,
+                              caches_shapes, caches_sh)
+
+        def body_prefill(bp, bc, x):
+            h = x
+            new_c = []
+            pos = jnp.broadcast_to(jnp.arange(l_, dtype=jnp.int32), (b_, l_))
+            for j, kind in enumerate(plan.period_kinds):
+                h, nc, _ = tf.apply_layer(bp[j], h, cfg, kind,
+                                          positions=pos, cache=bc[j],
+                                          cache_len=None, mode="prefill",
+                                          shard_fn=policy.shard_fn)
+                new_c.append(nc)
+            return h, new_c
+
+        body = _artifact(body_prefill,
+                         (bb["bp_shapes"], bb["bc_shapes"], bb["x_sds"]),
+                         (bb["bp_sh"], bb["bc_sh"], bb["x_sh"]),
+                         None, mesh, cost_mode=True)
+        result["artifacts"]["body_prefill"] = body
+        _combine(total, body, plan.n_scan)
+    result["totals"] = total
+    return result
+
+
+# ---------------------------------------------------------------------------
+# Roofline
+# ---------------------------------------------------------------------------
+
+def roofline(cell: Dict[str, Any], cfg: ModelConfig, shape, chips: int
+             ) -> Dict[str, Any]:
+    """Three roofline terms in seconds (per-device HLO costs vs per-chip
+    peaks; cost_analysis is post-SPMD so flops/bytes are already
+    per-device)."""
+    t = cell["totals"]
+    coll_bytes = sum(s["bytes"] for s in t["collectives"].values())
+    compute_s = t["flops"] / HW["flops_bf16"]
+    memory_s = t["bytes"] / HW["hbm_bw"]
+    collective_s = coll_bytes / HW["ici_bw"]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        model_flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        model_flops = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        model_flops = 2.0 * n_active * tokens
+    hlo_flops_global = t["flops"] * chips
+    terms = {
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": max(
+            (("compute", compute_s), ("memory", memory_s),
+             ("collective", collective_s)), key=lambda kv: kv[1])[0],
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_ratio": model_flops / hlo_flops_global
+        if hlo_flops_global else None,
+        "coll_bytes_per_device": coll_bytes,
+    }
+    return terms
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             policy_name: Optional[str] = None, remat: str = "dots",
+             want_roofline: bool = True, microbatch: int = 0,
+             opt_unembed: bool = False,
+             opt_attn: bool = False) -> Dict[str, Any]:
+    shape = SHAPES[shape_name]
+    cfg = configs.get_config(arch)
+    skips = configs.shape_skips(arch)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+    }
+    if shape_name in skips:
+        rec["status"] = "skipped"
+        rec["reason"] = skips[shape_name]
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cp = shape_name == "long_500k"
+    pol_name = policy_name or ("fsdp" if shape.kind == "train" else "tp")
+    policy = ShardingPolicy(mesh, pol_name, context_parallel=cp,
+                            opt_unembed_gather=opt_unembed,
+                            opt_attn_sharding=opt_attn)
+    rec["policy"] = pol_name + ("+cp" if cp else "") + \
+        ("+ueg" if opt_unembed else "") + ("+attn" if opt_attn else "")
+    rec["remat"] = remat if shape.kind == "train" else None
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            if microbatch < 0:
+                microbatch = TRAIN_MICROBATCH.get(
+                    arch, DEFAULT_TRAIN_MICROBATCH)
+            rec["microbatch"] = microbatch
+            cell = build_train_cell(cfg, shape, policy, remat, mesh,
+                                    microbatch=microbatch)
+        else:
+            cell = build_serve_cell(cfg, shape, policy, mesh,
+                                    decode=shape.kind == "decode")
+        rec.update(cell)
+        rec["status"] = "ok"
+        mem = cell["artifacts"]["full"]["mem"]
+        per_dev = sum(v for v in [mem["argument_bytes"], mem["temp_bytes"],
+                                  mem["output_bytes"]] if v)
+        rec["per_device_bytes"] = per_dev
+        rec["fits_16g"] = bool(per_dev < HBM_PER_CHIP)
+        if want_roofline:
+            rec["roofline"] = roofline(cell, cfg, shape, rec["chips"])
+    except Exception as e:  # noqa
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["wall_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--policy", default=None)
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--opt-unembed", action="store_true")
+    ap.add_argument("--opt-attn", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=-1,
+                    help="-1: per-arch default")
+    ap.add_argument("--moe-dispatch", default="einsum",
+                    choices=["einsum", "scatter", "auto"])
+    ap.add_argument("--moe-groups", type=int, default=1,
+                    help="0 = auto (data-axis size)")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--append", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(configs.ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    if args.append and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+
+    for multi in meshes:
+        mesh_name = "2x16x16" if multi else "16x16"
+        for arch in archs:
+            for shape in shapes:
+                if (arch, shape, mesh_name) in done:
+                    continue
+                print(f"=== {arch} x {shape} x {mesh_name} ===", flush=True)
+                from repro.models import moe as moe_mod2
+                moe_mod2.set_dispatch_mode(args.moe_dispatch)
+                g = args.moe_groups
+                if g == 0:
+                    g = (32 if multi else 16)  # data-axis size (pod x data)
+                moe_mod2.set_moe_groups(g)
+                rec = run_cell(arch, shape, multi, policy_name=args.policy,
+                               remat=args.remat, microbatch=args.microbatch,
+                               opt_unembed=args.opt_unembed,
+                               opt_attn=args.opt_attn)
+                rec["moe_dispatch"] = args.moe_dispatch
+                rec["moe_groups"] = g
+                print(f"    -> {rec['status']}"
+                      + (f" ({rec.get('error')})"
+                         if rec["status"] == "error" else
+                         f" wall={rec.get('wall_s')}s"), flush=True)
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1, default=float)
+    print(f"wrote {args.out}: {len(results)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,245 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Parallelism policies over the production mesh (pod, data, model):
+
+* ``tp``    — Megatron tensor parallel: weight output/expert/vocab axes over
+              'model'; batch over ('pod','data'); weights replicated over
+              'data' (fits small models).
+* ``fsdp``  — tp + weights' 'embed' axis sharded over ('pod','data')
+              (ZeRO-3: params, grads, and optimizer state all sharded over
+              the data dimension; XLA inserts the all-gathers).
+* ``cp``    — context parallelism for long-context decode: KV-cache/state
+              sequence dim over 'data' (batch too small to shard), weights
+              as tp/fsdp.
+
+Every mapping is divisibility-checked against the actual dim; on mismatch
+the axis falls back to replication (never a compile failure).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# logical axis -> candidate mesh axes, per policy
+_RULES = {
+    "tp": {
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv": ("model",),
+        "mlp": ("model",),
+        "experts": ("model",),
+        "state": None,
+        "embed": None,
+        "lora": None,
+    },
+    "fsdp": {
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv": ("model",),
+        "mlp": ("model",),
+        "experts": ("model",),
+        "embed": ("pod", "data"),      # ZeRO-3 over the data dimension(s)
+        "state": None,
+        "lora": None,
+    },
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh
+    policy: str = "fsdp"            # 'tp' | 'fsdp'
+    context_parallel: bool = False  # long_500k: KV seq over 'data'
+    # beyond-baseline optimization knobs (see EXPERIMENTS.md §Perf):
+    # re-constrain unembed weights to P('model', None) before the logits
+    # matmul, so XLA all-gathers the weight shards (MBs) instead of
+    # all-reducing partial logits (GBs).
+    opt_unembed_gather: bool = False
+    # attention q/k/v placement: heads over 'model' when divisible, else
+    # sequence-parallel q (L over 'model', KV gathered) — prevents the
+    # partitioner from sharding the head_dim contraction and all-reducing
+    # full (B, H, Lq, Lkv) partial scores.
+    opt_attn_sharding: bool = False
+
+    # ------------------------------------------------------------------
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in ("pod", "data") if a in self.mesh.shape)
+
+    def _axis_size(self, names) -> int:
+        return int(np.prod([self.mesh.shape[n] for n in names]))
+
+    def _map_axis(self, logical: Optional[str], dim: int, used: set):
+        if logical is None:
+            return None
+        rule = _RULES[self.policy].get(logical)
+        if rule is None:
+            return None
+        names = tuple(n for n in rule if n in self.mesh.shape and n not in used)
+        if not names:
+            return None
+        if dim % self._axis_size(names) != 0:
+            # try a shrinking suffix before giving up
+            while names and dim % self._axis_size(names) != 0:
+                names = names[1:]
+            if not names:
+                return None
+        for n in names:
+            used.add(n)
+        return names if len(names) > 1 else names[0]
+
+    def param_spec(self, shape, logical: PartitionSpec) -> PartitionSpec:
+        used: set = set()
+        axes = []
+        # map the most-parallel axes first (model before data)
+        order = sorted(range(len(shape)),
+                       key=lambda i: 0 if logical[i] in
+                       ("vocab", "heads", "kv", "mlp", "experts") else 1)
+        resolved = [None] * len(shape)
+        for i in order:
+            resolved[i] = self._map_axis(logical[i], shape[i], used)
+        return PartitionSpec(*resolved)
+
+    def param_shardings(self, shapes_tree, logical_tree):
+        def one(sds, spec):
+            return NamedSharding(self.mesh, self.param_spec(sds.shape, spec))
+        return jax.tree_util.tree_map(
+            one, shapes_tree, logical_tree,
+            is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+    # ------------------------------------------------------------------
+    def batch_spec(self, batch_size: int) -> PartitionSpec:
+        axes = [a for a in self.data_axes
+                if batch_size % self._axis_size((a,)) == 0]
+        # greedy: use as many data axes as divide the batch
+        use = []
+        prod = 1
+        for a in axes:
+            if batch_size % (prod * self.mesh.shape[a]) == 0:
+                use.append(a)
+                prod *= self.mesh.shape[a]
+        return PartitionSpec(tuple(use) if len(use) > 1 else
+                             (use[0] if use else None))
+
+    def data_sharding(self, batch_size: int, ndim: int) -> NamedSharding:
+        spec = [None] * ndim
+        spec[0] = self.batch_spec(batch_size)[0]
+        return NamedSharding(self.mesh, PartitionSpec(*spec))
+
+    def cache_sharding(self, shapes_tree, batch_size: int):
+        """KV/state cache shardings. Heuristics by rank/shape (a leading
+        stacked-layers axis from scan is detected and skipped):
+
+        (B, S, H, D): batch->data; heads->model when divisible, else the
+                      sequence dim shards over 'model' (flash-decoding
+                      parallelism: per-shard partial softmax, XLA inserts
+                      the small max/sum all-reduces).
+        (B, S, R):    latent KV (MLA): batch->data, R->model.
+        (B, x, y):    mamba states: batch->data, larger of x/y -> model.
+        context_parallel (long_500k): sequence additionally over 'data'
+        (batch=1 cannot use it).
+        """
+        model_size = self.mesh.shape.get("model", 1)
+        data_size = self.mesh.shape.get("data", 1)
+
+        def one(sds):
+            shape = sds.shape
+            nd = len(shape)
+            spec = [None] * nd
+            # locate batch: caches may carry a leading layers axis
+            bpos = 0
+            if nd >= 4 and shape[0] != batch_size and shape[1] == batch_size:
+                bpos = 1
+            if shape[bpos] == batch_size and not self.context_parallel:
+                spec[bpos] = self.batch_spec(batch_size)[0]
+            rank = nd - bpos
+            if rank == 4:  # (B, S, H, D)
+                spos, hpos = bpos + 1, bpos + 2
+                seq_axes = []
+                if self.context_parallel and shape[spos] % data_size == 0:
+                    seq_axes.append("data")
+                if shape[hpos] % model_size == 0:
+                    spec[hpos] = "model"
+                elif shape[spos] % (data_size if seq_axes else 1) == 0 and \
+                        shape[spos] % ((data_size if seq_axes else 1)
+                                       * model_size) == 0:
+                    seq_axes.append("model")
+                if seq_axes:
+                    spec[spos] = tuple(seq_axes) if len(seq_axes) > 1 \
+                        else seq_axes[0]
+            elif rank == 3:
+                mid, last = shape[bpos + 1], shape[bpos + 2]
+                # prefer sharding the larger dimension over 'model'
+                cands = sorted([(mid, bpos + 1), (last, bpos + 2)],
+                               reverse=True)
+                for dim, pos in cands:
+                    if dim % model_size == 0 and dim >= model_size:
+                        spec[pos] = "model"
+                        break
+                if self.context_parallel and spec[bpos + 1] is None and \
+                        mid % data_size == 0 and mid > 4096:
+                    spec[bpos + 1] = "data"
+            return NamedSharding(self.mesh, PartitionSpec(*spec))
+
+        return jax.tree_util.tree_map(one, shapes_tree)
+
+    # ------------------------------------------------------------------
+    def shard_fn(self, name: str, x):
+        """with_sharding_constraint hook threaded through the model."""
+        try:
+            if name in ("activations", "residual"):
+                spec = [None] * x.ndim
+                if not self.context_parallel and x.ndim >= 2:
+                    bspec = self.batch_spec(x.shape[0])[0]
+                    spec[0] = bspec
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(self.mesh, PartitionSpec(*spec)))
+            if name == "logits":
+                spec = [None] * x.ndim
+                if not self.context_parallel:
+                    spec[0] = self.batch_spec(x.shape[0])[0]
+                if x.shape[-1] % self.mesh.shape.get("model", 1) == 0:
+                    spec[-1] = "model"
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(self.mesh, PartitionSpec(*spec)))
+            if name in ("attn_q", "attn_kv") and self.opt_attn_sharding:
+                # (B, L, H, Dh)
+                b_, l_, h_, _ = x.shape
+                model = self.mesh.shape.get("model", 1)
+                spec = [None] * 4
+                if not self.context_parallel:
+                    spec[0] = self.batch_spec(b_)[0]
+                if h_ % model == 0:
+                    spec[2] = "model"
+                elif name == "attn_q" and l_ % model == 0 and l_ >= model:
+                    spec[1] = "model"   # sequence-parallel q; KV gathered
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(self.mesh, PartitionSpec(*spec)))
+            if name == "moe_group":
+                # (G, T_loc, D): pin the group axis to the data dimension(s)
+                axes = self.data_axes
+                if x.shape[0] == self._axis_size(axes):
+                    spec = [None] * x.ndim
+                    spec[0] = axes if len(axes) > 1 else axes[0]
+                    return jax.lax.with_sharding_constraint(
+                        x, NamedSharding(self.mesh, PartitionSpec(*spec)))
+                return x
+            if name == "unembed_weights" and self.opt_unembed_gather:
+                # weights are (vocab, d) or (d, vocab); keep the vocab axis
+                # model-sharded and gather the contraction axis
+                vpos = 0 if x.shape[0] >= x.shape[1] else 1
+                spec = [None, None]
+                if x.shape[vpos] % self.mesh.shape.get("model", 1) == 0:
+                    spec[vpos] = "model"
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(self.mesh, PartitionSpec(*spec)))
+        except ValueError:
+            return x
+        return x
+
+    def replicated(self, ndim: int = 0) -> NamedSharding:
+        return NamedSharding(self.mesh, PartitionSpec())

@@ -1,0 +1,68 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs a real training loop on the local device(s). On a TPU fleet the same
+entry point runs per host under ``jax.distributed``; the mesh/policy layers
+are identical to the dry-run's, so a config proven by dryrun.py launches
+unchanged.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data import DataConfig
+from repro.launch.mesh import make_local_mesh
+from repro.launch.sharding import ShardingPolicy
+from repro.models import lm
+from repro.optim import AdamWConfig, adamw_init
+from repro.train import TrainLoopConfig, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.get_config(args.arch, smoke=args.smoke)
+    if cfg.is_encoder_decoder:
+        raise SystemExit("use examples/train_lm.py-style drivers for "
+                         "enc-dec training; this CLI trains decoder LMs")
+
+    mesh = make_local_mesh(data=len(jax.devices()), model=1)
+    policy = ShardingPolicy(mesh, "tp")
+    params, _ = lm.init_model(jax.random.PRNGKey(args.seed), cfg)
+    opt_state = adamw_init(params)
+    opt_cfg = AdamWConfig(lr=args.lr)
+    step = lm.make_train_step(
+        cfg, opt_cfg, remat=args.remat, microbatch=args.microbatch,
+        schedule_kwargs={"warmup": min(50, args.steps // 10 + 1),
+                         "total": args.steps})
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=args.batch, seed=args.seed)
+    loop_cfg = TrainLoopConfig(total_steps=args.steps,
+                               checkpoint_dir=args.checkpoint_dir,
+                               checkpoint_every=args.checkpoint_every)
+    out = train_loop(jax.jit(step), params, opt_state, data_cfg, loop_cfg)
+    hist = out["metrics_history"]
+    print(f"final loss {hist[-1]['loss']:.4f} "
+          f"(from {hist[0]['loss']:.4f}); stragglers: "
+          f"{out['straggler_steps']}")
+
+
+if __name__ == "__main__":
+    main()

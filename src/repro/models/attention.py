@@ -1,0 +1,362 @@
+"""Attention: GQA (+qk-norm, sliding window, softcap, M-RoPE) and MLA.
+
+The core is a chunked online-softmax (flash-style) attention written with
+``lax.map`` over query chunks and ``lax.scan`` over KV chunks, so activation
+memory stays O(chunk^2) regardless of sequence length — the TPU-native
+formulation (the MXU consumes (chunk, head_dim) tiles; no materialized
+(L, L) score matrix). Decode takes the direct path over the KV cache.
+
+MLA follows MiniCPM3/DeepSeek-V2: low-rank Q and KV projections with a
+decoupled RoPE branch. Prefill reconstructs full K/V and reuses the shared
+core; decode uses the *absorbed* formulation (scores against the latent
+cache directly), which keeps the per-step working set at
+O(kv_lora_rank + rope_dim) per token instead of O(heads * head_dim).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import P, apply_rope, dense, make_param, ones_param, rms_norm
+
+NEG_INF = -1e30
+
+# Cost-analysis mode (see launch/dryrun.py): XLA's HloCostAnalysis counts a
+# while-loop body once, so the dry-run compiles *cost artifacts* with
+# chunking disabled (loop-free attention) to get exact FLOP/byte counts,
+# while the real (chunked) program provides the memory/compile proof.
+_UNCHUNKED_FOR_COST = False
+
+
+def set_unchunked_for_cost(flag: bool):
+    global _UNCHUNKED_FOR_COST
+    _UNCHUNKED_FOR_COST = flag
+
+
+# ---------------------------------------------------------------------------
+# Core chunked attention
+# ---------------------------------------------------------------------------
+
+def _mask(pq, pk, *, causal: bool, window: int, kv_len):
+    m = jnp.ones((pq.shape[0], pk.shape[0]), bool)
+    if causal:
+        m &= pk[None, :] <= pq[:, None]
+    if window:
+        m &= pq[:, None] - pk[None, :] < window
+    if kv_len is not None:
+        m &= pk[None, :] < kv_len
+    return m
+
+
+def _scores(qc, kc, softcap):
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                   preferred_element_type=jnp.float32)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def attention_core(q, k, v, *, causal: bool = True, window: int = 0,
+                   q_start=0, kv_len=None, softcap: float = 0.0,
+                   q_chunk: int = 1024, kv_chunk: int = 1024):
+    """q: (B, Lq, Hq, Dh); k, v: (B, Lkv, Hkv, Dh). Returns (B, Lq, Hq, Dh).
+
+    kv_len: None or () / (B,) int32 — valid KV prefix length (decode).
+    q_start: scalar offset of q positions within the KV timeline.
+    """
+    b, lq, hq, dh = q.shape
+    lkv, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[3]                      # may differ from dh (MLA)
+    g = hq // hkv
+    scale = dh ** -0.5
+    if _UNCHUNKED_FOR_COST:
+        q_chunk = max(q_chunk, lq)
+        kv_chunk = max(kv_chunk, lkv)
+    qg = (q * scale).reshape(b, lq, hkv, g, dh)
+    if kv_len is not None:
+        kv_len = jnp.asarray(kv_len)
+        kv_len_b = jnp.broadcast_to(kv_len.reshape(-1), (b,))
+    else:
+        kv_len_b = None
+
+    def direct():
+        s = _scores(qg, k, softcap)  # (B, Hkv, G, Lq, Lkv) f32
+        pq = q_start + jnp.arange(lq, dtype=jnp.int32)
+        pk = jnp.arange(lkv, dtype=jnp.int32)
+        m = _mask(pq, pk, causal=causal, window=window, kv_len=None)
+        s = jnp.where(m[None, None, None], s, NEG_INF)
+        if kv_len_b is not None:
+            lm = pk[None, :] < kv_len_b[:, None]          # (B, Lkv)
+            s = jnp.where(lm[:, None, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return o.reshape(b, lq, hq, dv).astype(q.dtype)
+
+    if lq <= q_chunk and lkv <= kv_chunk:
+        return direct()
+
+    # pad to chunk multiples
+    lq_p = -(-lq // q_chunk) * q_chunk
+    lkv_p = -(-lkv // kv_chunk) * kv_chunk
+    qg_p = jnp.pad(qg, ((0, 0), (0, lq_p - lq), (0, 0), (0, 0), (0, 0)))
+    k_p = jnp.pad(k, ((0, 0), (0, lkv_p - lkv), (0, 0), (0, 0)))
+    v_p = jnp.pad(v, ((0, 0), (0, lkv_p - lkv), (0, 0), (0, 0)))
+    nq, nk = lq_p // q_chunk, lkv_p // kv_chunk
+    valid_kv = kv_len_b if kv_len_b is not None else jnp.full((b,), lkv,
+                                                              jnp.int32)
+
+    def per_q_chunk(qi):
+        qc = jax.lax.dynamic_slice_in_dim(qg_p, qi * q_chunk, q_chunk, 1)
+        pq = q_start + qi * q_chunk + jnp.arange(q_chunk, dtype=jnp.int32)
+
+        # flash-attention memory contract: the backward recomputes scores/
+        # probabilities per KV chunk instead of saving them — without this
+        # the scan VJP stacks a (nk, B, H, qc, kc) residual, i.e. the full
+        # (B, H, L, L) score matrix in disguise.
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(k_p, ki * kv_chunk, kv_chunk, 1)
+            vc = jax.lax.dynamic_slice_in_dim(v_p, ki * kv_chunk, kv_chunk, 1)
+            pk = ki * kv_chunk + jnp.arange(kv_chunk, dtype=jnp.int32)
+            s = _scores(qc, kc, softcap)
+            msk = _mask(pq, pk, causal=causal, window=window, kv_len=None)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            lm = pk[None, :] < valid_kv[:, None]
+            s = jnp.where(lm[:, None, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), vc,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, dv), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), jnp.arange(nk, dtype=jnp.int32))
+        out = acc / jnp.maximum(l_f, 1e-20)[..., None]
+        return out.transpose(0, 3, 1, 2, 4)  # (B, qc, Hkv, G, Dh)
+
+    chunks = jax.lax.map(per_q_chunk, jnp.arange(nq, dtype=jnp.int32))
+    out = jnp.concatenate([chunks[i] for i in range(nq)], axis=1) \
+        if nq > 1 else chunks[0]
+    out = out[:, :lq].reshape(b, lq, hq, dv).astype(q.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: ModelConfig):
+    d, dh = cfg.d_model, cfg.head_dim_
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": make_param(ks[0], (d, hq * dh), ("embed", "heads")),
+        "wk": make_param(ks[1], (d, hkv * dh), ("embed", "kv")),
+        "wv": make_param(ks[2], (d, hkv * dh), ("embed", "kv")),
+        "wo": make_param(ks[3], (hq * dh, d), ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        params["q_norm"] = ones_param((dh,), ("head_dim",))
+        params["k_norm"] = ones_param((dh,), ("head_dim",))
+    return params
+
+
+def apply_gqa(params, x, cfg: ModelConfig, *, window: int, positions,
+              cache=None, cache_len=None, mode: str = "train",
+              causal: bool = True, shard_fn=lambda n, v: v):
+    """x: (B, L, D). cache: {'k','v'} (B, S_max, Hkv, Dh) or None.
+    Returns (out, new_cache)."""
+    b, l, d = x.shape
+    dh, hq, hkv = cfg.head_dim_, cfg.num_heads, cfg.num_kv_heads
+    q = dense(x, params["wq"]).reshape(b, l, hq, dh)
+    k = dense(x, params["wk"]).reshape(b, l, hkv, dh)
+    v = dense(x, params["wv"]).reshape(b, l, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"] - 1.0, cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"] - 1.0, cfg.norm_eps)
+    sections = cfg.mrope_sections
+    q = apply_rope(q, positions, cfg.rope_theta, sections)
+    k = apply_rope(k, positions, cfg.rope_theta, sections)
+    q = shard_fn("attn_q", q)
+    k = shard_fn("attn_kv", k)
+    v = shard_fn("attn_kv", v)
+
+    if mode == "train":
+        out = attention_core(q, k, v, causal=causal, window=window,
+                             softcap=cfg.attn_logit_softcap)
+        new_cache = None
+    elif mode == "prefill":
+        s_max = cache["k"].shape[1]
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"].astype(k.dtype), k, 0, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"].astype(v.dtype), v, 0, 1)
+        out = attention_core(q, k, v, causal=causal, window=window,
+                             softcap=cfg.attn_logit_softcap)
+        new_cache = {"k": kc, "v": vc}
+        del s_max
+    elif mode == "decode":
+        idx = jnp.broadcast_to(jnp.asarray(cache_len).reshape(-1), (b,))
+        kc = cache["k"].astype(k.dtype).at[jnp.arange(b), idx].set(k[:, 0])
+        vc = cache["v"].astype(v.dtype).at[jnp.arange(b), idx].set(v[:, 0])
+        # direct masked attention over the cache (q position = idx)
+        pk = jnp.arange(kc.shape[1], dtype=jnp.int32)
+        keep = pk[None] < (idx + 1)[:, None]
+        if window:
+            keep &= pk[None] >= jnp.maximum(idx + 1 - window, 0)[:, None]
+        qg = (q * dh ** -0.5).reshape(b, 1, hkv, hq // hkv, dh)
+        s = _scores(qg, kc, cfg.attn_logit_softcap)
+        s = jnp.where(keep[:, None, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(vc.dtype), vc,
+                         preferred_element_type=jnp.float32)
+        out = out.reshape(b, 1, hq, dh).astype(x.dtype)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        raise ValueError(mode)
+
+    out = dense(out.reshape(b, l, hq * dh), params["wo"])
+    return out, new_cache
+
+
+def apply_cross_attention(params, x, enc_kv, cfg: ModelConfig):
+    """Decoder cross-attention (whisper): enc_kv = {'k','v'} precomputed."""
+    b, l, d = x.shape
+    dh, hq = cfg.head_dim_, cfg.num_heads
+    q = dense(x, params["wq"]).reshape(b, l, hq, dh)
+    out = attention_core(q, enc_kv["k"], enc_kv["v"], causal=False, window=0)
+    return dense(out.reshape(b, l, hq * dh), params["wo"])
+
+
+def init_cross_attention(key, cfg: ModelConfig):
+    d, dh, hq, hkv = (cfg.d_model, cfg.head_dim_, cfg.num_heads,
+                      cfg.num_kv_heads)
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": make_param(ks[0], (d, hq * dh), ("embed", "heads")),
+        "wk": make_param(ks[1], (d, hkv * dh), ("embed", "kv")),
+        "wv": make_param(ks[2], (d, hkv * dh), ("embed", "kv")),
+        "wo": make_param(ks[3], (hq * dh, d), ("heads", "embed")),
+    }
+
+
+def encode_cross_kv(params, enc_out, cfg: ModelConfig):
+    b, s, _ = enc_out.shape
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim_
+    k = dense(enc_out, params["wk"]).reshape(b, s, hkv, dh)
+    v = dense(enc_out, params["wv"]).reshape(b, s, hkv, dh)
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.num_heads
+    qk_d = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": make_param(ks[0], (d, cfg.q_lora_rank), ("embed", "lora")),
+        "q_norm": ones_param((cfg.q_lora_rank,), ("lora",)),
+        "wq_b": make_param(ks[1], (cfg.q_lora_rank, h * qk_d),
+                           ("lora", "heads")),
+        "wkv_a": make_param(ks[2], (d, cfg.kv_lora_rank + cfg.qk_rope_dim),
+                            ("embed", "lora")),
+        "kv_norm": ones_param((cfg.kv_lora_rank,), ("lora",)),
+        "wk_b": make_param(ks[3], (cfg.kv_lora_rank, h * cfg.qk_nope_dim),
+                           ("lora", "heads")),
+        "wv_b": make_param(ks[4], (cfg.kv_lora_rank, h * cfg.v_head_dim),
+                           ("lora", "heads")),
+        "wo": make_param(ks[5], (h * cfg.v_head_dim, d), ("heads", "embed")),
+    }
+
+
+def _mla_qkv(params, x, cfg: ModelConfig, positions):
+    """Shared projections. Returns q_nope, q_rope, kv_lat, k_rope."""
+    b, l, _ = x.shape
+    h = cfg.num_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q_lat = rms_norm(dense(x, params["wq_a"]), params["q_norm"] - 1.0,
+                     cfg.norm_eps)
+    q = dense(q_lat, params["wq_b"]).reshape(b, l, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    kv_a = dense(x, params["wkv_a"])
+    kv_lat = rms_norm(kv_a[..., : cfg.kv_lora_rank], params["kv_norm"] - 1.0,
+                      cfg.norm_eps)
+    k_rope = kv_a[..., cfg.kv_lora_rank :].reshape(b, l, 1, dr)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, kv_lat, k_rope
+
+
+def apply_mla(params, x, cfg: ModelConfig, *, positions, cache=None,
+              cache_len=None, mode: str = "train", window: int = 0):
+    """MLA attention. cache: {'kv_lat' (B,S,r), 'k_rope' (B,S,dr)}."""
+    b, l, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope, kv_lat, k_rope = _mla_qkv(params, x, cfg, positions)
+
+    if mode in ("train", "prefill"):
+        # reconstruct full K/V and reuse the shared chunked core
+        k_nope = dense(kv_lat, params["wk_b"]).reshape(b, l, h, dn)
+        v = dense(kv_lat, params["wv_b"]).reshape(b, l, h, dv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None], (b, l, h, dr))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # shared core scales by q.shape[-1]**-0.5 == (dn+dr)**-0.5 — correct
+        out = attention_core(q, k, v, causal=True)
+        new_cache = None
+        if mode == "prefill":
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache["kv_lat"].astype(kv_lat.dtype), kv_lat, 0, 1)
+            rc = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_rope"].astype(k_rope.dtype), k_rope, 0, 1)
+            new_cache = {"kv_lat": kc, "k_rope": rc}
+    else:  # decode — absorbed formulation over the latent cache
+        idx = jnp.broadcast_to(jnp.asarray(cache_len).reshape(-1), (b,))
+        kc = cache["kv_lat"].astype(kv_lat.dtype).at[
+            jnp.arange(b), idx].set(kv_lat[:, 0])
+        rc = cache["k_rope"].astype(k_rope.dtype).at[
+            jnp.arange(b), idx].set(k_rope[:, 0])
+        new_cache = {"kv_lat": kc, "k_rope": rc}
+        r = cfg.kv_lora_rank
+        wk_b = params["wk_b"].reshape(r, h, dn)
+        # absorb W_uk into q: q_lat (B,1,H,r)
+        q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, wk_b.astype(q_nope.dtype),
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+        scale = (dn + dr) ** -0.5
+        s = (jnp.einsum("bqhr,bkr->bhqk", q_lat, kc,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bqhd,bkd->bhqk", q_rope, rc,
+                          preferred_element_type=jnp.float32)) * scale
+        pk = jnp.arange(kc.shape[1], dtype=jnp.int32)
+        keep = pk[None] < (idx + 1)[:, None]
+        if window:
+            keep &= pk[None] >= jnp.maximum(idx + 1 - window, 0)[:, None]
+        s = jnp.where(keep[:, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx_lat = jnp.einsum("bhqk,bkr->bqhr", p.astype(kc.dtype), kc,
+                             preferred_element_type=jnp.float32)
+        wv_b = params["wv_b"].reshape(r, h, dv)
+        out = jnp.einsum("bqhr,rhd->bqhd", ctx_lat.astype(x.dtype),
+                         wv_b.astype(x.dtype),
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+
+    out = dense(out.reshape(b, l, h * dv), params["wo"])
+    return out, new_cache

@@ -1,0 +1,146 @@
+"""Shared layer primitives: params-with-logical-axes, norms, RoPE.
+
+Parameters are plain pytrees of arrays. Each parameter carries a tuple of
+*logical axis names* (MaxText-style) built alongside it; ``repro.launch.
+sharding`` maps logical names to mesh axes per parallelism policy. Modules
+build trees of ``P(value, axes)`` leaves; ``split_tree`` separates values
+from axis annotations at the top level.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+class P:
+    """A parameter value tagged with logical axis names.
+
+    Registered as a pytree *node* whose only child is the value and whose
+    axes ride along as static aux data — so jax.vmap/eval_shape over init
+    functions batch the values while preserving annotations.
+    """
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes: Tuple[str, ...]):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+    def __repr__(self):
+        return f"P({getattr(self.value, 'shape', self.value)}, {self.axes})"
+
+
+def is_p(x) -> bool:
+    return isinstance(x, P)
+
+
+def split_tree(tree):
+    """Tree of P leaves -> (values tree, logical PartitionSpec tree)."""
+    from jax.sharding import PartitionSpec
+    values = jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=is_p)
+    axes = jax.tree_util.tree_map(lambda p: PartitionSpec(*p.axes), tree,
+                                  is_leaf=is_p)
+    return values, axes
+
+
+def normal_init(key, shape, dtype, scale):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def make_param(key, shape, axes, dtype=jnp.float32, scale=None) -> P:
+    if scale is None:
+        fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+        scale = 1.0 / np.sqrt(fan_in)
+    return P(normal_init(key, shape, dtype, scale), axes)
+
+
+def ones_param(shape, axes, dtype=jnp.float32) -> P:
+    return P(jnp.ones(shape, dtype), axes)
+
+
+def zeros_param(shape, axes, dtype=jnp.float32) -> P:
+    return P(jnp.zeros(shape, dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + sectioned M-RoPE stub)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half) * 2.0 / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4, sections: tuple = ()):
+    """x: (..., L, H, Dh); positions: (..., L) int32 or (3, ..., L) for M-RoPE.
+
+    ``sections`` (M-RoPE, Qwen2-VL): splits the Dh/2 frequency bands into
+    temporal/height/width groups, each rotated by its own position stream.
+    With a single position stream the sectioned form is numerically the
+    standard RoPE (text-only stub frontend).
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.asarray(rope_frequencies(dh, theta), jnp.float32)  # (half,)
+    if positions.ndim == x.ndim - 2 + 1 and positions.shape[0] == 3 and sections:
+        # m-rope: positions (3, ..., L); sections sum to half
+        assert sum(sections) == half, (sections, half)
+        parts = []
+        start = 0
+        for s_idx, sec in enumerate(sections):
+            f = freqs[start : start + sec]
+            ang = positions[s_idx][..., None].astype(jnp.float32) * f
+            parts.append(ang)
+            start += sec
+        angles = jnp.concatenate(parts, axis=-1)  # (..., L, half)
+    else:
+        angles = positions[..., None].astype(jnp.float32) * freqs
+    cos = jnp.cos(angles)[..., None, :]  # (..., L, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out1 = x1f * cos - x2f * sin
+    out2 = x2f * cos + x1f * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+def dense(x, w):
+    """x (..., d_in) @ w (d_in, d_out) with f32 accumulation."""
+    return jax.lax.dot_general(
+        x, w.astype(x.dtype),
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)

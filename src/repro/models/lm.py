@@ -1,0 +1,314 @@
+"""Model-level entry points: init, loss, train/serve step factories.
+
+These are the functions the launcher jits with explicit in/out shardings;
+they are mesh-agnostic (sharding comes from logical-axis rules applied by
+``repro.launch.sharding``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.optim.adamw import compress_grads
+from . import transformer as tf
+from .config import ModelConfig
+from .layers import split_tree
+
+
+def init_model(key, cfg: ModelConfig):
+    """Returns (params, logical_specs) — values and PartitionSpec trees."""
+    if cfg.is_encoder_decoder:
+        tree = tf.init_encdec(key, cfg)
+    else:
+        tree = tf.init_decoder(key, cfg)
+    return split_tree(tree)
+
+
+def abstract_params(cfg: ModelConfig, seed: int = 0):
+    """Shape-only params (no allocation) + logical specs — dry-run path."""
+    return param_shapes(cfg, seed), init_specs(cfg, seed)
+
+
+_SPEC_CACHE: Dict[str, Any] = {}
+
+
+def init_specs(cfg: ModelConfig, seed: int = 0):
+    """Logical PartitionSpec tree without allocating parameters."""
+    if cfg.name in _SPEC_CACHE:
+        return _SPEC_CACHE[cfg.name]
+    key = jax.random.PRNGKey(seed)
+
+    def build(k):
+        if cfg.is_encoder_decoder:
+            return tf.init_encdec(k, cfg)
+        return tf.init_decoder(k, cfg)
+
+    tree_shapes = jax.eval_shape(build, key)
+    _, specs = split_tree(tree_shapes)
+    _SPEC_CACHE[cfg.name] = specs
+    return specs
+
+
+def param_shapes(cfg: ModelConfig, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+
+    def build(k):
+        return init_model(k, cfg)[0]
+
+    return jax.eval_shape(build, key)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels, mask=None, z_loss: float = 1e-4):
+    """logits (B, L, V) f32, labels (B, L) int32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(logz)
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def chunked_cross_entropy(params, hidden, labels, cfg: ModelConfig, *,
+                          chunk: int = 512, z_loss: float = 1e-4,
+                          shard_fn=lambda n, v: v):
+    """CE over sequence chunks so (B, L, vocab) logits never materialize.
+
+    With a 150k–262k vocab, full logits dominate activation memory
+    (e.g. 16 x 4096 x 152k f32 = 39.8 GB/device); chunking bounds the live
+    logits tensor at (B, chunk, V) and jax.checkpoint makes the backward
+    recompute per chunk.
+    """
+    from . import transformer as tf
+    b, l, d = hidden.shape
+    if l <= chunk:
+        logits = shard_fn("logits", tf.unembed(params, hidden, cfg,
+                                                shard_fn=shard_fn))
+        return cross_entropy(logits.astype(jnp.float32), labels,
+                             z_loss=z_loss)
+    n = -(-l // chunk)
+    lp = n * chunk
+    hidden = jnp.pad(hidden, ((0, 0), (0, lp - l), (0, 0)))
+    labels = jnp.pad(labels, ((0, 0), (0, lp - l)))
+    valid = jnp.pad(jnp.ones((b, l), jnp.float32), ((0, 0), (0, lp - l)))
+    hc = hidden.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+    vc = valid.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_loss(carry, xs):
+        h, lab, v = xs
+        logits = shard_fn("logits", tf.unembed(params, h, cfg,
+                                                shard_fn=shard_fn))
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        nll = (logz - gold + z_loss * jnp.square(logz)) * v
+        return carry + jnp.sum(nll), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32),
+                            (hc, lc, vc))
+    return total / (b * l)
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                    remat: str = "dots", microbatch: int = 0,
+                    schedule_kwargs: Optional[dict] = None,
+                    aux_weight: float = 0.01,
+                    shard_fn: Callable = lambda n, v: v):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). batch: {'tokens' (B, L+1) int32} — inputs/labels shifted here.
+    ``microbatch`` > 0 enables gradient accumulation over B/microbatch
+    slices (scan), keeping activation memory at the microbatch size.
+    """
+    schedule_kwargs = schedule_kwargs or {"warmup": 100, "total": 10_000}
+
+    def loss_fn(params, tokens):
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        hidden, _, aux = _apply(params, inputs, cfg, mode="train",
+                                remat=remat, shard_fn=shard_fn,
+                                return_hidden=True)
+        loss = chunked_cross_entropy(params, hidden, labels, cfg,
+                                     shard_fn=shard_fn)
+        return loss + aux_weight * aux, (loss, aux)
+
+    def grads_of(params, tokens):
+        (total, (loss, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, tokens)
+        return grads, loss, aux
+
+    def train_step(params, opt_state, batch):
+        tokens = batch["tokens"]
+        if microbatch and microbatch < tokens.shape[0]:
+            n = tokens.shape[0] // microbatch
+            tok = tokens[: n * microbatch].reshape(
+                n, microbatch, *tokens.shape[1:])
+
+            def acc_step(carry, tk):
+                g_acc, l_acc, a_acc = carry
+                g, l, a = grads_of(params, tk)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l, a_acc + a), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                acc_step, (g0, jnp.zeros(()), jnp.zeros(())), tok)
+            grads = jax.tree_util.tree_map(lambda g: g / n, grads)
+            loss, aux = loss / n, aux / n
+        else:
+            grads, loss, aux = grads_of(params, tokens)
+
+        grads = compress_grads(grads, opt_cfg.grad_compression)
+        lr_scale = cosine_schedule(opt_state.step, **schedule_kwargs)
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state,
+                                                opt_cfg, lr_scale)
+        metrics = {"loss": loss, "aux_loss": aux, "grad_norm": gnorm,
+                   "lr_scale": lr_scale}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def _apply(params, inputs, cfg, *, mode, remat="none", caches=None,
+           cache_len=None, shard_fn=lambda n, v: v, extra=None,
+           return_hidden=False):
+    if cfg.is_encoder_decoder:
+        audio = extra["audio_embeds"] if extra else inputs
+        tokens = extra["tokens"] if extra else inputs
+        return tf.apply_encdec(params, audio, tokens, cfg, mode=mode,
+                               caches=caches, cache_len=cache_len,
+                               shard_fn=shard_fn)
+    return tf.apply_decoder(params, inputs, cfg, mode=mode, caches=caches,
+                            cache_len=cache_len, remat=remat,
+                            shard_fn=shard_fn, return_hidden=return_hidden)
+
+
+def make_encdec_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                           aux_weight: float = 0.0,
+                           schedule_kwargs: Optional[dict] = None,
+                           shard_fn: Callable = lambda n, v: v):
+    """Whisper-style: batch = {'audio_embeds' (B,S,D), 'tokens' (B,L+1)}."""
+    schedule_kwargs = schedule_kwargs or {"warmup": 100, "total": 10_000}
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        logits, _, aux = tf.apply_encdec(params, batch["audio_embeds"],
+                                         inputs, cfg, mode="train",
+                                         shard_fn=shard_fn)
+        return cross_entropy(logits.astype(jnp.float32), labels), aux
+
+    def train_step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        lr_scale = cosine_schedule(opt_state.step, **schedule_kwargs)
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state,
+                                                opt_cfg, lr_scale)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, shard_fn=lambda n, v: v):
+    """prefill(params, caches, tokens) -> (logits_last, caches).
+
+    Only the last position is projected to vocab — a 32k-token prefill never
+    materializes (B, 32k, V) logits.
+    """
+
+    def prefill(params, caches, tokens):
+        if cfg.is_encoder_decoder:
+            logits, caches, _ = _apply(params, tokens, cfg, mode="prefill",
+                                       caches=caches, shard_fn=shard_fn)
+            return logits[:, -1], caches
+        hidden, caches, _ = _apply(params, tokens, cfg, mode="prefill",
+                                   caches=caches, cache_len=None,
+                                   shard_fn=shard_fn, return_hidden=True)
+        logits = tf.unembed(params, hidden[:, -1], cfg, shard_fn=shard_fn)
+        return logits, caches
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, shard_fn=lambda n, v: v):
+    """decode(params, caches, token (B,1), cache_len) -> (logits, caches)."""
+
+    def decode(params, caches, token, cache_len):
+        logits, caches, _ = _apply(params, token, cfg, mode="decode",
+                                   caches=caches, cache_len=cache_len,
+                                   shard_fn=shard_fn)
+        return logits[:, 0], caches
+
+    return decode
+
+
+def make_encdec_decode_step(cfg: ModelConfig, shard_fn=lambda n, v: v):
+    def decode(params, caches, token, cache_len):
+        logits, caches, _ = tf.apply_encdec(
+            params, None, token, cfg, mode="decode", caches=caches,
+            cache_len=cache_len, enc_out=None, shard_fn=shard_fn)
+        return logits[:, 0], caches
+
+    return decode
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16, src_len: int = 0):
+    if cfg.is_encoder_decoder:
+        return tf.init_encdec_cache(cfg, batch, max_len, src_len or max_len,
+                                    dtype)
+    return tf.init_decoder_cache(cfg, batch, max_len, dtype)
+
+
+def _map_cache_batch(caches, fn):
+    """Apply fn(leaf, batch_axis) across a decoder cache tree — stacked
+    block caches carry a leading layers axis (batch at dim 1); tail caches
+    have batch at dim 0."""
+    out = dict(caches)
+    out["blocks"] = [jax.tree_util.tree_map(lambda c: fn(c, 1), b)
+                     for b in caches["blocks"]]
+    out["tail"] = [jax.tree_util.tree_map(lambda c: fn(c, 0), t)
+                   for t in caches["tail"]]
+    return out
+
+
+def slice_caches(caches, start, size: int):
+    """Batch-slice a decoder cache tree (serving slot management)."""
+    return _map_cache_batch(
+        caches, lambda c, ax: jax.lax.dynamic_slice_in_dim(c, start, size,
+                                                           ax))
+
+
+def update_caches(caches, row, start):
+    """Write a batch slice back into the cache tree."""
+    out = dict(caches)
+    out["blocks"] = [
+        jax.tree_util.tree_map(
+            lambda c, r: jax.lax.dynamic_update_slice_in_dim(
+                c, r.astype(c.dtype), start, 1), b, rb)
+        for b, rb in zip(caches["blocks"], row["blocks"])]
+    out["tail"] = [
+        jax.tree_util.tree_map(
+            lambda c, r: jax.lax.dynamic_update_slice_in_dim(
+                c, r.astype(c.dtype), start, 0), t, rt)
+        for t, rt in zip(caches["tail"], row["tail"])]
+    return out

@@ -1,0 +1,160 @@
+"""Mamba-1 selective SSM block (Falcon-Mamba / Jamba mixer).
+
+Training/prefill uses a chunked scan: `lax.scan` over sequence chunks
+carrying the (B, d_inner, d_state) state, with an associative scan inside
+each chunk — bounding activation memory at O(B * chunk * d_inner * d_state)
+instead of O(B * L * d_inner * d_state) (the reason GPU Mamba needs a fused
+kernel; on TPU the chunked formulation composes with remat instead).
+Decode is the single-step recurrence over (ssm_state, conv_state).
+"""
+from __future__ import annotations
+
+import functools
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import P, dense, make_param, ones_param, zeros_param
+
+SCAN_CHUNK = 256
+
+# cost-analysis mode (see attention.py / launch/dryrun.py): disable the
+# chunked-scan while-loop so HloCostAnalysis sees the full sequence.
+_UNCHUNKED_FOR_COST = False
+
+
+def set_unchunked_for_cost(flag: bool):
+    global _UNCHUNKED_FOR_COST
+    _UNCHUNKED_FOR_COST = flag
+
+
+def init_mamba(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.mamba_d_inner
+    ds = cfg.mamba_d_state
+    dt = cfg.mamba_dt_rank_
+    dc = cfg.mamba_d_conv
+    ks = jax.random.split(key, 6)
+    a_init = jnp.log(jnp.broadcast_to(
+        jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds)))
+    return {
+        "in_proj": make_param(ks[0], (d, 2 * di), ("embed", "mlp")),
+        "conv_w": make_param(ks[1], (dc, di), ("conv", "mlp"), scale=0.5),
+        "conv_b": zeros_param((di,), ("mlp",)),
+        "x_proj": make_param(ks[2], (di, dt + 2 * ds), ("mlp", "lora")),
+        "dt_proj": make_param(ks[3], (dt, di), ("lora", "mlp")),
+        "dt_bias": P(jnp.log(jnp.expm1(jnp.full((di,), 0.01))), ("mlp",)),
+        "a_log": P(a_init, ("mlp", "state")),
+        "d_skip": ones_param((di,), ("mlp",)),
+        "out_proj": make_param(ks[4], (di, d), ("mlp", "embed")),
+    }
+
+
+def _ssm_params(params, x, cfg: ModelConfig):
+    """x: (B, L, di) -> (dt (B,L,di), B_ (B,L,ds), C (B,L,ds))."""
+    ds = cfg.mamba_d_state
+    dtr = cfg.mamba_dt_rank_
+    proj = dense(x, params["x_proj"])
+    dt_low, b_mat, c_mat = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = dense(dt_low, params["dt_proj"]) + params["dt_bias"].astype(x.dtype)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+    return dt, b_mat.astype(jnp.float32), c_mat.astype(jnp.float32)
+
+
+def _chunk_scan(x, dt, b_mat, c_mat, a, h0):
+    """One chunk: x (B,C,di), dt (B,C,di), b/c (B,C,ds), a (di,ds),
+    h0 (B,di,ds). Returns (y (B,C,di), h_final)."""
+    da = jnp.exp(dt[..., None] * a)                       # (B,C,di,ds)
+    dbx = dt[..., None] * b_mat[:, :, None, :] * \
+        x.astype(jnp.float32)[..., None]                  # (B,C,di,ds)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    # include h0 by folding it into the first element
+    dbx0 = dbx.at[:, 0].add(da[:, 0] * h0)
+    a_acc, h_all = jax.lax.associative_scan(combine, (da, dbx0), axis=1)
+    y = jnp.sum(h_all * c_mat[:, :, None, :], axis=-1)     # (B,C,di)
+    return y, h_all[:, -1]
+
+
+def apply_mamba(params, x, cfg: ModelConfig, *, cache=None,
+                mode: str = "train"):
+    """x: (B, L, D). cache: {'conv' (B, dc-1, di), 'ssm' (B, di, ds)}.
+    Returns (out (B, L, D), new_cache)."""
+    b, l, d = x.shape
+    di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    xz = dense(x, params["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)                     # (B, L, di) each
+
+    if mode == "decode":
+        # conv state update (B, dc-1, di)
+        conv_st = cache["conv"].astype(xs.dtype)
+        window = jnp.concatenate([conv_st, xs], axis=1)   # (B, dc, di)
+        conv_w = params["conv_w"].astype(xs.dtype)        # (dc, di)
+        xc = jnp.sum(window * conv_w[None], axis=1, keepdims=True) \
+            + params["conv_b"].astype(xs.dtype)
+        xc = jax.nn.silu(xc)
+        dt, b_mat, c_mat = _ssm_params(params, xc, cfg)
+        a = -jnp.exp(params["a_log"].astype(jnp.float32))
+        h0 = cache["ssm"].astype(jnp.float32)
+        da = jnp.exp(dt[:, 0, :, None] * a)
+        h1 = da * h0 + dt[:, 0, :, None] * b_mat[:, 0, None, :] * \
+            xc.astype(jnp.float32)[:, 0, :, None]
+        y = jnp.sum(h1 * c_mat[:, 0, None, :], axis=-1)[:, None]
+        y = y + xc.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+        out = (y.astype(x.dtype) * jax.nn.silu(z))
+        new_cache = {"conv": window[:, 1:].astype(cache["conv"].dtype),
+                     "ssm": h1.astype(cache["ssm"].dtype)}
+        return dense(out, params["out_proj"]), new_cache
+
+    # train / prefill: causal depthwise conv over the full sequence
+    conv_w = params["conv_w"].astype(xs.dtype)
+    xp = jnp.pad(xs, ((0, 0), (dc - 1, 0), (0, 0)))
+    xc = sum(xp[:, i : i + l] * conv_w[i][None, None] for i in range(dc))
+    xc = jax.nn.silu(xc + params["conv_b"].astype(xs.dtype))
+
+    dt, b_mat, c_mat = _ssm_params(params, xc, cfg)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    chunk = l if _UNCHUNKED_FOR_COST else min(SCAN_CHUNK, l)
+    n_chunks = -(-l // chunk)
+    lp = n_chunks * chunk
+    pad = lp - l
+
+    def padded(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+
+    xc_p, dt_p = padded(xc), padded(dt)
+    b_p, c_p = padded(b_mat), padded(c_mat)
+
+    # checkpoint: backward recomputes each chunk's associative scan instead
+    # of saving the (B, chunk, d_inner, d_state) state history per chunk.
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_step(h, i):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, i * chunk, chunk, 1)
+        y, h_next = _chunk_scan(sl(xc_p), sl(dt_p), sl(b_p), sl(c_p), a, h)
+        return h_next, y
+
+    h0 = jnp.zeros((b, di, ds), jnp.float32)
+    h_final, ys = jax.lax.scan(chunk_step, h0,
+                               jnp.arange(n_chunks, dtype=jnp.int32))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, lp, di)[:, :l]
+    y = y + xc.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    out = y.astype(x.dtype) * jax.nn.silu(z)
+    out = dense(out, params["out_proj"])
+
+    new_cache = None
+    if mode == "prefill":
+        conv_tail = jnp.concatenate(
+            [jnp.zeros((b, dc - 1, di), xs.dtype), xs], axis=1)[:, -(dc - 1):]
+        new_cache = {"conv": conv_tail, "ssm": h_final.astype(jnp.float32)}
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    return {"conv": jnp.zeros((batch, dc - 1, di), dtype),
+            "ssm": jnp.zeros((batch, di, ds), jnp.float32)}

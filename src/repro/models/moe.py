@@ -1,0 +1,261 @@
+"""Mixture-of-Experts with Ocean estimation-guided capacity sizing.
+
+The token->expert routing matrix R is a sparse boolean matrix; dispatch
+(`R @ X`) and combine (`R^T @ Y`) are SpGEMM-shaped and are realized here as
+the classic TPU one-hot-matmul dispatch — the same MXU scatter idiom as the
+SpGEMM dense-accumulator kernel.
+
+**Ocean integration** (paper technique applied beyond-paper): per-expert
+buffer *capacity* is exactly an output-size-prediction problem. The exact
+answer needs a full histogram over all tokens (the "symbolic pass"); Ocean's
+analysis-step analogue samples a small fraction of tokens and derives a
+conservative capacity factor (mean + sigma-slack, mirroring §4.1's
+conservative CR), with the paper's expansion factor + rounding absorbing
+estimation error and overflow tokens dropped (the fallback mechanism).
+``calibrate_capacity`` implements both and is used by the training/serving
+setup; the jitted layer then runs with the selected static capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import P, dense, make_param
+
+
+def init_mlp(key, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": make_param(ks[0], (d_model, d_ff), ("embed", "mlp")),
+        "wg": make_param(ks[1], (d_model, d_ff), ("embed", "mlp")),
+        "wo": make_param(ks[2], (d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def apply_mlp(params, x):
+    h = jax.nn.silu(dense(x, params["wg"])) * dense(x, params["wi"])
+    return dense(h, params["wo"])
+
+
+def init_moe(key, cfg: ModelConfig):
+    e = cfg.moe_num_experts
+    d = cfg.d_model
+    ff = cfg.moe_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": make_param(ks[0], (d, e), ("embed", "experts")),
+        "wi": make_param(ks[1], (e, d, ff), ("experts", "embed", "mlp")),
+        "wg": make_param(ks[2], (e, d, ff), ("experts", "embed", "mlp")),
+        "wo": make_param(ks[3], (e, ff, d), ("experts", "mlp", "embed")),
+    }
+    if cfg.moe_shared_expert:
+        params["shared"] = init_mlp(ks[4], d, cfg.d_ff)
+    return params
+
+
+# default dispatch realization; launch/dryrun flips this to 'scatter' for
+# the optimized sweep (see EXPERIMENTS.md §Perf)
+DISPATCH_MODE = "einsum"
+
+
+def set_dispatch_mode(mode: str):
+    global DISPATCH_MODE
+    assert mode in ("einsum", "scatter", "auto"), mode
+    DISPATCH_MODE = mode
+
+
+# number of dispatch groups (launcher sets this to the data-axis size so
+# routing/capacity is per data shard — the production "grouped dispatch"
+# pattern; capacity then scales with local tokens, not the global batch)
+MOE_GROUPS = 1
+
+
+def set_moe_groups(g: int):
+    global MOE_GROUPS
+    MOE_GROUPS = max(int(g), 1)
+
+
+def apply_moe(params, x, cfg: ModelConfig, capacity_factor: float = 0.0,
+              dispatch: str = "", groups: int = 0,
+              shard_fn=lambda n, v: v):
+    """x: (B, S, D) -> (B, S, D), aux dict with load stats.
+
+    Static per-expert capacity C = ceil(tokens * top_k / E * cf); tokens
+    routed beyond an expert's capacity are dropped (overflow fallback
+    analogue). Two dispatch realizations:
+
+    * ``einsum`` — classic TPU one-hot-matmul dispatch (the baseline; the
+      same MXU scatter idiom as the SpGEMM dense accumulator). Materializes
+      (T, E, C) dispatch/combine tensors and burns 2·T·E·C·D flops.
+    * ``scatter`` — ESC-style dispatch (beyond-paper optimization): tokens
+      are placed by scatter into (E*C, D) buffers using the rank-in-expert
+      position — O(T·D) data movement, no (T, E, C) tensors. This is the
+      expand-and-compact idea from the paper's ESC accumulator applied to
+      routing.
+    """
+    dispatch = dispatch or DISPATCH_MODE
+    groups = groups or MOE_GROUPS
+    b, s, d = x.shape
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    cf = capacity_factor or cfg.moe_capacity_factor
+    all_tokens = b * s
+    if dispatch == "auto":
+        # analysis-driven kernel selection (paper workflow-selection spirit):
+        # the one-hot einsum wins at decode-sized token counts; the
+        # ESC-style scatter wins once (T, E, C) tensors would dominate.
+        dispatch = "scatter" if (all_tokens // max(groups, 1)) >= 1024 \
+            else "einsum"
+    if groups > 1 and all_tokens % groups == 0 and all_tokens >= 2 * groups:
+        xg = x.reshape(groups, all_tokens // groups, d)
+        xg = shard_fn("moe_group", xg)
+        out, aux = jax.vmap(
+            lambda xi: _moe_tokens(params, xi, cfg, cf, dispatch))(xg)
+        out = shard_fn("moe_group", out)
+        aux = {"overflow_frac": jnp.mean(aux["overflow_frac"]),
+               "aux_loss": jnp.mean(aux["aux_loss"]),
+               "capacity": aux["capacity"]}
+        return out.reshape(b, s, d), aux
+    out, aux = _moe_tokens(params, x.reshape(all_tokens, d), cfg, cf,
+                           dispatch)
+    return out.reshape(b, s, d), aux
+
+
+def _moe_tokens(params, xf, cfg: ModelConfig, cf: float, dispatch: str):
+    """Route one group of tokens: xf (T, D) -> (T, D)."""
+    tokens, d = xf.shape
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    capacity = max(int(np.ceil(tokens * k / e * cf)), 4)
+    logits = dense(xf, params["router"]).astype(jnp.float32)   # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)               # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert's buffer
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)       # (T, k, E)
+    flat = onehot.reshape(tokens * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat).reshape(tokens, k, e)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)              # (T, k)
+    keep = pos < capacity
+    overflow_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))
+
+    if dispatch == "scatter":
+        # flat slot id within the (E*C, D) buffer; dropped -> sentinel E*C
+        slot = jnp.where(keep, gate_idx * capacity + pos, e * capacity)
+        expert_in = jnp.zeros((e * capacity + 1, d), xf.dtype)
+        tok_ids = jnp.broadcast_to(jnp.arange(tokens)[:, None],
+                                   (tokens, k)).reshape(-1)
+        expert_in = expert_in.at[slot.reshape(-1)].set(
+            xf[tok_ids], mode="drop")
+        expert_in = expert_in[:-1].reshape(e, capacity, d)
+    else:
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity + 1,
+                                dtype=xf.dtype)[..., :capacity]   # (T,k,C)
+        disp = jnp.einsum("tke,tkc->tec", onehot.astype(xf.dtype), pos_oh)
+        expert_in = jnp.einsum("td,tec->ecd", xf, disp,
+                               preferred_element_type=jnp.float32
+                               ).astype(xf.dtype)
+
+    # expert MLPs (vmapped over the expert axis -> EP-shardable)
+    def expert_fn(wi, wg, wo, h):
+        a = jax.nn.silu(jnp.einsum("cd,df->cf", h, wg,
+                                   preferred_element_type=jnp.float32)
+                        .astype(h.dtype))
+        a = a * jnp.einsum("cd,df->cf", h, wi,
+                           preferred_element_type=jnp.float32).astype(h.dtype)
+        return jnp.einsum("cf,fd->cd", a, wo,
+                          preferred_element_type=jnp.float32).astype(h.dtype)
+
+    expert_out = jax.vmap(expert_fn)(
+        params["wi"].astype(xf.dtype), params["wg"].astype(xf.dtype),
+        params["wo"].astype(xf.dtype), expert_in)                # (E, C, D)
+
+    if dispatch == "scatter":
+        flat_out = expert_out.reshape(e * capacity, d)
+        slot_cl = jnp.minimum(slot, e * capacity - 1)
+        gathered = flat_out[slot_cl] * keep[..., None].astype(xf.dtype)
+        out = jnp.sum(gathered.reshape(tokens, k, d)
+                      * gate_vals[..., None].astype(xf.dtype), axis=1)
+    else:
+        combine = jnp.einsum("tke,tkc,tk->tec", onehot.astype(xf.dtype),
+                             pos_oh, gate_vals.astype(xf.dtype))
+        out = jnp.einsum("ecd,tec->td", expert_out, combine,
+                         preferred_element_type=jnp.float32).astype(xf.dtype)
+
+    if "shared" in params:
+        out = out + apply_mlp(params["shared"], xf)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(onehot.astype(jnp.float32).sum(axis=1), axis=0)
+    aux_loss = e * jnp.sum(me * ce)
+    aux = {"overflow_frac": overflow_frac, "aux_loss": aux_loss,
+           "capacity": jnp.asarray(capacity)}
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Ocean estimation-guided capacity calibration (host-side "analysis step")
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CapacityReport:
+    method: str
+    capacity_factor: float
+    est_max_load: float          # estimated max tokens routed to one expert
+    exact_max_load: Optional[float]
+    sample_fraction: float
+
+
+def calibrate_capacity(router_logits: np.ndarray, top_k: int, *,
+                       method: str = "sampled", sample_ratio: float = 0.03,
+                       sample_min: int = 600, sigma: float = 2.0,
+                       expansion: float = 1.1, seed: int = 0,
+                       validate: bool = True) -> CapacityReport:
+    """Pick a capacity factor from (a sample of) router logits.
+
+    method='exact': full histogram over all tokens — the symbolic-pass
+    analogue: exact but costs a full pass over every token's top-k.
+    method='sampled': Ocean's analysis-step analogue — only ~3% of tokens
+    are routed and histogrammed; a conservative (mean + sigma*std) estimate
+    plus the paper's expansion factor absorbs sampling error.
+    ``validate``: also compute the exact max load (costs a full pass; for
+    reporting only).
+    """
+    logits = np.asarray(router_logits, np.float32)
+    tokens, e = logits.shape
+    uniform = tokens * top_k / e
+
+    def max_load_of(idx):
+        counts = np.bincount(idx.reshape(-1), minlength=e)
+        return counts.max()
+
+    def full_topk():
+        return np.argpartition(-logits, top_k - 1, axis=-1)[:, :top_k]
+
+    if method == "exact":
+        ml = max_load_of(full_topk())
+        cf = float(ml / uniform) * expansion
+        return CapacityReport("exact", cf, float(ml), float(ml), 1.0)
+
+    n = max(min(sample_min, tokens), int(tokens * sample_ratio))
+    rng = np.random.default_rng(seed)
+    rows = rng.choice(tokens, size=min(n, tokens), replace=False)
+    sample_idx = np.argpartition(-logits[rows], top_k - 1,
+                                 axis=-1)[:, :top_k]
+    counts = np.bincount(sample_idx.reshape(-1),
+                         minlength=e).astype(np.float64)
+    scale = tokens / len(rows)
+    est = counts * scale
+    # per-expert sampling std: binomial-ish sqrt(c * scale) * scale^0.5
+    std = np.sqrt(np.maximum(counts, 1.0)) * scale
+    est_max = float((est + sigma * std).max())
+    cf = est_max / uniform * expansion
+    exact = float(max_load_of(full_topk())) if validate else None
+    return CapacityReport("sampled", float(cf), est_max, exact,
+                          len(rows) / tokens)

@@ -1,0 +1,423 @@
+"""Transformer assembly: scan-over-layer-periods decoder + enc-dec variant.
+
+Heterogeneous stacks (Gemma-3 5:1 local:global, Jamba attn/mamba 1:7 with
+MoE every 2nd layer) are expressed as a repeating *period* of layer kinds;
+parameters for each period position are stacked over period repeats and the
+stack runs under one ``lax.scan`` — keeping HLO size O(period), which is
+what makes 512-way SPMD compiles of 80-layer models tractable, and giving
+remat a natural boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mamba as mamba_mod
+from . import moe as moe_mod
+from .config import ModelConfig
+from .layers import P, dense, make_param, ones_param, rms_norm, split_tree
+
+
+class LayerKind(NamedTuple):
+    mixer: str    # 'attn' | 'mamba'
+    window: int   # 0 = global attention; >0 = sliding window
+    ff: str       # 'dense' | 'moe'
+
+
+def layer_kinds(cfg: ModelConfig) -> Tuple[LayerKind, ...]:
+    kinds = []
+    for i in range(cfg.num_layers):
+        mixer = "attn" if cfg.is_attn_layer(i) else "mamba"
+        window = cfg.window_of(i) if mixer == "attn" else 0
+        if cfg.is_moe_layer(i):
+            ff = "moe"
+        elif cfg.d_ff:
+            ff = "dense"
+        else:
+            ff = "none"  # e.g. Falcon-Mamba: the mixer is the whole layer
+        kinds.append(LayerKind(mixer, window, ff))
+    return tuple(kinds)
+
+
+def find_period(kinds: Tuple[LayerKind, ...]) -> int:
+    """Smallest cycle length of the layer-kind pattern."""
+    n = len(kinds)
+    for p in range(1, n + 1):
+        if all(kinds[i] == kinds[i % p] for i in range(n)):
+            return p
+    return n
+
+
+@dataclasses.dataclass(frozen=True)
+class StackPlan:
+    period: int
+    n_scan: int              # number of scanned periods
+    tail: Tuple[LayerKind, ...]   # leftover layers, unrolled
+    period_kinds: Tuple[LayerKind, ...]
+
+    @classmethod
+    def from_config(cls, cfg: ModelConfig) -> "StackPlan":
+        kinds = layer_kinds(cfg)
+        p = find_period(kinds)
+        n_scan = len(kinds) // p
+        return cls(period=p, n_scan=n_scan, tail=kinds[n_scan * p :],
+                   period_kinds=kinds[:p])
+
+
+# ---------------------------------------------------------------------------
+# Single layer
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, kind: LayerKind):
+    ks = jax.random.split(key, 3)
+    params = {"ln1": ones_param((cfg.d_model,), ("embed",))}
+    if kind.mixer == "attn":
+        if cfg.attention_type == "mla":
+            params["mixer"] = attn_mod.init_mla(ks[0], cfg)
+        else:
+            params["mixer"] = attn_mod.init_gqa(ks[0], cfg)
+    else:
+        params["mixer"] = mamba_mod.init_mamba(ks[0], cfg)
+    if kind.ff == "moe":
+        params["ln2"] = ones_param((cfg.d_model,), ("embed",))
+        params["ff"] = moe_mod.init_moe(ks[1], cfg)
+    elif kind.ff == "dense":
+        params["ln2"] = ones_param((cfg.d_model,), ("embed",))
+        params["ff"] = moe_mod.init_mlp(ks[1], cfg.d_model, cfg.d_ff)
+    return params
+
+
+def apply_layer(params, x, cfg: ModelConfig, kind: LayerKind, *,
+                positions, cache=None, cache_len=None, mode: str = "train",
+                causal: bool = True, shard_fn=lambda n, v: v):
+    h = rms_norm(x, params["ln1"] - 1.0, cfg.norm_eps)
+    if kind.mixer == "attn":
+        if cfg.attention_type == "mla":
+            h, new_cache = attn_mod.apply_mla(
+                params["mixer"], h, cfg, positions=positions, cache=cache,
+                cache_len=cache_len, mode=mode, window=kind.window)
+        else:
+            h, new_cache = attn_mod.apply_gqa(
+                params["mixer"], h, cfg, window=kind.window,
+                positions=positions, cache=cache, cache_len=cache_len,
+                mode=mode, causal=causal, shard_fn=shard_fn)
+    else:
+        h, new_cache = mamba_mod.apply_mamba(
+            params["mixer"], h, cfg, cache=cache, mode=mode)
+    x = x + shard_fn("residual", h)
+    aux = None
+    if kind.ff != "none":
+        h = rms_norm(x, params["ln2"] - 1.0, cfg.norm_eps)
+        if kind.ff == "moe":
+            h, aux = moe_mod.apply_moe(params["ff"], h, cfg,
+                                       shard_fn=shard_fn)
+        else:
+            h = moe_mod.apply_mlp(params["ff"], h)
+        x = x + shard_fn("residual", h)
+    return x, new_cache, aux
+
+
+def init_layer_cache(cfg: ModelConfig, kind: LayerKind, batch: int,
+                     max_len: int, dtype):
+    if kind.mixer == "attn":
+        if cfg.attention_type == "mla":
+            return {
+                "kv_lat": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+            }
+        dh = cfg.head_dim_
+        return {"k": jnp.zeros((batch, max_len, cfg.num_kv_heads, dh), dtype),
+                "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, dh), dtype)}
+    return mamba_mod.init_mamba_cache(cfg, batch, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only model
+# ---------------------------------------------------------------------------
+
+def init_decoder(key, cfg: ModelConfig):
+    plan = StackPlan.from_config(cfg)
+    keys = jax.random.split(key, 3 + len(plan.tail))
+    params = {
+        "embed": make_param(keys[0], (cfg.vocab_size, cfg.d_model),
+                            ("vocab", "embed"), scale=cfg.d_model ** -0.5),
+        "final_norm": ones_param((cfg.d_model,), ("embed",)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = make_param(keys[1], (cfg.d_model, cfg.vocab_size),
+                                       ("embed", "vocab"))
+    blocks = []
+    for j, kind in enumerate(plan.period_kinds):
+        layer_keys = jax.random.split(
+            jax.random.fold_in(keys[2], j), plan.n_scan)
+        stacked = jax.vmap(lambda k: init_layer(k, cfg, kind))(layer_keys)
+        # vmapped init produces stacked P leaves with value stacked but axes
+        # vmapped too; rebuild P leaves with a leading 'layers' axis name
+        stacked = jax.tree_util.tree_map(
+            lambda p: P(p.value, ("layers",) + tuple(p.axes)),
+            stacked, is_leaf=lambda x: isinstance(x, P))
+        blocks.append(stacked)
+    params["blocks"] = blocks
+    params["tail"] = [init_layer(keys[3 + t], cfg, kind)
+                      for t, kind in enumerate(plan.tail)]
+    return params
+
+
+def _is_p(x):
+    return isinstance(x, P)
+
+
+def init_decoder_cache(cfg: ModelConfig, batch: int, max_len: int,
+                       dtype=jnp.bfloat16):
+    plan = StackPlan.from_config(cfg)
+    blocks = []
+    for kind in plan.period_kinds:
+        one = init_layer_cache(cfg, kind, batch, max_len, dtype)
+        stacked = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (plan.n_scan,) + a.shape),
+            one)
+        blocks.append(stacked)
+    tail = [init_layer_cache(cfg, kind, batch, max_len, dtype)
+            for kind in plan.tail]
+    return {"blocks": blocks, "tail": tail}
+
+
+def apply_decoder(params, inputs, cfg: ModelConfig, *, mode: str = "train",
+                  caches=None, cache_len=None, positions=None,
+                  remat: str = "none", shard_fn=lambda n, v: v,
+                  return_hidden: bool = False):
+    """inputs: (B, L) int tokens, or (B, L, D) float embeddings (stub
+    frontends). Returns (logits, new_caches, aux_losses); with
+    ``return_hidden`` the first element is the final hidden state instead
+    (callers fuse their own projection — e.g. chunked CE avoids ever
+    materializing (B, L, vocab) logits)."""
+    plan = StackPlan.from_config(cfg)
+    if inputs.dtype in (jnp.int32, jnp.int64):
+        x = params["embed"].astype(cfg.compute_dtype)[inputs]
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+    else:
+        x = inputs.astype(cfg.compute_dtype)
+    x = shard_fn("activations", x)
+    b, l = x.shape[0], x.shape[1]
+    if positions is None:
+        if mode == "decode":
+            positions = jnp.asarray(cache_len).reshape(-1)[:, None] * \
+                jnp.ones((b, 1), jnp.int32)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32),
+                                         (b, l))
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def run_block(x, block_params, block_cache, kinds):
+        new_caches = [] if block_cache is not None else None
+        aux_acc = jnp.zeros((), jnp.float32)
+        for j, kind in enumerate(kinds):
+            cache_j = block_cache[j] if block_cache is not None else None
+            x, nc, aux = apply_layer(
+                block_params[j], x, cfg, kind, positions=positions,
+                cache=cache_j, cache_len=cache_len, mode=mode,
+                shard_fn=shard_fn)
+            if aux is not None:
+                aux_acc += aux["aux_loss"]
+            if new_caches is not None:
+                new_caches.append(nc)
+        return x, new_caches, aux_acc
+
+    if plan.n_scan > 0:
+        def scan_body(carry, xs):
+            x, aux_sum = carry
+            if caches is not None:
+                bp, bc = xs
+            else:
+                bp, bc = xs, None
+            x = shard_fn("activations", x)
+            x, ncs, aux_acc = run_block(x, bp, bc, plan.period_kinds)
+            return (x, aux_sum + aux_acc), ncs
+
+        body = scan_body
+        if remat == "full":
+            body = jax.checkpoint(scan_body,
+                                  prevent_cse=False)
+        elif remat == "dots":
+            body = jax.checkpoint(
+                scan_body, prevent_cse=False,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+        xs = (params["blocks"], caches["blocks"]) if caches is not None \
+            else params["blocks"]
+        (x, aux_total), new_block_caches = jax.lax.scan(
+            body, (x, aux_total), xs)
+    else:
+        new_block_caches = caches["blocks"] if caches is not None else None
+
+    new_tail = [] if caches is not None else None
+    for t, kind in enumerate(plan.tail):
+        cache_t = caches["tail"][t] if caches is not None else None
+        x, nc, aux = apply_layer(params["tail"][t], x, cfg, kind,
+                                 positions=positions, cache=cache_t,
+                                 cache_len=cache_len, mode=mode,
+                                 shard_fn=shard_fn)
+        if aux is not None:
+            aux_total += aux["aux_loss"]
+        if new_tail is not None:
+            new_tail.append(nc)
+
+    x = rms_norm(x, params["final_norm"] - 1.0, cfg.norm_eps)
+    new_caches = None
+    if caches is not None:
+        new_caches = {"blocks": new_block_caches, "tail": new_tail}
+    if return_hidden:
+        return x, new_caches, aux_total
+    logits = unembed(params, x, cfg, shard_fn=shard_fn)
+    logits = shard_fn("logits", logits)
+    return logits, new_caches, aux_total
+
+
+def unembed(params, x, cfg: ModelConfig, shard_fn=lambda n, v: v):
+    """Final projection to vocab logits (f32).
+
+    ``shard_fn('unembed_weights', w)`` lets the sharding policy re-constrain
+    the projection weights (e.g. gather the FSDP 'embed' shards) so XLA
+    all-gathers the small weight matrix instead of all-reducing the huge
+    partial-logits tensor.
+    """
+    if cfg.tie_embeddings:
+        w = shard_fn("unembed_weights", params["embed"])
+        return jnp.einsum("...d,vd->...v", x, w.astype(x.dtype),
+                          preferred_element_type=jnp.float32)
+    w = shard_fn("unembed_weights", params["lm_head"])
+    return jax.lax.dot_general(
+        x, w.astype(x.dtype),
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (Whisper): unrolled (small layer counts)
+# ---------------------------------------------------------------------------
+
+def init_encdec(key, cfg: ModelConfig):
+    enc_l = cfg.encoder_layers or cfg.num_layers
+    dec_l = cfg.decoder_layers or cfg.num_layers
+    keys = jax.random.split(key, 4)
+    kind = LayerKind("attn", 0, "dense")
+    enc_keys = jax.random.split(keys[0], enc_l)
+    dec_keys = jax.random.split(keys[1], dec_l)
+    params = {
+        "embed": make_param(keys[2], (cfg.vocab_size, cfg.d_model),
+                            ("vocab", "embed"), scale=cfg.d_model ** -0.5),
+        "enc_final": ones_param((cfg.d_model,), ("embed",)),
+        "dec_final": ones_param((cfg.d_model,), ("embed",)),
+        "encoder": [init_layer(k, cfg, kind) for k in enc_keys],
+        "decoder": [init_layer(k, cfg, kind) for k in dec_keys],
+        "cross": [attn_mod.init_cross_attention(jax.random.fold_in(keys[3], i),
+                                                cfg)
+                  for i in range(dec_l)],
+        "cross_ln": [ones_param((cfg.d_model,), ("embed",))
+                     for _ in range(dec_l)],
+    }
+    return params
+
+
+def apply_encoder(params, audio_embeds, cfg: ModelConfig,
+                  shard_fn=lambda n, v: v, remat: str = "full"):
+    """audio_embeds: (B, S, D) precomputed frame embeddings (stub frontend).
+
+    Layers are unrolled (small count), so each is individually rematerialized
+    — without this the 6 encoder layers at 32k frames keep every attention
+    intermediate live for the backward pass.
+    """
+    x = audio_embeds.astype(cfg.compute_dtype)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    kind = LayerKind("attn", 0, "dense")
+
+    def layer(lp, x):
+        return apply_layer(lp, x, cfg, kind, positions=positions,
+                           mode="train", causal=False, shard_fn=shard_fn)[0]
+
+    if remat == "full":
+        layer = jax.checkpoint(layer, prevent_cse=False)
+    for lp in params["encoder"]:
+        x = layer(lp, x)
+    return rms_norm(x, params["enc_final"] - 1.0, cfg.norm_eps)
+
+
+def apply_encdec(params, audio_embeds, tokens, cfg: ModelConfig, *,
+                 mode: str = "train", caches=None, cache_len=None,
+                 enc_out=None, shard_fn=lambda n, v: v,
+                 remat: str = "full"):
+    """Returns (logits, new_caches, aux). caches: {'self': [...], 'cross':
+    [...]} — cross KV computed once at prefill."""
+    if enc_out is None and not (mode == "decode" and caches is not None):
+        enc_out = apply_encoder(params, audio_embeds, cfg, shard_fn,
+                                remat=remat if mode == "train" else "none")
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    b, l = tokens.shape
+    if mode == "decode":
+        positions = jnp.asarray(cache_len).reshape(-1)[:, None] * \
+            jnp.ones((b, 1), jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32), (b, l))
+    kind = LayerKind("attn", 0, "dense")
+    new_self = [] if caches is not None else None
+    cross_kv_list = []
+
+    def dec_layer(lp, cross_p, cross_ln, x, cache_i, cross_kv):
+        h = rms_norm(x, lp["ln1"] - 1.0, cfg.norm_eps)
+        h, nc = attn_mod.apply_gqa(lp["mixer"], h, cfg, window=0,
+                                   positions=positions, cache=cache_i,
+                                   cache_len=cache_len, mode=mode)
+        x = x + h
+        h = rms_norm(x, cross_ln - 1.0, cfg.norm_eps)
+        h = attn_mod.apply_cross_attention(cross_p, h, cross_kv, cfg)
+        x = x + h
+        h = rms_norm(x, lp["ln2"] - 1.0, cfg.norm_eps)
+        x = x + moe_mod.apply_mlp(lp["ff"], h)
+        return x, nc
+
+    if mode == "train" and remat == "full":
+        dec_layer = jax.checkpoint(dec_layer, prevent_cse=False)
+
+    for i, lp in enumerate(params["decoder"]):
+        cache_i = caches["self"][i] if caches is not None else None
+        if caches is not None and mode == "decode":
+            cross_kv = caches["cross"][i]
+        else:
+            cross_kv = attn_mod.encode_cross_kv(params["cross"][i], enc_out,
+                                                cfg)
+        cross_kv_list.append(cross_kv)
+        x, nc = dec_layer(lp, params["cross"][i], params["cross_ln"][i], x,
+                          cache_i, cross_kv)
+        if new_self is not None:
+            new_self.append(nc)
+    x = rms_norm(x, params["dec_final"] - 1.0, cfg.norm_eps)
+    logits = jnp.einsum("bld,vd->blv", x, params["embed"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    new_caches = None
+    if caches is not None:
+        new_caches = {"self": new_self, "cross": cross_kv_list}
+    return logits, new_caches, jnp.zeros((), jnp.float32)
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      src_len: int, dtype=jnp.bfloat16):
+    dec_l = cfg.decoder_layers or cfg.num_layers
+    kind = LayerKind("attn", 0, "dense")
+    dh = cfg.head_dim_
+    return {
+        "self": [init_layer_cache(cfg, kind, batch, max_len, dtype)
+                 for _ in range(dec_l)],
+        "cross": [{"k": jnp.zeros((batch, src_len, cfg.num_kv_heads, dh),
+                                  dtype),
+                   "v": jnp.zeros((batch, src_len, cfg.num_kv_heads, dh),
+                                  dtype)}
+                  for _ in range(dec_l)],
+    }

@@ -1,0 +1,13 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, warmup: int, total: int, min_ratio: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = (step + 1.0) / jnp.maximum(warmup, 1)
+    progress = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    return jnp.where(step < warmup, warm, cos)

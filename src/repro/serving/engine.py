@@ -1,0 +1,113 @@
+"""Batched serving engine: static-batch continuous batching over a shared
+KV cache.
+
+Slots hold independent requests; finished slots are refilled from the queue
+each decode step (continuous batching). Prefill runs per-request into the
+slot's cache row; decode steps the whole batch. Greedy sampling (argmax) by
+default — tests rely on determinism.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (L,) int32
+    max_new_tokens: int
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_slots: int = 4
+    max_len: int = 256
+    eos_token: int = -1           # -1: never stop early
+    cache_dtype: str = "float32"
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg
+        b, s = serve_cfg.batch_slots, serve_cfg.max_len
+        self.caches = lm.init_caches(cfg, b, s,
+                                     dtype=jnp.dtype(serve_cfg.cache_dtype))
+        self._prefill_one = jax.jit(self._make_prefill_one())
+        self._decode = jax.jit(lm.make_decode_step(cfg))
+        self.slot_req: List[Optional[Request]] = [None] * b
+        self.slot_len = np.zeros(b, np.int32)
+        self.slot_next = np.zeros(b, np.int32)
+        self.queue: List[Request] = []
+
+    def _make_prefill_one(self):
+        prefill = lm.make_prefill_step(self.cfg)
+
+        def one(params, caches, tokens, slot):
+            """Prefill a single slot: slice its cache row, run, write back."""
+            row = lm.slice_caches(caches, slot, 1)
+            logits, row = prefill(params, row, tokens)
+            caches = lm.update_caches(caches, row, slot)
+            return logits[0], caches
+
+        return one
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _fill_slots(self):
+        for i in range(self.scfg.batch_slots):
+            if self.slot_req[i] is None and self.queue:
+                req = self.queue.pop(0)
+                toks = jnp.asarray(req.prompt, jnp.int32)[None]
+                logits, self.caches = self._prefill_one(
+                    self.params, self.caches, toks, i)
+                nxt = int(jnp.argmax(logits[-1]))
+                req.output.append(nxt)
+                self.slot_req[i] = req
+                self.slot_len[i] = len(req.prompt)
+                self.slot_next[i] = nxt
+
+    def step(self):
+        """One continuous-batching iteration: refill + one decode step."""
+        self._fill_slots()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return False
+        token = jnp.asarray(self.slot_next.reshape(-1, 1), jnp.int32)
+        lens = jnp.asarray(self.slot_len, jnp.int32)
+        logits, self.caches = self._decode(self.params, self.caches, token,
+                                           lens)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for i in active:
+            req = self.slot_req[i]
+            self.slot_len[i] += 1
+            tok = int(nxt[i])
+            req.output.append(tok)
+            self.slot_next[i] = tok
+            hit_eos = (self.scfg.eos_token >= 0 and tok == self.scfg.eos_token)
+            if (len(req.output) >= req.max_new_tokens or hit_eos
+                    or self.slot_len[i] + 1 >= self.scfg.max_len):
+                req.done = True
+                self.slot_req[i] = None
+                self.slot_len[i] = 0
+                self.slot_next[i] = 0
+        return True
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        for r in requests:
+            self.submit(r)
+        while self.queue or any(r is not None for r in self.slot_req):
+            self.step()
+        return requests

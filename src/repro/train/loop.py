@@ -1,0 +1,99 @@
+"""Fault-tolerant training loop.
+
+Production behaviours implemented here:
+* checkpoint/restart — resumes params, optimizer state and the data cursor
+  from the latest atomic checkpoint (including onto a different mesh);
+* async checkpointing — IO overlaps compute;
+* straggler/hang mitigation — per-step wall-clock watchdog: steps that
+  exceed ``watchdog_factor`` x the trailing median are logged and counted
+  (on a real fleet this signal feeds preemption/evict policies; here it is
+  surfaced in metrics so tests can assert on it);
+* deterministic data — the pipeline is a pure function of (seed, step), so
+  restart never replays or skips a batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticLM
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 100
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    watchdog_factor: float = 3.0
+    watchdog_window: int = 20
+
+
+def train_loop(train_step: Callable, params, opt_state, data_cfg: DataConfig,
+               loop_cfg: TrainLoopConfig, *, host_id: int = 0,
+               num_hosts: int = 1, log_fn: Callable = print,
+               make_batch: Optional[Callable] = None) -> Dict[str, Any]:
+    """Runs ``train_step`` for ``total_steps`` with restart support.
+
+    Returns {'params', 'opt_state', 'metrics_history', 'resumed_from',
+    'straggler_steps'}.
+    """
+    gen = SyntheticLM(data_cfg)
+    mgr = None
+    start_step = 0
+    if loop_cfg.checkpoint_dir:
+        mgr = CheckpointManager(loop_cfg.checkpoint_dir,
+                                keep=loop_cfg.keep_checkpoints)
+        last = mgr.latest_step()
+        if last is not None:
+            (params, opt_state), _ = mgr.restore((params, opt_state))
+            start_step = last
+            log_fn(f"[train] resumed from checkpoint step {last}")
+
+    step_fn = train_step if hasattr(train_step, "lower") else \
+        jax.jit(train_step)
+    history: List[Dict[str, float]] = []
+    durations: List[float] = []
+    stragglers = 0
+
+    for step in range(start_step, loop_cfg.total_steps):
+        batch_np = gen.batch(step, host_id, num_hosts)
+        batch = {"tokens": batch_np} if make_batch is None \
+            else make_batch(batch_np)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+
+        if len(durations) >= 5:
+            med = statistics.median(durations[-loop_cfg.watchdog_window:])
+            if dt > loop_cfg.watchdog_factor * med:
+                stragglers += 1
+                log_fn(f"[watchdog] step {step} took {dt:.3f}s "
+                       f"(median {med:.3f}s) — straggler flagged")
+        durations.append(dt)
+
+        if step % loop_cfg.log_every == 0 or step == loop_cfg.total_steps - 1:
+            h = {k: float(v) for k, v in metrics.items()}
+            h["step"] = step
+            h["step_time_s"] = dt
+            history.append(h)
+            log_fn(f"[train] step {step} loss {h['loss']:.4f} "
+                   f"({dt*1000:.0f} ms)")
+
+        if mgr and (step + 1) % loop_cfg.checkpoint_every == 0:
+            mgr.save_async(step + 1, (params, opt_state))
+
+    if mgr:
+        mgr.save_async(loop_cfg.total_steps, (params, opt_state))
+        mgr.wait()
+    return {"params": params, "opt_state": opt_state,
+            "metrics_history": history, "resumed_from": start_step,
+            "straggler_steps": stragglers}

@@ -1,0 +1,80 @@
+"""HLL estimator unit + property tests."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats, hll
+
+
+def true_union_cardinality(a, b):
+    A = np.abs(np.asarray(a.to_dense())) > 0
+    B = np.abs(np.asarray(b.to_dense())) > 0
+    return (A.astype(np.int64) @ B.astype(np.int64) > 0).sum(axis=1)
+
+
+@pytest.mark.parametrize("m_regs", [32, 64, 128])
+def test_estimate_accuracy(m_regs):
+    a = formats.random_uniform_csr(10, 300, 400, 12.0)
+    b = formats.random_uniform_csr(11, 400, 3000, 20.0)
+    sk = hll.sketch_rows(b, m_regs)
+    est = np.asarray(hll.estimate_row_nnz(a, sk, b.n))
+    true = true_union_cardinality(a, b)
+    mask = true > 0
+    rel = np.abs(est[mask] - true[mask]) / true[mask]
+    # paper Fig. 8: mean rel err ~0.13/0.10/0.07; allow slack for small set
+    bound = {32: 0.22, 64: 0.17, 128: 0.13}[m_regs]
+    assert rel.mean() < bound, rel.mean()
+
+
+def test_merge_property_max():
+    """merge(sketch(X), sketch(Y)) == sketch(X u Y) — elementwise max."""
+    rng = np.random.default_rng(0)
+    x = rng.choice(10_000, 500, replace=False).astype(np.int32)
+    y = rng.choice(10_000, 700, replace=False).astype(np.int32)
+    m = 64
+
+    def sketch_of(ids):
+        csr = formats.csr_from_arrays(
+            np.array([0, len(ids)]), ids, np.ones(len(ids), np.float32),
+            (1, 10_000))
+        return np.asarray(hll.sketch_rows(csr, m))[0]
+
+    sx, sy = sketch_of(x), sketch_of(np.setdiff1d(y, x))
+    sxy = sketch_of(np.union1d(x, y))
+    assert np.array_equal(np.maximum(sx, sy), sxy)
+
+
+def test_estimate_monotone_clip():
+    regs = jnp.zeros((4, 64), jnp.int32)
+    est = hll.estimate_cardinality(regs)
+    assert np.allclose(np.asarray(est), 0.0, atol=1e-3)  # empty set -> ~0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 2**20), min_size=1, max_size=2000),
+       st.sampled_from([32, 64, 128]))
+def test_estimate_error_bound_property(ids, m_regs):
+    """Estimate should be within ~6 sigma of truth for arbitrary id sets."""
+    ids = np.unique(np.asarray(ids, np.int32))
+    csr = formats.csr_from_arrays(
+        np.array([0, len(ids)]), ids, np.ones(len(ids), np.float32),
+        (1, 2**20 + 1))
+    est = float(np.asarray(hll.estimate_cardinality(
+        hll.sketch_rows(csr, m_regs)))[0])
+    true = len(ids)
+    sigma = 1.04 / np.sqrt(m_regs)
+    assert est >= 0
+    assert abs(est - true) <= max(6 * sigma * true, 8.0)
+
+
+def test_cohen_estimator_sane():
+    b = formats.random_uniform_csr(3, 200, 1000, 15.0)
+    a = formats.random_uniform_csr(4, 100, 200, 10.0)
+    mins = hll.cohen_build(b.indptr, b.indices, k=16, num_rows=b.m, n_cols=b.n)
+    merged = hll.cohen_merge(a.indptr, a.indices, mins, num_rows_a=a.m)
+    est = np.asarray(hll.cohen_estimate(merged, clip_max=b.n))
+    true = true_union_cardinality(a, b)
+    mask = true > 0
+    rel = np.abs(est[mask] - true[mask]) / true[mask]
+    assert rel.mean() < 0.5

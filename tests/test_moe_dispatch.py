@@ -1,0 +1,73 @@
+"""MoE dispatch realizations: the ESC-style scatter path must match the
+one-hot einsum path exactly (fwd + grad), with and without grouping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm, moe
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get_config("olmoe-1b-7b", smoke=True)
+    params, _ = lm.init_model(jax.random.PRNGKey(0), cfg)
+    layer = jax.tree_util.tree_map(lambda a: a[0],
+                                   params["blocks"][0]["ff"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+    return cfg, layer, x
+
+
+def test_scatter_matches_einsum_forward(setup):
+    cfg, layer, x = setup
+    o1, a1 = moe.apply_moe(layer, x, cfg, dispatch="einsum")
+    o2, a2 = moe.apply_moe(layer, x, cfg, dispatch="scatter")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+    assert float(a1["overflow_frac"]) == float(a2["overflow_frac"])
+
+
+def test_scatter_matches_einsum_grad(setup):
+    cfg, layer, x = setup
+
+    def loss(p, mode):
+        o, _ = moe.apply_moe(p, x, cfg, dispatch=mode)
+        return jnp.sum(o ** 2)
+
+    g1 = jax.grad(loss)(layer, "einsum")
+    g2 = jax.grad(loss)(layer, "scatter")
+    for k in g1:
+        scale = float(jnp.abs(g1[k]).max()) + 1e-9
+        rel = float(jnp.abs(g1[k] - g2[k]).max()) / scale
+        assert rel < 1e-5, (k, rel)
+
+
+def test_grouped_matches_ungrouped_no_drops(setup):
+    cfg, layer, x = setup
+    o1, _ = moe.apply_moe(layer, x, cfg, dispatch="scatter", groups=1,
+                          capacity_factor=64.0)
+    o2, _ = moe.apply_moe(layer, x, cfg, dispatch="scatter", groups=4,
+                          capacity_factor=64.0)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-4)
+
+
+def test_auto_dispatch_selects_by_tokens(setup):
+    cfg, layer, x = setup
+    # small token count -> einsum path; just ensure both run and agree
+    o_auto, _ = moe.apply_moe(layer, x, cfg, dispatch="auto",
+                              capacity_factor=64.0)
+    o_ein, _ = moe.apply_moe(layer, x, cfg, dispatch="einsum",
+                             capacity_factor=64.0)
+    np.testing.assert_allclose(np.asarray(o_auto), np.asarray(o_ein),
+                               atol=1e-5)
+
+
+def test_capacity_drop_monotone(setup):
+    cfg, layer, x = setup
+    drops = []
+    for cf in (0.25, 0.5, 1.0, 8.0):
+        _, aux = moe.apply_moe(layer, x, cfg, dispatch="scatter",
+                               capacity_factor=cf)
+        drops.append(float(aux["overflow_frac"]))
+    assert drops == sorted(drops, reverse=True)
+    assert drops[-1] == 0.0

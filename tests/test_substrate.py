@@ -1,0 +1,192 @@
+"""Training substrate tests: data pipeline, checkpointing, train loop
+fault tolerance, serving engine, MoE capacity calibration."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint import CheckpointManager, restore_checkpoint, \
+    save_checkpoint
+from repro.checkpoint.store import latest_step
+from repro.data import DataConfig, SyntheticLM
+from repro.models import lm, moe
+from repro.optim import AdamWConfig, adamw_init
+from repro.train import TrainLoopConfig, train_loop
+
+
+def test_data_deterministic_and_resumable():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=8, seed=3)
+    gen = SyntheticLM(cfg)
+    a = gen.batch(5)
+    b = gen.batch(5)
+    np.testing.assert_array_equal(a, b)           # pure function of step
+    assert not np.array_equal(gen.batch(5), gen.batch(6))
+    # host sharding partitions the batch
+    h0 = gen.batch(5, host_id=0, num_hosts=2)
+    h1 = gen.batch(5, host_id=1, num_hosts=2)
+    assert h0.shape[0] == 4 and not np.array_equal(h0, h1)
+
+
+def test_data_has_learnable_structure():
+    cfg = DataConfig(vocab_size=100, seq_len=64, global_batch=16)
+    gen = SyntheticLM(cfg)
+    batch = gen.batch(0)
+    # markov data: per-state successor entropy must be far below uniform
+    assert len(np.unique(batch)) <= cfg.num_states
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10.0), "b": [jnp.ones((3, 3)),
+                                         jnp.zeros(2, jnp.int32)]}
+    save_checkpoint(str(tmp_path), 7, tree)
+    restored, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 7
+    for x, y in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_retention_and_atomicity(tmp_path):
+    tree = {"w": jnp.zeros(4)}
+    for s in [1, 2, 3, 4, 5]:
+        save_checkpoint(str(tmp_path), s, tree, keep=2)
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert kept == ["step_00000004", "step_00000005"]
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_checkpoint_async_manager(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save_async(1, {"w": jnp.ones(8)})
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def _tiny_cfg():
+    return configs.get_config("qwen3-1.7b", smoke=True)
+
+
+def test_train_loop_checkpoint_restart(tmp_path):
+    """Kill-and-restart: the second loop must resume from the checkpoint and
+    end at the same state as an uninterrupted run (deterministic data)."""
+    cfg = _tiny_cfg()
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                          global_batch=4, seed=1)
+    step = lm.make_train_step(cfg, AdamWConfig(lr=1e-3), remat="none",
+                              schedule_kwargs={"warmup": 2, "total": 20})
+    jstep = jax.jit(step)
+
+    def fresh():
+        params, _ = lm.init_model(jax.random.PRNGKey(0), cfg)
+        return params, adamw_init(params)
+
+    # uninterrupted 8 steps
+    p, o = fresh()
+    ref = train_loop(jstep, p, o, data_cfg,
+                     TrainLoopConfig(total_steps=8, log_every=100))
+
+    # interrupted at 4, resumed to 8
+    ck = str(tmp_path / "ck")
+    p, o = fresh()
+    train_loop(jstep, p, o, data_cfg,
+               TrainLoopConfig(total_steps=4, checkpoint_dir=ck,
+                               checkpoint_every=4, log_every=100))
+    p, o = fresh()  # fresh state is overwritten by the checkpoint restore
+    out = train_loop(jstep, p, o, data_cfg,
+                     TrainLoopConfig(total_steps=8, checkpoint_dir=ck,
+                                     checkpoint_every=4, log_every=100))
+    assert out["resumed_from"] == 4
+    for a, b in zip(jax.tree_util.tree_leaves(ref["params"]),
+                    jax.tree_util.tree_leaves(out["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_train_loss_decreases():
+    cfg = _tiny_cfg()
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                          global_batch=8, seed=2)
+    params, _ = lm.init_model(jax.random.PRNGKey(0), cfg)
+    step = lm.make_train_step(cfg, AdamWConfig(lr=3e-3), remat="none",
+                              schedule_kwargs={"warmup": 5, "total": 60})
+    out = train_loop(jax.jit(step), params, adamw_init(params), data_cfg,
+                     TrainLoopConfig(total_steps=60, log_every=10),
+                     log_fn=lambda *_: None)
+    first = out["metrics_history"][0]["loss"]
+    last = out["metrics_history"][-1]["loss"]
+    assert last < first * 0.8, (first, last)
+
+
+def test_microbatch_equivalence():
+    """Gradient accumulation must match the full-batch step (same data)."""
+    cfg = _tiny_cfg()
+    params, _ = lm.init_model(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 17), 0,
+                                cfg.vocab_size)
+    s_full = lm.make_train_step(cfg, AdamWConfig(lr=1e-3), remat="none")
+    s_micro = lm.make_train_step(cfg, AdamWConfig(lr=1e-3), remat="none",
+                                 microbatch=2)
+    p1, _, m1 = jax.jit(s_full)(params, opt, {"tokens": tokens})
+    p2, _, m2 = jax.jit(s_micro)(params, opt, {"tokens": tokens})
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-4)
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_serving_engine_continuous_batching():
+    from repro.serving import Request, ServeConfig, ServingEngine
+    cfg = _tiny_cfg()
+    params, _ = lm.init_model(jax.random.PRNGKey(0), cfg)
+    engine = ServingEngine(cfg, params,
+                           ServeConfig(batch_slots=2, max_len=64,
+                                       cache_dtype="float32"))
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, 8)
+                    .astype(np.int32), max_new_tokens=6) for i in range(5)]
+    engine.run(reqs)
+    assert all(r.done and len(r.output) == 6 for r in reqs)
+    # greedy decoding must be deterministic: rerun first request alone
+    engine2 = ServingEngine(cfg, params,
+                            ServeConfig(batch_slots=2, max_len=64,
+                                        cache_dtype="float32"))
+    r2 = Request(uid=99, prompt=reqs[0].prompt, max_new_tokens=6)
+    engine2.run([r2])
+    assert r2.output == reqs[0].output
+
+
+def test_moe_capacity_calibration():
+    """Ocean-style sampled capacity estimation vs exact histogram."""
+    rng = np.random.default_rng(0)
+    tokens, e, k = 20_000, 16, 2
+    # skewed router: some experts much more popular
+    logits = rng.standard_normal((tokens, e)).astype(np.float32)
+    logits[:, 0] += 1.5
+    exact = moe.calibrate_capacity(logits, k, method="exact")
+    sampled = moe.calibrate_capacity(logits, k, method="sampled")
+    assert sampled.sample_fraction < 0.1
+    # conservative: sampled capacity covers the true max load
+    assert sampled.est_max_load >= 0.95 * exact.exact_max_load
+    # but not absurdly larger
+    assert sampled.capacity_factor < 4 * exact.capacity_factor
+
+
+def test_moe_overflow_drop_and_aux():
+    cfg = configs.get_config("olmoe-1b-7b", smoke=True)
+    params, _ = lm.init_model(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    moe_params = params["blocks"][0]["ff"]
+    one = jax.tree_util.tree_map(lambda a: a[0], moe_params)
+    out, aux = moe.apply_moe(one, x.astype(jnp.float32), cfg,
+                             capacity_factor=0.5)
+    assert out.shape == x.shape
+    assert float(aux["overflow_frac"]) > 0  # forced drops at cf=0.5
+    out2, aux2 = moe.apply_moe(one, x.astype(jnp.float32), cfg,
+                               capacity_factor=64.0)
+    assert float(aux2["overflow_frac"]) == 0.0
