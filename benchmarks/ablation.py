@@ -29,9 +29,10 @@ def run(rows: list, scale: int = 1):
     for name, a in suite(scale):
         fl = flops_of(a, a)
         for v, kw in VERSIONS.items():
-            t = timeit(lambda: workflow.ocean_spgemm(a, a, **kw))
+            # cache=False: measure the algorithm, not the plan cache
+            t = timeit(lambda: workflow.ocean_spgemm(a, a, cache=False, **kw))
             gf[v].append(fl / t / 1e9)
-            _, rep = workflow.ocean_spgemm(a, a, **kw)
+            _, rep = workflow.ocean_spgemm(a, a, cache=False, **kw)
             tot = max(rep.total_seconds, 1e-9)
             for st, sec in rep.stage_seconds.items():
                 stage_shares[v].setdefault(st, []).append(sec / tot)

@@ -8,6 +8,10 @@ import numpy as np
 
 from repro.core import formats
 
+# Set by ``run.py --smoke``: shrink the suite and skip warmup so a CI dry
+# run finishes in seconds while exercising the same code paths.
+SMOKE = False
+
 
 def flops_of(a, b) -> int:
     """Paper convention: FLOPs = 2 x number of intermediate products."""
@@ -19,6 +23,8 @@ def flops_of(a, b) -> int:
 
 def timeit(fn: Callable, warmup: int = 2, iters: int = 3) -> float:
     """Median wall-clock seconds."""
+    if SMOKE:
+        warmup, iters = 0, 1
     for _ in range(warmup):
         fn()
     ts = []
@@ -30,7 +36,11 @@ def timeit(fn: Callable, warmup: int = 2, iters: int = 3) -> float:
 
 
 def suite(scale: int = 1) -> List[Tuple[str, formats.CSR]]:
-    return formats.make_suite(scale=scale)
+    full = formats.make_suite(scale=scale)
+    if SMOKE:
+        keep = ("uniform_small", "banded_narrow", "hypersparse")
+        return [(n, m) for n, m in full if n in keep]
+    return full
 
 
 def geomean(xs) -> float:

@@ -16,33 +16,40 @@ GFLOPS uses the paper's 2 x products FLOP convention. Wall times are CPU
 """
 from __future__ import annotations
 
-from repro.core import workflow
-from repro.core.analysis import OceanConfig
+from repro.core import planner, workflow
 
 from .common import flops_of, geomean, suite, timeit
 
 
 def run(rows: list, scale: int = 1):
-    per_method = {m: [] for m in ("ocean", "two_pass", "upper_bound",
-                                  "esc_global")}
+    per_method = {m: [] for m in ("ocean", "ocean_cached", "two_pass",
+                                  "upper_bound", "esc_global")}
+    setup_fresh, setup_cached = [], []
     for name, a in suite(scale):
         fl = flops_of(a, a)
+        cache = planner.PlanCache()
 
+        # fresh-path methods plan from scratch on every call (cache=False)
+        # so the numbers measure the algorithm, as the seed workflow did
         def ocean():
-            workflow.ocean_spgemm(a, a)
+            workflow.ocean_spgemm(a, a, cache=False)
+
+        def ocean_cached():
+            workflow.ocean_spgemm(a, a, cache=cache)
 
         def two_pass():
             workflow.ocean_spgemm(a, a, force_workflow="symbolic",
-                                  assisted=False, hybrid=False)
+                                  assisted=False, hybrid=False, cache=False)
 
         def upper_bound():
             workflow.ocean_spgemm(a, a, force_workflow="upper_bound",
-                                  assisted=False, hybrid=True)
+                                  assisted=False, hybrid=True, cache=False)
 
         def esc_global():
             workflow.spgemm_reference(a, a)
 
-        for mname, fn in [("ocean", ocean), ("two_pass", two_pass),
+        for mname, fn in [("ocean", ocean), ("ocean_cached", ocean_cached),
+                          ("two_pass", two_pass),
                           ("upper_bound", upper_bound),
                           ("esc_global", esc_global)]:
             t = timeit(fn)
@@ -50,6 +57,15 @@ def run(rows: list, scale: int = 1):
             per_method[mname].append(gflops)
             rows.append((f"overall/{name}/{mname}", t * 1e6,
                          f"gflops={gflops:.3f}"))
+
+        # host-side planning cost: fresh build vs plan-cache hit
+        _, rep_fresh = workflow.ocean_spgemm(a, a, cache=False)
+        _, rep_hit = workflow.ocean_spgemm(a, a, cache=cache)
+        assert rep_hit.plan_cache_hit
+        setup_fresh.append(rep_fresh.setup_seconds)
+        setup_cached.append(rep_hit.setup_seconds)
+        rows.append((f"overall/plan_setup/{name}", rep_fresh.setup_seconds * 1e6,
+                     f"cached_us={rep_hit.setup_seconds * 1e6:.1f}"))
 
     for mname, gs in per_method.items():
         rows.append((f"overall/geomean/{mname}", 0.0,
@@ -59,3 +75,8 @@ def run(rows: list, scale: int = 1):
         base = geomean(per_method[mname])
         rows.append((f"overall/speedup_vs_{mname}", 0.0,
                      f"x{oc / base:.2f}" if base else "n/a"))
+    tot_fresh = sum(setup_fresh)
+    tot_cached = sum(setup_cached)
+    rows.append(("overall/plan_setup/total", tot_fresh * 1e6,
+                 f"cached_us={tot_cached * 1e6:.1f} "
+                 f"setup_speedup=x{tot_fresh / max(tot_cached, 1e-12):.0f}"))

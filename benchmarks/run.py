@@ -14,9 +14,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=1)
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI dry run: tiny suite, no warmup, core modules")
     args = ap.parse_args()
 
-    from . import (ablation, cr_sampling, estimation_precision,
+    from . import (ablation, common, cr_sampling, estimation_precision,
                    estimator_vs_cohen, moe_dispatch, overall,
                    selection_validation)
 
@@ -29,8 +31,12 @@ def main() -> None:
         "selection_validation": selection_validation,  # §5.4
         "moe_dispatch": moe_dispatch,              # beyond-paper
     }
+    all_modules = modules
+    if args.smoke:
+        common.SMOKE = True
+        modules = {k: modules[k] for k in ("overall", "moe_dispatch")}
     if args.only:
-        modules = {args.only: modules[args.only]}
+        modules = {args.only: all_modules[args.only]}
 
     rows: list = []
     for name, mod in modules.items():

@@ -14,12 +14,13 @@ from .common import suite, timeit
 def run(rows: list, scale: int = 1):
     correct, total = 0, 0
     for name, a in suite(scale):
-        _, rep = workflow.ocean_spgemm(a, a)
+        _, rep = workflow.ocean_spgemm(a, a, cache=False)
         chosen = rep.workflow
         times = {}
         for wf in ("symbolic", "estimation", "upper_bound"):
             times[wf] = timeit(
-                lambda wf=wf: workflow.ocean_spgemm(a, a, force_workflow=wf),
+                lambda wf=wf: workflow.ocean_spgemm(a, a, force_workflow=wf,
+                                                    cache=False),
                 warmup=1, iters=3)
         best = min(times, key=times.get)
         ok = times[chosen] <= times[best] * 1.05

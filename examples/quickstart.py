@@ -31,13 +31,22 @@ def main():
     print(f"max abs error vs exact reference: {err:.2e}")
     assert err < 1e-4
 
-    # force the classic two-pass workflow for comparison
-    workflow.ocean_spgemm(a, a, force_workflow="symbolic")
-    _, rep2 = workflow.ocean_spgemm(a, a, force_workflow="symbolic")
-    t_est = report.stage_seconds["prediction"]
+    # force the classic two-pass workflow for comparison (cache=False so
+    # the planning stages actually run and can be timed)
+    _, rep1 = workflow.ocean_spgemm(a, a, cache=False)
+    _, rep2 = workflow.ocean_spgemm(a, a, force_workflow="symbolic",
+                                    cache=False)
+    t_est = rep1.stage_seconds["prediction"]
     t_sym = rep2.stage_seconds["prediction"]
     print(f"size-prediction time: estimation {t_est*1e3:.2f} ms vs "
           f"symbolic {t_sym*1e3:.2f} ms")
+
+    # repeated multiplies on an unchanged sparsity pattern hit the plan
+    # cache and skip analysis/prediction/binning entirely
+    _, rep3 = workflow.ocean_spgemm(a, a)
+    print(f"plan cache hit: {rep3.plan_cache_hit}  "
+          f"setup {rep1.setup_seconds*1e3:.2f} ms -> "
+          f"{rep3.setup_seconds*1e3:.2f} ms")
 
 
 if __name__ == "__main__":

@@ -10,14 +10,14 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import hll
-from .formats import CSR
+from .formats import CSR, csr_from_arrays, flat_gather_index
 from .hll import row_ids_from_indptr
 
 
@@ -134,8 +134,28 @@ def _pick_sample_rows(num_rows: int, cfg: OceanConfig) -> np.ndarray:
     return rng.choice(num_rows, size=n, replace=False).astype(np.int32)
 
 
+def sketches_for(b: CSR, m_regs: int, seed: int,
+                 sketch_cache: Optional[Dict] = None) -> jax.Array:
+    """B-row sketches, reused from ``sketch_cache`` when present.
+
+    The cache is a plain dict keyed by ``(m_regs, seed)``; sharing one dict
+    across calls against the same B amortizes sketch construction over a
+    stream of left-hand sides (``ocean_spgemm_many`` / plan reuse).
+    Construction is deterministic, so cached and fresh sketches are
+    bit-identical.
+    """
+    key = (m_regs, seed)
+    if sketch_cache is not None and key in sketch_cache:
+        return sketch_cache[key]
+    sk = hll.sketch_rows(b, m_regs, seed=seed)
+    if sketch_cache is not None:
+        sketch_cache[key] = sk
+    return sk
+
+
 def analyze(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(),
-            build_sketches: bool = True) -> AnalysisResult:
+            build_sketches: bool = True,
+            sketch_cache: Optional[Dict] = None) -> AnalysisResult:
     """The Ocean analysis step. Selects the workflow per Table 1:
 
         upper_bound  if nproducts_avg < 64
@@ -166,7 +186,7 @@ def analyze(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(),
     sample_rows = None
     if er >= cfg.er_threshold and build_sketches:
         # Sketch construction O(nnz_B) + sampled merge (paper: ~3% of runtime).
-        sketches = hll.sketch_rows(b, m_regs, seed=cfg.seed)
+        sketches = sketches_for(b, m_regs, cfg.seed, sketch_cache)
         sample_rows = _pick_sample_rows(a.m, cfg)
         sub = _sample_sub_csr(a, sample_rows)
         est = hll.estimate_row_nnz(sub, sketches, b.n)
@@ -197,17 +217,7 @@ def analyze(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(),
 
 def _sample_sub_csr(a: CSR, rows: np.ndarray) -> CSR:
     """Host-side: a small CSR containing only the sampled rows of A."""
-    indptr = np.asarray(a.indptr)
-    indices = np.asarray(a.indices)
-    values = np.asarray(a.values)
-    parts_i, parts_v = [], []
-    new_ptr = [0]
-    for r in rows:
-        s, e = int(indptr[r]), int(indptr[r + 1])
-        parts_i.append(indices[s:e])
-        parts_v.append(values[s:e])
-        new_ptr.append(new_ptr[-1] + (e - s))
-    from .formats import csr_from_arrays
-    ii = np.concatenate(parts_i) if parts_i else np.zeros(0, np.int32)
-    vv = np.concatenate(parts_v) if parts_v else np.zeros(0, values.dtype)
-    return csr_from_arrays(np.asarray(new_ptr), ii, vv, (len(rows), a.n))
+    new_ptr, src = flat_gather_index(a.indptr, rows)
+    indices = np.asarray(a.indices)[src]
+    values = np.asarray(a.values)[src]
+    return csr_from_arrays(new_ptr, indices, values, (len(rows), a.n))

@@ -38,6 +38,13 @@ def round_up_ladder(x: int, ladder=CAP_LADDER) -> int:
     return ladder[-1]
 
 
+def round_up_ladder_vec(x: np.ndarray, ladder=CAP_LADDER) -> np.ndarray:
+    """Vectorized ``round_up_ladder`` over an array (clamped to the top)."""
+    lad = np.asarray(ladder, np.int64)
+    pos = np.searchsorted(lad, np.asarray(x, np.int64), side="left")
+    return lad[np.minimum(pos, len(lad) - 1)]
+
+
 def _round_up(x: int, mult: int) -> int:
     return max(mult, ((x + mult - 1) // mult) * mult)
 
@@ -118,25 +125,29 @@ def plan_bins(pred_nnz: np.ndarray, products: np.ndarray,
         esc_mask = (~empty) & (products < ESC_THRESHOLD)
 
     dense_mask = (~empty) & (~esc_mask)
-    caps = np.array([round_up_ladder(int(x)) for x in alloc], np.int64)
+    caps = round_up_ladder_vec(alloc)
 
-    bins: Dict[tuple, List[int]] = {}
     idx = np.nonzero(dense_mask)[0]
     max_w = WINDOW_LADDER[-1]
-    for r in idx:
-        w = int(width[r])
-        cap = int(min(caps[r], max_w))
-        if w <= max_w:
-            window = round_up_ladder(max(w, cap), WINDOW_LADDER)
-            key = (window, 1)
-        else:
-            tiles = int(np.ceil(n_cols / LONGROW_TILE))
-            key = (LONGROW_TILE, tiles)
-        bins.setdefault(key, []).append(r)
+    # vectorized window assignment: every dense row gets a (window, tiles)
+    # key; rows sharing a key share one kernel instantiation.
+    w_idx = np.asarray(width, np.int64)[idx]
+    cap_idx = np.minimum(caps[idx], max_w)
+    window_of = round_up_ladder_vec(np.maximum(w_idx, cap_idx), WINDOW_LADDER)
+    longrow = w_idx > max_w
+    tiles_long = int(np.ceil(n_cols / LONGROW_TILE)) if longrow.any() else 1
+    window_of = np.where(longrow, LONGROW_TILE, window_of)
+    tiles_of = np.where(longrow, tiles_long, 1)
 
     dense_bins = []
-    for (window, tiles), rows_list in sorted(bins.items()):
-        rows_arr = np.asarray(rows_list, np.int64)
+    key = window_of * (2**20) + tiles_of  # lexicographic (window, tiles)
+    uniq, inverse = np.unique(key, return_inverse=True)
+    order = np.argsort(inverse, kind="stable")  # groups, rows ascending
+    bounds = np.searchsorted(inverse[order], np.arange(len(uniq) + 1))
+    for g in range(len(uniq)):
+        rows_arr = idx[order[bounds[g] : bounds[g + 1]]]
+        window = int(uniq[g] // 2**20)
+        tiles = int(uniq[g] % 2**20)
         bin_cap = int(min(int(caps[rows_arr].max()), window * tiles))
         ell = _pow2_at_least(int(a_row_nnz[rows_arr].max()))
         dense_bins.append(DenseBin(window=window, col_tiles=tiles,

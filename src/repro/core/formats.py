@@ -154,6 +154,26 @@ def csr_rows_to_ell(indptr, indices, values, *, num_rows: int, ell_width: int,
     return ell_idx, ell_val
 
 
+def flat_gather_index(indptr, rows):
+    """Vectorized multi-row gather plan (host-side, numpy).
+
+    Returns ``(new_ptr, src)`` where ``new_ptr`` is the indptr of the
+    gathered sub-CSR and ``src[j]`` is the position in the source
+    ``indices``/``values`` arrays feeding output slot ``j`` — a flat index
+    map that replaces per-row Python copy loops with one fancy-index gather.
+    """
+    indptr = np.asarray(indptr)
+    rows = np.asarray(rows, np.int64)
+    starts = indptr[rows].astype(np.int64)
+    lens = (indptr[rows + 1] - indptr[rows]).astype(np.int64)
+    new_ptr = np.zeros(len(rows) + 1, np.int64)
+    np.cumsum(lens, out=new_ptr[1:])
+    total = int(new_ptr[-1])
+    src = np.repeat(starts - new_ptr[:-1], lens) + np.arange(total,
+                                                             dtype=np.int64)
+    return new_ptr, src
+
+
 def pad_axis(x, length: int, axis: int = 0, value=0):
     """Pad ``x`` along ``axis`` up to ``length`` with ``value``."""
     cur = x.shape[axis]

@@ -1,0 +1,450 @@
+"""Planner/executor split for Ocean SpGEMM (plan caching, paper Fig. 4).
+
+Ocean's analysis, size prediction, and binning depend only on the *sparsity
+patterns* of A and B — never on the numeric values. This module makes that
+explicit: the planner turns ``(analysis, binning)`` into a reusable
+:class:`ExecutionPlan` (bin ladder, per-bin row sets and ELL gather maps,
+ESC capacities, bucketed kernel shapes), and the executor runs a plan
+against values-only updates. Repeated ``A @ B`` calls with an unchanged
+sparsity pattern therefore skip analysis/prediction/binning entirely via an
+LRU plan cache keyed by (structure hash, bucketed shapes) — the same way
+the binning ladder already buckets kernel shapes to bound recompilation.
+
+Plan lifecycle:
+
+    build_plan(a, b)  ->  ExecutionPlan          (structure-only, cacheable)
+    execute_plan(plan, a, b)  ->  (CSR, report)  (values in, values out)
+
+A plan is invalidated implicitly: the cache key hashes both sparsity
+patterns plus every planning knob (config, forced workflow, ablation
+flags), so any structural or configuration change misses the cache and
+builds a fresh plan. Values-only changes always hit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+import time
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from . import esc as esc_mod
+from .analysis import (AnalysisResult, OceanConfig, analyze, sketches_for)
+from .binning import BinPlan, plan_bins
+from .formats import (CSR, PAD_COL, csr_from_arrays, csr_rows_to_ell,
+                      flat_gather_index)
+
+
+@dataclasses.dataclass
+class OceanReport:
+    workflow: str
+    er: float
+    sampled_cr: Optional[float]
+    nproducts_avg: float
+    total_products: int
+    m_regs: int
+    stage_seconds: Dict[str, float]
+    bins: Dict[str, int]
+    overflow_rows: int
+    nnz_out: int
+    plan_cache_hit: bool = False
+
+    @property
+    def total_seconds(self) -> float:
+        return sum(self.stage_seconds.values())
+
+    @property
+    def setup_seconds(self) -> float:
+        """Host-side planning time: analysis + prediction + binning, plus
+        the plan-cache key hash/lookup when a cache was consulted."""
+        return sum(self.stage_seconds.get(k, 0.0)
+                   for k in ("plan_lookup", "analysis", "prediction",
+                             "binning"))
+
+
+def _pow2_at_least(x: int, floor: int = 64) -> int:
+    v = floor
+    while v < x:
+        v *= 2
+    return v
+
+
+def gather_rows(a: CSR, rows: np.ndarray) -> CSR:
+    """Host-side sub-CSR of the selected rows (order preserved)."""
+    new_ptr, src = flat_gather_index(a.indptr, rows)
+    return csr_from_arrays(new_ptr, np.asarray(a.indices)[src],
+                           np.asarray(a.values)[src], (len(rows), a.n))
+
+
+class _Slab:
+    """Per-row output fragments: row ids + fixed-width (cols, vals, nnz)."""
+
+    def __init__(self, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                 nnz: np.ndarray):
+        self.rows, self.cols, self.vals, self.nnz = rows, cols, vals, nnz
+
+
+def _esc_to_slab(res, rows: np.ndarray, num_rows: int,
+                 out_cap: int) -> Tuple[_Slab, int]:
+    """Convert an ESCResult over a row subset into a slab."""
+    nnz = int(res.nnz)
+    if nnz > out_cap:
+        # capacity was an upper bound; this indicates a bug, not estimation
+        raise AssertionError(f"ESC overflow {nnz} > {out_cap}")
+    counts = np.asarray(res.indptr[1:] - res.indptr[:-1])
+    width = int(counts.max()) if len(counts) else 1
+    width = max(width, 1)
+    ell_i, ell_v = csr_rows_to_ell(res.indptr, res.indices, res.values,
+                                   num_rows=num_rows, ell_width=width,
+                                   pad_index=int(PAD_COL))
+    return _Slab(rows, np.asarray(ell_i), np.asarray(ell_v),
+                 counts.astype(np.int64)), nnz
+
+
+# ---------------------------------------------------------------------------
+# Plan containers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DenseBinExec:
+    """One dense-accumulator bin with its structure-only kernel inputs."""
+    window: int
+    col_tiles: int
+    cap: int
+    rows: np.ndarray
+    ell_width: int
+    is_longrow: bool
+    pos: np.ndarray            # (R, ell) flat gather into A's nnz arrays
+    valid: np.ndarray          # (R, ell) bool
+    a_rows: jax.Array          # (R, ell) int32 — B-row ids
+    a_starts: jax.Array        # (R, ell) int32
+    a_lens: jax.Array          # (R, ell) int32
+    row_lo: jax.Array          # (R, 1) int32
+
+
+@dataclasses.dataclass
+class EscExec:
+    """The ESC bin: precomputed sub-CSR structure + capacities."""
+    rows: np.ndarray
+    sub_indptr: np.ndarray     # (len(rows)+1,)
+    sub_indices: np.ndarray    # gathered column ids (structure-only)
+    src: np.ndarray            # flat gather into A's values
+    p_cap: int
+    out_cap: int
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """Everything value-independent about one (A-pattern, B-pattern) pair.
+
+    Reusable across values-only updates; ``execute_plan`` consumes it.
+    """
+    key: Optional[str]
+    shape_a: Tuple[int, int]
+    shape_b: Tuple[int, int]
+    workflow: str
+    assisted: bool
+    hybrid: bool
+    cfg: OceanConfig
+    products: np.ndarray       # (m,) int64 per-row intermediate products
+    out_lo: np.ndarray         # (m,) output col-range lower bounds
+    dense: List[DenseBinExec]
+    esc: Optional[EscExec]
+    empty_rows: np.ndarray
+    bins_describe: Dict[str, int]
+    # analysis summary surfaced into reports
+    er: float
+    sampled_cr: Optional[float]
+    nproducts_avg: float
+    total_products: int
+    m_regs: int
+    b_sketches: Optional[jax.Array]
+    build_seconds: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def reuse_b_sketches(self) -> Dict:
+        """Seed a sketch cache from this plan for later builds against the
+        same B (pass as ``sketch_cache=`` to ``build_plan``/``analyze``)."""
+        cache: Dict = {}
+        if self.b_sketches is not None:
+            cache[(self.m_regs, self.cfg.seed)] = self.b_sketches
+        return cache
+
+
+# ---------------------------------------------------------------------------
+# Planner
+# ---------------------------------------------------------------------------
+
+def structure_key(a: CSR, b: CSR, cfg: OceanConfig,
+                  force_workflow: Optional[str], assisted: bool,
+                  hybrid: bool) -> str:
+    """Cache key: hash of both sparsity patterns + every planning knob.
+
+    O(nnz) hashing — orders of magnitude cheaper than re-running analysis,
+    prediction, and binning. Values are deliberately excluded: plans are
+    structure-only.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    for m in (a, b):
+        h.update(np.ascontiguousarray(np.asarray(m.indptr)).tobytes())
+        h.update(np.ascontiguousarray(
+            np.asarray(m.indices)[: m.nnz]).tobytes())
+        h.update(repr(m.shape).encode())
+    h.update(repr((cfg, force_workflow, assisted, hybrid)).encode())
+    return h.hexdigest()
+
+
+def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
+               force_workflow: Optional[str] = None, assisted: bool = True,
+               hybrid: bool = True, analysis: Optional[AnalysisResult] = None,
+               sketch_cache: Optional[Dict] = None,
+               key: Optional[str] = None) -> ExecutionPlan:
+    """Run analysis -> size prediction -> binning and freeze the result."""
+    stage: Dict[str, float] = {}
+
+    # ---------------- analysis ----------------
+    t0 = time.perf_counter()
+    if analysis is None:
+        analysis = analyze(a, b, cfg, sketch_cache=sketch_cache)
+    wf = force_workflow or analysis.workflow
+    products = np.asarray(analysis.products_row, np.int64)
+    total_products = analysis.total_products
+    out_lo = np.asarray(analysis.out_lo)
+    out_hi = np.asarray(analysis.out_hi)
+    a_row_nnz = np.asarray(a.indptr[1:] - a.indptr[:-1], np.int64)
+    stage["analysis"] = time.perf_counter() - t0
+
+    # ---------------- size prediction ----------------
+    t0 = time.perf_counter()
+    sketches = analysis.b_sketches
+    if wf == "estimation":
+        if sketches is None:
+            sketches = sketches_for(b, analysis.m_regs, cfg.seed,
+                                    sketch_cache)
+        sk = jnp.concatenate(
+            [sketches, jnp.zeros((1, sketches.shape[1]), jnp.int32)], axis=0)
+        _, est = kops.merge_estimate_op(a, sk, clip_max=b.n)
+        pred = np.maximum(np.asarray(est, np.float64), 1.0)
+        pred = np.where(products > 0, pred, 0.0)
+        pred = np.minimum(pred, products)  # distinct count <= products
+    elif wf == "symbolic":
+        p_cap = _pow2_at_least(total_products + 1)
+        pred = np.asarray(
+            esc_mod.symbolic_exact(a.indptr, a.indices, b.indptr, b.indices,
+                                   p_cap=p_cap, num_rows_a=a.m,
+                                   n_cols_b=b.n), np.float64)
+    else:  # upper_bound
+        pred = products.astype(np.float64)
+    stage["prediction"] = time.perf_counter() - t0
+
+    # ---------------- binning ----------------
+    t0 = time.perf_counter()
+    assisted_cr = analysis.conservative_cr if (assisted and wf == "upper_bound"
+                                               and analysis.cr_mean) else None
+    plan = plan_bins(pred, products, out_lo, out_hi, a_row_nnz, b.n,
+                     expansion=cfg.expansion_for(analysis.m_regs),
+                     workflow=wf, esc_enabled=hybrid,
+                     assisted_cr=assisted_cr)
+    if not hybrid:
+        # V1/V2: long rows fall back to the global ESC pass instead of the
+        # column-tiled kernel (the paper's 'nonadaptive global kernel').
+        longrow_rows = np.concatenate(
+            [bn.rows for bn in plan.dense_bins if bn.is_longrow]
+            or [np.zeros(0, np.int64)])
+        plan = BinPlan(
+            dense_bins=[bn for bn in plan.dense_bins if not bn.is_longrow],
+            esc_rows=np.concatenate([plan.esc_rows, longrow_rows]),
+            esc_caps=np.concatenate(
+                [plan.esc_caps, products[longrow_rows]]),
+            empty_rows=plan.empty_rows)
+
+    # Freeze per-bin structure: gather maps + value-independent ELL blocks.
+    dense_execs: List[DenseBinExec] = []
+    for bn in plan.dense_bins:
+        pos, valid, a_rows, a_starts, a_lens = kops.prep_bin_structure(
+            a, b, bn.rows, bn.ell_width)
+        lo_arr = (out_lo[bn.rows] if not bn.is_longrow
+                  else np.zeros(len(bn.rows)))
+        row_lo = jnp.asarray(lo_arr.reshape(-1, 1).astype(np.int32))
+        dense_execs.append(DenseBinExec(
+            window=bn.window, col_tiles=bn.col_tiles, cap=bn.cap,
+            rows=bn.rows, ell_width=bn.ell_width, is_longrow=bn.is_longrow,
+            pos=pos, valid=valid, a_rows=jnp.asarray(a_rows),
+            a_starts=jnp.asarray(a_starts), a_lens=jnp.asarray(a_lens),
+            row_lo=row_lo))
+
+    esc_exec = None
+    if len(plan.esc_rows):
+        rows = plan.esc_rows
+        sub_ptr, src = flat_gather_index(a.indptr, rows)
+        p_cap = _pow2_at_least(int(products[rows].sum()) + 1)
+        esc_exec = EscExec(rows=rows, sub_indptr=sub_ptr.astype(np.int32),
+                           sub_indices=np.asarray(a.indices)[src], src=src,
+                           p_cap=p_cap, out_cap=p_cap)
+    stage["binning"] = time.perf_counter() - t0
+
+    return ExecutionPlan(
+        key=key, shape_a=a.shape, shape_b=b.shape, workflow=wf,
+        assisted=assisted, hybrid=hybrid, cfg=cfg, products=products,
+        out_lo=out_lo, dense=dense_execs, esc=esc_exec,
+        empty_rows=plan.empty_rows, bins_describe=plan.describe(),
+        er=analysis.er, sampled_cr=analysis.sampled_cr,
+        nproducts_avg=analysis.nproducts_avg, total_products=total_products,
+        m_regs=analysis.m_regs, b_sketches=sketches
+        if wf == "estimation" else analysis.b_sketches,
+        build_seconds=stage)
+
+
+# ---------------------------------------------------------------------------
+# Executor
+# ---------------------------------------------------------------------------
+
+def execute_plan(plan: ExecutionPlan, a: CSR, b: CSR, *,
+                 stage: Optional[Dict[str, float]] = None,
+                 cache_hit: bool = False) -> Tuple[CSR, OceanReport]:
+    """Run a frozen plan against (possibly new) values of A and B."""
+    if a.shape != plan.shape_a or b.shape != plan.shape_b:
+        raise ValueError(
+            f"plan built for {plan.shape_a} @ {plan.shape_b}, "
+            f"got {a.shape} @ {b.shape}")
+    stage = dict(stage) if stage else {"analysis": 0.0, "prediction": 0.0,
+                                       "binning": 0.0}
+    a_values = np.asarray(a.values)
+    products = plan.products
+
+    # ---------------- numeric accumulation ----------------
+    t0 = time.perf_counter()
+    slabs: List[_Slab] = []
+    b_cols_pad, b_vals_pad = kops.pad_b_flat(b)
+    for be in plan.dense:
+        a_vals = jnp.asarray(
+            kops.gather_bin_values(a_values, be.pos, be.valid))
+        cols, vals, nnz = kops.dense_bin_op(
+            be.a_rows, a_vals, be.a_starts, be.a_lens, be.row_lo,
+            b_cols_pad, b_vals_pad, window=be.window,
+            col_tiles=be.col_tiles, cap=be.cap)
+        slabs.append(_Slab(be.rows, np.asarray(cols), np.asarray(vals),
+                           np.asarray(nnz, np.int64)))
+    if plan.esc is not None:
+        ex = plan.esc
+        res = esc_mod.esc_spgemm(
+            ex.sub_indptr, ex.sub_indices, a_values[ex.src],
+            b.indptr, b.indices, b.values, p_cap=ex.p_cap,
+            out_cap=ex.out_cap, num_rows_a=len(ex.rows), n_cols_b=b.n)
+        slab, _ = _esc_to_slab(res, ex.rows, len(ex.rows), ex.out_cap)
+        slabs.append(slab)
+    stage["numeric"] = time.perf_counter() - t0
+
+    # ---------------- overflow fallback (paper §3.2) ----------------
+    t0 = time.perf_counter()
+    overflow_rows: List[np.ndarray] = []
+    kept: List[_Slab] = []
+    for s, be in zip(slabs[: len(plan.dense)], plan.dense):
+        over = s.nnz > s.cols.shape[1]
+        if over.any():
+            overflow_rows.append(s.rows[over])
+            keep = ~over
+            kept.append(_Slab(s.rows[keep], s.cols[keep], s.vals[keep],
+                              s.nnz[keep]))
+        else:
+            kept.append(s)
+    kept.extend(slabs[len(plan.dense):])
+    n_overflow = 0
+    if overflow_rows:
+        rows = np.concatenate(overflow_rows)
+        n_overflow = len(rows)
+        sub = gather_rows(a, rows)
+        p_cap = _pow2_at_least(int(products[rows].sum()) + 1)
+        res = esc_mod.esc_spgemm(
+            sub.indptr, sub.indices, sub.values, b.indptr, b.indices,
+            b.values, p_cap=p_cap, out_cap=p_cap, num_rows_a=sub.m,
+            n_cols_b=b.n)
+        slab, _ = _esc_to_slab(res, rows, sub.m, p_cap)
+        kept.append(slab)
+    slabs = kept
+    stage["overflow"] = time.perf_counter() - t0
+
+    # ---------------- post-processing: compaction to CSR ----------------
+    t0 = time.perf_counter()
+    m = a.m
+    counts = np.zeros(m, np.int64)
+    for s in slabs:
+        counts[s.rows] = s.nnz
+    indptr = np.zeros(m + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    total = int(indptr[-1])
+    out_cols = np.full(total, PAD_COL, np.int32)
+    out_vals = np.zeros(total, a_values.dtype)
+    for s in slabs:
+        if not len(s.rows):
+            continue
+        # flat scatter of each slab's valid slots into the output arrays
+        capw = s.cols.shape[1]
+        slot = np.arange(capw)[None, :]
+        valid = slot < s.nnz[:, None]
+        pos = indptr[s.rows][:, None] + slot
+        out_cols[pos[valid]] = s.cols[valid]
+        out_vals[pos[valid]] = s.vals[valid]
+    c = csr_from_arrays(indptr, out_cols, out_vals, (a.m, b.n))
+    stage["postprocess"] = time.perf_counter() - t0
+
+    report = OceanReport(
+        workflow=plan.workflow, er=plan.er, sampled_cr=plan.sampled_cr,
+        nproducts_avg=plan.nproducts_avg,
+        total_products=plan.total_products, m_regs=plan.m_regs,
+        stage_seconds=stage, bins=dict(plan.bins_describe),
+        overflow_rows=n_overflow, nnz_out=total, plan_cache_hit=cache_hit)
+    return c, report
+
+
+# ---------------------------------------------------------------------------
+# Plan cache
+# ---------------------------------------------------------------------------
+
+class PlanCache:
+    """Thread-safe LRU cache of ExecutionPlans keyed by structure hash."""
+
+    def __init__(self, maxsize: int = 32):
+        self.maxsize = maxsize
+        self._plans: "OrderedDict[str, ExecutionPlan]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, key: str) -> Optional[ExecutionPlan]:
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self._plans.move_to_end(key)
+                self.hits += 1
+            else:
+                self.misses += 1
+            return plan
+
+    def insert(self, key: str, plan: ExecutionPlan) -> None:
+        with self._lock:
+            self._plans[key] = plan
+            self._plans.move_to_end(key)
+            while len(self._plans) > self.maxsize:
+                self._plans.popitem(last=False)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._plans.clear()
+            self.hits = 0
+            self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "size": len(self._plans)}
+
+
+DEFAULT_PLAN_CACHE = PlanCache()

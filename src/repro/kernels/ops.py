@@ -190,26 +190,42 @@ def dense_bin_op(a_rows, a_vals, a_starts, a_lens, row_lo, b_cols_pad,
     return extract_window_rows(acc, cnt, row_lo, cap=cap)
 
 
-def prep_bin_inputs(a: CSR, b: CSR, rows: np.ndarray, ell_width: int):
-    """Host-side: gather the A rows of one bin into ELL blocks plus
-    pregathered B-row starts/lengths (keeps b_indptr out of kernel SMEM)."""
+def prep_bin_structure(a: CSR, b: CSR, rows: np.ndarray, ell_width: int):
+    """Host-side, structure-only half of bin preparation (vectorized).
+
+    Returns ``(pos, valid, a_rows, a_starts, a_lens)``: ``pos``/``valid``
+    are the (R, ell_width) flat gather positions into A's nnz arrays (the
+    value gather each executor call replays), and ``a_rows``/``a_starts``/
+    ``a_lens`` are the value-independent ELL blocks — B-row ids and
+    pregathered B-row starts/lengths (keeps b_indptr out of kernel SMEM).
+    Everything here depends only on the sparsity patterns, so an
+    ``ExecutionPlan`` caches it across values-only updates.
+    """
     indptr = np.asarray(a.indptr)
     indices = np.asarray(a.indices)
-    values = np.asarray(a.values)
     b_indptr = np.asarray(b.indptr)
-    r = len(rows)
-    a_rows = np.full((r, ell_width), -1, np.int32)
-    a_vals = np.zeros((r, ell_width), values.dtype)
-    for i, row in enumerate(rows):
-        s, e = int(indptr[row]), int(indptr[row + 1])
-        ln = min(e - s, ell_width)
-        a_rows[i, :ln] = indices[s : s + ln]
-        a_vals[i, :ln] = values[s : s + ln]
+    rows = np.asarray(rows, np.int64)
+    starts = indptr[rows].astype(np.int64)[:, None]
+    lens = (indptr[rows + 1] - indptr[rows]).astype(np.int64)[:, None]
+    e = np.arange(ell_width, dtype=np.int64)[None, :]
+    valid = e < lens
+    pos = np.clip(starts + e, 0, max(indices.shape[0] - 1, 0))
+    a_rows = np.where(valid, indices[pos], -1).astype(np.int32)
     k = np.maximum(a_rows, 0)
     a_starts = np.where(a_rows >= 0, b_indptr[k], 0).astype(np.int32)
-    a_lens = np.where(a_rows >= 0, b_indptr[k + 1] - b_indptr[k], 0).astype(np.int32)
-    return (jnp.asarray(a_rows), jnp.asarray(a_vals), jnp.asarray(a_starts),
-            jnp.asarray(a_lens))
+    a_lens = np.where(a_rows >= 0, b_indptr[k + 1] - b_indptr[k],
+                      0).astype(np.int32)
+    return pos, valid, a_rows, a_starts, a_lens
+
+
+def gather_bin_values(values: np.ndarray, pos: np.ndarray,
+                      valid: np.ndarray) -> np.ndarray:
+    """Value half of bin preparation: ELL-shaped A values for one bin."""
+    a_vals = np.zeros(pos.shape, values.dtype)
+    a_vals[valid] = values[pos[valid]]
+    return a_vals
+
+
 
 
 def pad_b_flat(b: CSR):

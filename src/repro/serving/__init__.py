@@ -1,1 +1,2 @@
 from .engine import Request, ServeConfig, ServingEngine
+from .spgemm_service import ServiceStats, SpGEMMService

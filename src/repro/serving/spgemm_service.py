@@ -1,0 +1,87 @@
+"""SpGEMM serving front-end: plan-cached multiplies for repeated traffic.
+
+Production SpGEMM traffic (graph iterations, MoE dispatch, recurring
+serving requests) multiplies the *same sparsity patterns* over and over
+with fresh values. This service wraps the planner/executor split for that
+regime: every request is keyed by structure, plans are reused from a
+per-service LRU cache, and streams against a common right-hand side share
+B sketches. It is the single-process shape of the sharded/multi-device
+serving tier on the ROADMAP.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.analysis import OceanConfig
+from repro.core.formats import CSR
+from repro.core.planner import OceanReport, PlanCache
+from repro.core.workflow import ocean_spgemm
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    requests: int = 0
+    plan_hits: int = 0
+    plan_misses: int = 0
+    total_seconds: float = 0.0
+    setup_seconds: float = 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.plan_hits / max(self.requests, 1)
+
+
+class SpGEMMService:
+    """Stateful SpGEMM endpoint with plan caching across requests."""
+
+    def __init__(self, cfg: OceanConfig = OceanConfig(), *,
+                 plan_cache_size: int = 64):
+        self.cfg = cfg
+        self.plan_cache = PlanCache(maxsize=plan_cache_size)
+        self.stats = ServiceStats()
+        # sketch caches per right-hand side, keyed by B's structure hash —
+        # kept small (LRU); a stream usually reuses a handful of Bs.
+        self._sketch_caches: "OrderedDict[str, Dict]" = OrderedDict()
+
+    def _sketch_cache_for(self, b: CSR) -> Dict:
+        h = hashlib.blake2b(digest_size=16)
+        h.update(np.ascontiguousarray(np.asarray(b.indptr)).tobytes())
+        h.update(np.ascontiguousarray(np.asarray(b.indices)[: b.nnz])
+                 .tobytes())
+        h.update(repr(b.shape).encode())
+        key = h.hexdigest()
+        if key not in self._sketch_caches:
+            self._sketch_caches[key] = {}
+        self._sketch_caches.move_to_end(key)
+        while len(self._sketch_caches) > 8:
+            self._sketch_caches.popitem(last=False)
+        return self._sketch_caches[key]
+
+    def multiply(self, a: CSR, b: CSR, *,
+                 force_workflow: Optional[str] = None,
+                 assisted: bool = True,
+                 hybrid: bool = True) -> Tuple[CSR, OceanReport]:
+        """Serve one C = A @ B request through the plan cache."""
+        t0 = time.perf_counter()
+        c, report = ocean_spgemm(
+            a, b, self.cfg, force_workflow=force_workflow,
+            assisted=assisted, hybrid=hybrid, cache=self.plan_cache,
+            sketch_cache=self._sketch_cache_for(b))
+        self.stats.requests += 1
+        self.stats.plan_hits += int(report.plan_cache_hit)
+        self.stats.plan_misses += int(not report.plan_cache_hit)
+        self.stats.total_seconds += time.perf_counter() - t0
+        self.stats.setup_seconds += report.setup_seconds
+        return c, report
+
+    def multiply_many(self, a_list: Sequence[CSR], b: CSR, **kw
+                      ) -> List[Tuple[CSR, OceanReport]]:
+        """Serve a stream of left-hand sides against one B (shared
+        sketches, shared plan cache)."""
+        return [self.multiply(a, b, **kw) for a in a_list]

@@ -1,0 +1,99 @@
+"""Deterministic stand-in for the ``hypothesis`` API.
+
+Used when ``hypothesis`` is not installed (it is an optional dev
+dependency): ``@given`` runs the decorated property over a fixed set of
+seeded random draws instead of randomized search with shrinking. Coverage
+is narrower than real hypothesis, but the same property code runs and the
+draws are reproducible run-to-run.
+
+Only the slice of the API the tests use is implemented: ``given``,
+``settings(max_examples=..., deadline=...)``, and the strategies
+``integers``, ``floats``, ``sampled_from``, ``lists``, ``composite``.
+Example counts are capped at ``FALLBACK_MAX_EXAMPLES`` to bound CPU time;
+installing hypothesis (see requirements-dev.txt) restores full coverage.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+FALLBACK_MAX_EXAMPLES = 8
+_SEED_BASE = 0xC0FFEE
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def example(self, rng):
+        return self._draw_fn(rng)
+
+
+class _DrawFn:
+    """The ``draw`` callable passed to ``@st.composite`` functions."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def __call__(self, strategy):
+        return strategy.example(self._rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elements.example(rng) for _ in range(size)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def composite(fn):
+        def builder(*args, **kwargs):
+            return _Strategy(lambda rng: fn(_DrawFn(rng), *args, **kwargs))
+        return builder
+
+
+st = _Strategies()
+
+
+def given(*strategies):
+    def decorator(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = min(wrapper._max_examples, FALLBACK_MAX_EXAMPLES)
+            for i in range(n):
+                rng = np.random.default_rng(_SEED_BASE + i)
+                drawn = [s.example(rng) for s in strategies]
+                fn(*args, *drawn, **kwargs)
+        wrapper._max_examples = FALLBACK_MAX_EXAMPLES
+        # hide the property arguments from pytest's fixture resolution
+        # (real hypothesis does the same)
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return decorator
+
+
+def settings(max_examples=None, deadline=None, **_ignored):
+    def decorator(fn):
+        if max_examples is not None and hasattr(fn, "_max_examples"):
+            fn._max_examples = min(max_examples, FALLBACK_MAX_EXAMPLES)
+        return fn
+    return decorator

@@ -1,0 +1,12 @@
+"""Shared test configuration.
+
+Makes ``src`` importable even when PYTHONPATH is not set (CI convenience;
+the canonical tier-1 invocation still sets ``PYTHONPATH=src``).
+"""
+import os
+import sys
+
+_SRC = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

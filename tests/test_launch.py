@@ -57,16 +57,20 @@ def test_dryrun_smoke_small_mesh():
     shardings — the same code path dryrun.py uses at 16x16/2x16x16."""
     stdout = _run_snippet("""
         import jax, jax.numpy as jnp
-        from jax.sharding import NamedSharding, PartitionSpec, AxisType
+        from jax.sharding import NamedSharding, PartitionSpec
         from repro import configs
         from repro.launch.sharding import ShardingPolicy
         from repro.models import lm
         from repro.optim import AdamWConfig, adamw_init
         from repro.optim.adamw import AdamWState
 
+        try:  # AxisType landed in jax 0.5; older jax defaults to Auto anyway
+            from jax.sharding import AxisType
+            mesh_kw = dict(axis_types=(AxisType.Auto,) * 2)
+        except ImportError:
+            mesh_kw = {}
         cfg = configs.get_config("qwen3-1.7b", smoke=True)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = jax.make_mesh((2, 4), ("data", "model"), **mesh_kw)
         pol = ShardingPolicy(mesh, "fsdp")
         shapes, specs = lm.abstract_params(cfg)
         psh = pol.param_shardings(shapes, specs)
@@ -90,14 +94,17 @@ def test_dryrun_multipod_mesh_small():
     """The 3-axis (pod, data, model) mesh lowers a sharded decode step."""
     stdout = _run_snippet("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
         from repro import configs
         from repro.launch.sharding import ShardingPolicy
         from repro.models import lm
 
+        try:  # AxisType landed in jax 0.5; older jax defaults to Auto anyway
+            from jax.sharding import AxisType
+            mesh_kw = dict(axis_types=(AxisType.Auto,) * 3)
+        except ImportError:
+            mesh_kw = {}
         cfg = configs.get_config("qwen3-1.7b", smoke=True)
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"), **mesh_kw)
         pol = ShardingPolicy(mesh, "tp")
         shapes, specs = lm.abstract_params(cfg)
         psh = pol.param_shardings(shapes, specs)

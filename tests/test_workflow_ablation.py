@@ -1,0 +1,116 @@
+"""Differential oracle tests: ``ocean_spgemm`` vs ``spgemm_reference``.
+
+Exercises every paper Table-3 ablation variant (V1 symbolic, V2 +E,
+V3 +AS, V4 +HA) and every ``force_workflow`` value over adversarial
+structures: rectangular, hypersparse, empty-row-heavy, and
+duplicate-column-heavy matrices. The exact ESC reference is the oracle;
+Ocean must match it bit-structurally (same sparsity) and numerically.
+"""
+import numpy as np
+import pytest
+
+from repro.core import formats, workflow
+
+# Table 3 variants (V1 baseline .. V4 full Ocean).
+VERSIONS = {
+    "V1_symbolic": dict(force_workflow="symbolic", assisted=False,
+                        hybrid=False),
+    "V2_+E": dict(force_workflow=None, assisted=False, hybrid=False),
+    "V3_+AS": dict(force_workflow=None, assisted=True, hybrid=False),
+    "V4_+HA": dict(force_workflow=None, assisted=True, hybrid=True),
+}
+
+FORCED = [None, "symbolic", "estimation", "upper_bound"]
+
+
+def _dup_heavy(seed: int, m: int, n: int, nnz_per_row: int) -> formats.CSR:
+    """Duplicate-column-heavy: every row draws columns from a tiny pool, so
+    most intermediate products collide (high compression ratio)."""
+    rng = np.random.default_rng(seed)
+    pool = rng.choice(n, max(4, n // 16), replace=False)
+    counts = np.full(m, nnz_per_row)
+    rows = np.repeat(np.arange(m), counts)
+    cols = rng.choice(pool, rows.shape[0])
+    vals = rng.standard_normal(rows.shape[0]).astype(np.float32)
+    rows, cols, vals = formats._dedupe_rows(rows, cols, vals, m, n)
+    return formats._to_csr(rows, cols, vals, m, n)
+
+
+def _empty_row_heavy(seed: int, m: int, n: int) -> formats.CSR:
+    """~70% of the rows are completely empty."""
+    rng = np.random.default_rng(seed)
+    live = rng.choice(m, m // 3, replace=False)
+    rows = np.repeat(live, 6)
+    cols = rng.integers(0, n, rows.shape[0]).astype(np.int64)
+    vals = rng.standard_normal(rows.shape[0]).astype(np.float32)
+    order = np.argsort(rows, kind="stable")
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    rows, cols, vals = formats._dedupe_rows(rows, cols, vals, m, n)
+    return formats._to_csr(rows, cols, vals, m, n)
+
+
+def _cases():
+    a_rect = formats.random_uniform_csr(21, 96, 160, 9.0)
+    b_rect = formats.random_uniform_csr(22, 160, 120, 7.0)
+    hs = formats.hypersparse_csr(23, 400, 400)
+    er = _empty_row_heavy(24, 180, 180)
+    dup = _dup_heavy(25, 150, 150, 10)
+    return [
+        ("rectangular", a_rect, b_rect),
+        ("hypersparse", hs, hs),
+        ("empty_rows", er, er),
+        ("dup_heavy", dup, dup),
+    ]
+
+
+CASES = _cases()
+_REFS = {}
+
+
+def ref_of(name, a, b):
+    """Memoized oracle (kept out of collection time)."""
+    if name not in _REFS:
+        _REFS[name] = workflow.spgemm_reference(a, b)
+    return _REFS[name]
+
+
+def assert_matches_oracle(c, ref, name):
+    np.testing.assert_allclose(np.asarray(c.to_dense()),
+                               np.asarray(ref.to_dense()), atol=1e-4,
+                               err_msg=name)
+    np.testing.assert_array_equal(np.asarray(c.indptr),
+                                  np.asarray(ref.indptr), err_msg=name)
+    np.testing.assert_array_equal(
+        np.asarray(c.indices)[: c.nnz], np.asarray(ref.indices)[: ref.nnz],
+        err_msg=name)
+
+
+@pytest.mark.parametrize("version", list(VERSIONS))
+@pytest.mark.parametrize("case", [c[0] for c in CASES])
+def test_ablation_variants_match_oracle(version, case):
+    name, a, b = next(c for c in CASES if c[0] == case)
+    ref = ref_of(name, a, b)
+    c, rep = workflow.ocean_spgemm(a, b, **VERSIONS[version])
+    assert_matches_oracle(c, ref, f"{case}/{version}")
+    assert rep.nnz_out == ref.nnz
+
+
+@pytest.mark.parametrize("wf", FORCED)
+@pytest.mark.parametrize("case", [c[0] for c in CASES])
+def test_forced_workflows_match_oracle(wf, case):
+    name, a, b = next(c for c in CASES if c[0] == case)
+    ref = ref_of(name, a, b)
+    c, rep = workflow.ocean_spgemm(a, b, force_workflow=wf)
+    if wf is not None:
+        assert rep.workflow == wf
+    assert_matches_oracle(c, ref, f"{case}/forced={wf}")
+
+
+def test_fully_empty_lhs():
+    """A with zero nonzeros: C must be the empty matrix, no crashes."""
+    a = formats.csr_from_arrays(np.zeros(33, np.int64), np.zeros(0, np.int32),
+                                np.zeros(0, np.float32), (32, 40))
+    b = formats.random_uniform_csr(30, 40, 24, 4.0)
+    c, rep = workflow.ocean_spgemm(a, b)
+    assert rep.nnz_out == 0
+    assert np.asarray(c.indptr)[-1] == 0
