@@ -6,11 +6,8 @@ Paper: mean relative sampling error 0.05/0.04/0.03 at m=32/64/128; at most
 """
 from __future__ import annotations
 
-import dataclasses
-
 import numpy as np
 
-from repro.core import workflow
 from repro.core.analysis import OceanConfig, analyze
 
 from .common import suite
@@ -41,5 +38,5 @@ def run(rows: list, scale: int = 1):
         if errs:
             rows.append((f"cr_sampling/m{m_regs}", 0.0,
                          f"mean_rel_err={np.mean(errs):.4f} flips={flips}/{n}"
-                         f" (paper err~"
+                         " (paper err~"
                          f"{ {32: 0.05, 64: 0.04, 128: 0.03}[m_regs] })"))

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import formats, hll
+from repro.core import hll
 from repro.core.analysis import products_per_row
 from repro.core.binning import round_up_ladder
 

@@ -42,6 +42,6 @@ def run(rows: list, scale: int = 1):
                      f"err={np.mean(errs):.4f}"))
     rows.append(("cohen/hll_wins_equal_mem", 0.0,
                  f"{wins['cohen16']}/{n_mats} matrices (paper: HLL 2.1x "
-                 f"better on average)"))
+                 "better on average)"))
     rows.append(("cohen/hll_wins_vs_4x_mem", 0.0,
                  f"{wins['cohen64']}/{n_mats} matrices (paper: 116/148)"))

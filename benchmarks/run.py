@@ -1,11 +1,17 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. ``--scale`` grows the matrix suite;
-``--only`` runs a single module.
+``--only`` runs a single module; ``--json`` additionally writes the rows,
+per-module wall times, and a setup-vs-total summary as a JSON record (the
+perf-trajectory artifact CI uploads); ``--devices N`` forces N virtual host
+devices (must be set before jax initializes, which this flag guarantees) so
+the sharding benchmark exercises real multi-device dispatch.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -16,11 +22,22 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="CI dry run: tiny suite, no warmup, core modules")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows + timing summary as JSON")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N virtual host devices before jax init")
     args = ap.parse_args()
 
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
+
+    # deferred so --devices takes effect before jax initializes
     from . import (ablation, common, cr_sampling, estimation_precision,
                    estimator_vs_cohen, moe_dispatch, overall,
-                   selection_validation)
+                   selection_validation, sharding)
 
     modules = {
         "overall": overall,                       # Table 2 / Fig 6-7
@@ -30,25 +47,67 @@ def main() -> None:
         "ablation": ablation,                      # Table 3 / Fig 9
         "selection_validation": selection_validation,  # §5.4
         "moe_dispatch": moe_dispatch,              # beyond-paper
+        "sharding": sharding,                      # device-partitioned exec
     }
     all_modules = modules
     if args.smoke:
         common.SMOKE = True
-        modules = {k: modules[k] for k in ("overall", "moe_dispatch")}
+        modules = {k: modules[k] for k in ("overall", "moe_dispatch",
+                                           "sharding")}
     if args.only:
         modules = {args.only: all_modules[args.only]}
 
     rows: list = []
+    module_seconds = {}
     for name, mod in modules.items():
         t0 = time.time()
         print(f"# running {name} ...", file=sys.stderr, flush=True)
         mod.run(rows, scale=args.scale)
-        print(f"#   {name} done in {time.time() - t0:.1f}s", file=sys.stderr,
-              flush=True)
+        module_seconds[name] = round(time.time() - t0, 3)
+        print(f"#   {name} done in {module_seconds[name]:.1f}s",
+              file=sys.stderr, flush=True)
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    # one-line setup-vs-total summary (the plan_setup row is emitted by the
+    # overall module; total is the benchmark wall time) — seeds the
+    # perf-trajectory record alongside the JSON artifact
+    setup_us = cached_us = None
+    for name, us, derived in rows:
+        if name == "overall/plan_setup/total":
+            setup_us = us
+            for part in derived.split():
+                if part.startswith("cached_us="):
+                    cached_us = float(part.split("=", 1)[1])
+    wall_s = sum(module_seconds.values())
+    summary = {"plan_setup_fresh_us": setup_us,
+               "plan_setup_cached_us": cached_us,
+               "wall_seconds": round(wall_s, 3),
+               "module_seconds": module_seconds}
+    if setup_us is not None:
+        print(f"# BENCH summary: setup_us={setup_us:.1f} "
+              f"cached_setup_us={cached_us:.1f} wall_s={wall_s:.1f}",
+              file=sys.stderr, flush=True)
+    else:
+        print(f"# BENCH summary: wall_s={wall_s:.1f}", file=sys.stderr,
+              flush=True)
+
+    if args.json:
+        import jax
+        record = {
+            "meta": {"smoke": args.smoke, "scale": args.scale,
+                     "only": args.only,
+                     "devices": [str(d) for d in jax.devices()],
+                     "unix_time": time.time()},
+            "summary": summary,
+            "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
+                     for n, us, d in rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=1)
+        print(f"# wrote {args.json}", file=sys.stderr, flush=True)
 
 
 if __name__ == "__main__":

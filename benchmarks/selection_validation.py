@@ -4,8 +4,6 @@ the analysis step picked the fastest (within 5%, the paper's threshold).
 """
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core import workflow
 
 from .common import suite, timeit

@@ -1,0 +1,43 @@
+"""Device-partitioned execution: partition overhead, sharded-vs-single
+timing, and cost balance over the synthetic suite.
+
+On a single-device host (CPU CI) the sharded path degrades to the
+sequential fallback, so the interesting numbers there are the partition
+overhead (host-side, amortized by the plan cache) and the imbalance of
+the cost-balanced split; pass ``run.py --devices N`` to exercise real
+multi-shard dispatch over virtual host devices.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import partition, planner
+
+from .common import suite, timeit
+
+
+def run(rows: list, scale: int = 1):
+    devices = jax.devices()
+    nd = len(devices)
+    for name, a in suite(scale):
+        plan = planner.build_plan(a, a)
+
+        t_part = timeit(lambda: partition.partition_plan(plan, nd))
+        splan = partition.partition_plan(plan, nd)
+
+        t_single = timeit(lambda: planner.execute_plan(plan, a, a))
+        t_shard = timeit(lambda: planner.execute_sharded_plan(splan, a, a))
+
+        c1, _ = planner.execute_plan(plan, a, a)
+        c2, _ = planner.execute_sharded_plan(splan, a, a)
+        for x, y in ((c1.indptr, c2.indptr), (c1.indices, c2.indices),
+                     (c1.values, c2.values)):
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+
+        rows.append((f"sharding/{name}/partition", t_part * 1e6,
+                     f"n_dev={nd} imbalance={splan.imbalance:.3f}"))
+        rows.append((f"sharding/{name}/exec_single", t_single * 1e6,
+                     f"nnz={c1.nnz}"))
+        rows.append((f"sharding/{name}/exec_sharded", t_shard * 1e6,
+                     f"speedup=x{t_single / max(t_shard, 1e-12):.2f}"))

@@ -55,9 +55,9 @@ def main():
     # ESC-style scatter dispatch vs one-hot einsum dispatch (both exact)
     o1, _ = moe.apply_moe(layer, x, cfg, dispatch="einsum")
     o2, _ = moe.apply_moe(layer, x, cfg, dispatch="scatter")
-    print(f"  scatter vs einsum dispatch max diff: "
+    print("  scatter vs einsum dispatch max diff: "
           f"{float(jnp.abs(o1-o2).max()):.2e} (same result, "
-          f"O(T*D) vs O(T*E*C) data movement)")
+          "O(T*D) vs O(T*E*C) data movement)")
 
     # ------------------------------------------------------------------
     # Planner reuse on the dispatch pattern: expert co-routing statistics

@@ -1,1 +1,3 @@
 from .store import (CheckpointManager, restore_checkpoint, save_checkpoint)
+
+__all__ = ["CheckpointManager", "restore_checkpoint", "save_checkpoint"]

@@ -63,6 +63,9 @@ class DenseBin:
     cap: int                  # output slab width per row
     rows: np.ndarray          # row ids (original matrix row indices)
     ell_width: int            # padded A-row nnz width for this bin
+    cost: np.ndarray          # per-row estimated product counts (aligned
+                              # with ``rows``) — the load-balancing weight
+                              # device partitioning splits on
 
     @property
     def is_longrow(self) -> bool:
@@ -75,6 +78,14 @@ class BinPlan:
     esc_rows: np.ndarray      # rows handled by the ESC accumulator
     esc_caps: np.ndarray      # per-row capacity for ESC rows
     empty_rows: np.ndarray    # rows with zero products
+
+    @property
+    def esc_costs(self) -> np.ndarray:
+        """Per-row estimated product counts for the ESC bin. ESC capacity
+        *is* the product-count upper bound, so the cost vector coincides
+        with ``esc_caps``; exposed under its own name so partitioning code
+        reads as cost-based, not capacity-based."""
+        return self.esc_caps
 
     def describe(self) -> Dict[str, int]:
         d = {f"dense_w{b.window}x{b.col_tiles}": len(b.rows)
@@ -152,7 +163,8 @@ def plan_bins(pred_nnz: np.ndarray, products: np.ndarray,
         ell = _pow2_at_least(int(a_row_nnz[rows_arr].max()))
         dense_bins.append(DenseBin(window=window, col_tiles=tiles,
                                    cap=bin_cap, rows=rows_arr,
-                                   ell_width=ell))
+                                   ell_width=ell,
+                                   cost=products[rows_arr].astype(np.int64)))
 
     esc_rows = np.nonzero(esc_mask)[0]
     esc_caps = products[esc_rows].astype(np.int64)

@@ -73,8 +73,6 @@ def expand(a_indptr, a_indices, a_values, b_indptr, b_indices, b_values,
 
 def _pack_keys(rows, cols, n_cols: int, valid):
     """Paper §4.2: pack (row, col) into the narrowest integer key that fits."""
-    if True:  # decide statically from n_cols & worst-case rows at trace time
-        max_key = None
     rows64 = rows.astype(jnp.int64)
     key = rows64 * jnp.int64(n_cols) + jnp.where(valid, cols, 0).astype(jnp.int64)
     key = jnp.where(valid, key, jnp.iinfo(jnp.int64).max)

@@ -81,7 +81,6 @@ def merge_sketches(a_indptr, a_indices, b_sketches, *, num_rows_a: int) -> jax.A
     """Sketch of each C row = elementwise max of the B-row sketches selected
     by the corresponding A row. Returns (num_rows_a, m_regs) int32."""
     cap = a_indices.shape[0]
-    m_regs = b_sketches.shape[1]
     nnz_total = a_indptr[-1]
     valid = jnp.arange(cap, dtype=jnp.int32) < nnz_total
     row = jnp.clip(row_ids_from_indptr(a_indptr, cap), 0, num_rows_a - 1)

@@ -1,0 +1,204 @@
+"""Device-partitioned ExecutionPlans: shard the bin ladder across devices.
+
+An :class:`~repro.core.planner.ExecutionPlan` freezes Ocean's bin ladder —
+per-bin row sets, ELL gather maps, ESC capacities. This module splits that
+ladder across a device set: each bin's rows are divided into per-device
+shards balanced by the plan's *estimated per-row product counts* (the
+HLL/upper-bound cost model the analysis step already computed — FLOPs, not
+row count, exactly how distributed SpGEMM work partitions rows), and each
+shard reuses slices of the existing gather maps and ESC sub-structure, so
+partitioning never re-runs analysis, prediction, or binning.
+
+Because every Ocean kernel's per-row output is independent of which other
+rows share the launch, executing the shards on different devices and
+merging the slabs on the host reproduces single-device results
+bit-identically (``planner.execute_sharded_plan``).
+
+Balancing is greedy LPT (longest processing time first) with one load heap
+shared across all bins of the plan: per-bin splits stay disjoint covers of
+the bin's rows, while load is equalized globally across the whole ladder.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+from .formats import flat_gather_index
+from .planner import DenseBinExec, EscExec, ExecutionPlan, _pow2_at_least
+
+DeviceSpec = Union[None, int, Sequence, "jax.sharding.Mesh"]
+
+
+def resolve_devices(devices: DeviceSpec = None) -> Tuple:
+    """Normalize a device spec to a tuple of jax devices.
+
+    Accepts ``None`` (all local devices), an int (first N local devices), a
+    1-D mesh (e.g. ``launch.mesh.make_shard_mesh()``; any mesh is flattened
+    in row-major order), or an explicit device sequence.
+    """
+    if devices is None:
+        return tuple(jax.devices())
+    if isinstance(devices, int):
+        local = jax.devices()
+        if devices < 1 or devices > len(local):
+            raise ValueError(
+                f"requested {devices} devices, have {len(local)}")
+        return tuple(local[:devices])
+    if isinstance(devices, jax.sharding.Mesh):
+        return tuple(np.asarray(devices.devices).flatten().tolist())
+    devices = tuple(devices)
+    if not devices:
+        raise ValueError("empty device set")
+    return devices
+
+
+def topology_key(devices: Sequence) -> str:
+    """Stable string identity of an ordered device set — the extra
+    component plan caches key sharded plans by."""
+    return ",".join(f"{d.platform}:{d.id}" for d in devices)
+
+
+def balanced_split(costs: np.ndarray, n_shards: int,
+                   heap: Optional[list] = None) -> List[np.ndarray]:
+    """Split positions ``0..len(costs)-1`` into ``n_shards`` groups,
+    balancing the summed cost (greedy LPT: heaviest row first onto the
+    least-loaded shard).
+
+    ``heap`` is an optional ``[(load, shard_index), ...]`` heap carried
+    across calls so consecutive bins balance against the global load, not
+    just their own. Returns per-shard position arrays, each sorted
+    ascending (preserves the bin's row order within a shard).
+    """
+    costs = np.asarray(costs, np.int64)
+    if heap is None:
+        heap = [(0, i) for i in range(n_shards)]
+        heapq.heapify(heap)
+    sel: List[List[int]] = [[] for _ in range(n_shards)]
+    for p in np.argsort(-costs, kind="stable"):
+        load, i = heapq.heappop(heap)
+        sel[i].append(int(p))
+        heapq.heappush(heap, (load + int(costs[p]), i))
+    return [np.sort(np.asarray(s, np.int64)) for s in sel]
+
+
+def _slice_dense(be: DenseBinExec, sel: np.ndarray, device) -> DenseBinExec:
+    """Row-subset view of a dense bin: same window/tiles/cap/ell width,
+    sliced gather maps, device-committed ELL blocks. Row counts differ
+    per shard, so first execution jit-compiles per (bin, shard) shape;
+    the cached ShardedPlan then replays those specializations across
+    values-only traffic, which is where the compile cost amortizes."""
+    def put(x):
+        return jax.device_put(x, device)
+    return DenseBinExec(
+        window=be.window, col_tiles=be.col_tiles, cap=be.cap,
+        rows=be.rows[sel], ell_width=be.ell_width, is_longrow=be.is_longrow,
+        pos=be.pos[sel], valid=be.valid[sel],
+        a_rows=put(be.a_rows[sel]), a_starts=put(be.a_starts[sel]),
+        a_lens=put(be.a_lens[sel]), row_lo=put(be.row_lo[sel]),
+        cost=be.cost[sel], bin_id=be.bin_id)
+
+
+def _slice_esc(ex: EscExec, sel: np.ndarray) -> EscExec:
+    """Row-subset of the ESC bin, reusing the frozen sub-CSR structure via
+    a flat segment gather; capacity shrinks to the shard's product sum."""
+    new_ptr, seg = flat_gather_index(ex.sub_indptr, sel)
+    cost = ex.cost[sel]
+    p_cap = _pow2_at_least(int(cost.sum()) + 1)
+    return EscExec(rows=ex.rows[sel], sub_indptr=new_ptr.astype(np.int32),
+                   sub_indices=ex.sub_indices[seg], src=ex.src[seg],
+                   p_cap=p_cap, out_cap=p_cap, cost=cost)
+
+
+@dataclasses.dataclass
+class PlanShard:
+    """One device's slice of the bin ladder."""
+    index: int
+    device: object                  # jax Device
+    dense: List[DenseBinExec]
+    esc: Optional[EscExec]
+    cost: int                       # summed estimated products assigned
+
+
+@dataclasses.dataclass
+class ShardedPlan:
+    """A device-partitioned :class:`ExecutionPlan`.
+
+    Wraps (never copies) the base plan; shards hold row-subset slices of
+    the plan's bins with their ELL blocks committed to the target device.
+    Consumed by ``planner.execute_sharded_plan``; cached by
+    ``workflow.ocean_spgemm(..., devices=...)`` under the base structure
+    key extended with :func:`topology_key`.
+    """
+    plan: ExecutionPlan
+    devices: Tuple
+    shards: List[PlanShard]
+    topology: str
+    shard_costs: np.ndarray         # (n_shards,) int64
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def imbalance(self) -> float:
+        """max/mean estimated cost across shards (1.0 = perfect balance).
+        Meaningful when rows outnumber devices; with fewer rows than
+        devices the empty shards dominate the mean."""
+        mean = float(self.shard_costs.mean()) if len(self.shard_costs) else 0.0
+        if mean <= 0.0:
+            return 1.0
+        return float(self.shard_costs.max()) / mean
+
+    def describe(self) -> Dict[str, object]:
+        return {"topology": self.topology, "n_shards": self.n_shards,
+                "shard_costs": self.shard_costs.tolist(),
+                "imbalance": round(self.imbalance, 4)}
+
+
+def partition_plan(plan: ExecutionPlan,
+                   devices: DeviceSpec = None) -> ShardedPlan:
+    """Partition a plan's bin ladder across a device set.
+
+    Each bin's rows are split into per-device shards by greedy LPT on the
+    plan's estimated per-row product counts, with one load heap shared
+    across bins so the *total* estimated cost per device is balanced. With
+    a single device the plan's bins are passed through untouched (the
+    sequential-loop fallback), so partitioning is free there.
+    """
+    devs = resolve_devices(devices)
+    topo = topology_key(devs)
+    if len(devs) == 1:
+        cost = int(sum(int(be.cost.sum()) for be in plan.dense)
+                   + (int(plan.esc.cost.sum()) if plan.esc is not None
+                      else 0))
+        shard = PlanShard(index=0, device=devs[0], dense=list(plan.dense),
+                          esc=plan.esc, cost=cost)
+        return ShardedPlan(plan=plan, devices=devs, shards=[shard],
+                           topology=topo,
+                           shard_costs=np.asarray([cost], np.int64))
+
+    d = len(devs)
+    heap = [(0, i) for i in range(d)]
+    heapq.heapify(heap)
+    dense_by_shard: List[List[DenseBinExec]] = [[] for _ in range(d)]
+    esc_by_shard: List[Optional[EscExec]] = [None] * d
+    for be in plan.dense:
+        for i, sel in enumerate(balanced_split(be.cost, d, heap)):
+            if len(sel):
+                dense_by_shard[i].append(_slice_dense(be, sel, devs[i]))
+    if plan.esc is not None:
+        for i, sel in enumerate(balanced_split(plan.esc.cost, d, heap)):
+            if len(sel):
+                esc_by_shard[i] = _slice_esc(plan.esc, sel)
+    loads = np.zeros(d, np.int64)
+    for load, i in heap:
+        loads[i] = load
+    shards = [PlanShard(index=i, device=devs[i], dense=dense_by_shard[i],
+                        esc=esc_by_shard[i], cost=int(loads[i]))
+              for i in range(d)]
+    return ShardedPlan(plan=plan, devices=devs, shards=shards, topology=topo,
+                       shard_costs=loads)

@@ -54,6 +54,8 @@ class OceanReport:
     overflow_rows: int
     nnz_out: int
     plan_cache_hit: bool = False
+    n_shards: int = 1
+    shard_imbalance: float = 1.0
 
     @property
     def total_seconds(self) -> float:
@@ -61,11 +63,12 @@ class OceanReport:
 
     @property
     def setup_seconds(self) -> float:
-        """Host-side planning time: analysis + prediction + binning, plus
-        the plan-cache key hash/lookup when a cache was consulted."""
+        """Host-side planning time: analysis + prediction + binning (plus
+        device partitioning when sharded), plus the plan-cache key
+        hash/lookup when a cache was consulted."""
         return sum(self.stage_seconds.get(k, 0.0)
                    for k in ("plan_lookup", "analysis", "prediction",
-                             "binning"))
+                             "binning", "partition"))
 
 
 def _pow2_at_least(x: int, floor: int = 64) -> int:
@@ -126,6 +129,9 @@ class DenseBinExec:
     a_starts: jax.Array        # (R, ell) int32
     a_lens: jax.Array          # (R, ell) int32
     row_lo: jax.Array          # (R, 1) int32
+    cost: np.ndarray           # (R,) int64 per-row estimated product counts
+    bin_id: int                # position in the plan's bin ladder (stable
+                               # across sharding; shard slices keep it)
 
 
 @dataclasses.dataclass
@@ -137,6 +143,7 @@ class EscExec:
     src: np.ndarray            # flat gather into A's values
     p_cap: int
     out_cap: int
+    cost: np.ndarray           # per-row estimated product counts
 
 
 @dataclasses.dataclass
@@ -265,7 +272,7 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
 
     # Freeze per-bin structure: gather maps + value-independent ELL blocks.
     dense_execs: List[DenseBinExec] = []
-    for bn in plan.dense_bins:
+    for bin_id, bn in enumerate(plan.dense_bins):
         pos, valid, a_rows, a_starts, a_lens = kops.prep_bin_structure(
             a, b, bn.rows, bn.ell_width)
         lo_arr = (out_lo[bn.rows] if not bn.is_longrow
@@ -276,7 +283,8 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
             rows=bn.rows, ell_width=bn.ell_width, is_longrow=bn.is_longrow,
             pos=pos, valid=valid, a_rows=jnp.asarray(a_rows),
             a_starts=jnp.asarray(a_starts), a_lens=jnp.asarray(a_lens),
-            row_lo=row_lo))
+            row_lo=row_lo, cost=np.asarray(bn.cost, np.int64),
+            bin_id=bin_id))
 
     esc_exec = None
     if len(plan.esc_rows):
@@ -285,7 +293,8 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
         p_cap = _pow2_at_least(int(products[rows].sum()) + 1)
         esc_exec = EscExec(rows=rows, sub_indptr=sub_ptr.astype(np.int32),
                            sub_indices=np.asarray(a.indices)[src], src=src,
-                           p_cap=p_cap, out_cap=p_cap)
+                           p_cap=p_cap, out_cap=p_cap,
+                           cost=np.asarray(plan.esc_costs, np.int64))
     stage["binning"] = time.perf_counter() - t0
 
     return ExecutionPlan(
@@ -304,47 +313,47 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
 # Executor
 # ---------------------------------------------------------------------------
 
-def execute_plan(plan: ExecutionPlan, a: CSR, b: CSR, *,
-                 stage: Optional[Dict[str, float]] = None,
-                 cache_hit: bool = False) -> Tuple[CSR, OceanReport]:
-    """Run a frozen plan against (possibly new) values of A and B."""
-    if a.shape != plan.shape_a or b.shape != plan.shape_b:
-        raise ValueError(
-            f"plan built for {plan.shape_a} @ {plan.shape_b}, "
-            f"got {a.shape} @ {b.shape}")
-    stage = dict(stage) if stage else {"analysis": 0.0, "prediction": 0.0,
-                                       "binning": 0.0}
-    a_values = np.asarray(a.values)
-    products = plan.products
+def _run_dense_bin(be: DenseBinExec, a_values: np.ndarray, b_cols_pad,
+                   b_vals_pad):
+    """Dispatch one dense bin; returns device arrays (cols, vals, nnz).
 
-    # ---------------- numeric accumulation ----------------
-    t0 = time.perf_counter()
-    slabs: List[_Slab] = []
-    b_cols_pad, b_vals_pad = kops.pad_b_flat(b)
-    for be in plan.dense:
-        a_vals = jnp.asarray(
-            kops.gather_bin_values(a_values, be.pos, be.valid))
-        cols, vals, nnz = kops.dense_bin_op(
-            be.a_rows, a_vals, be.a_starts, be.a_lens, be.row_lo,
-            b_cols_pad, b_vals_pad, window=be.window,
-            col_tiles=be.col_tiles, cap=be.cap)
-        slabs.append(_Slab(be.rows, np.asarray(cols), np.asarray(vals),
-                           np.asarray(nnz, np.int64)))
-    if plan.esc is not None:
-        ex = plan.esc
-        res = esc_mod.esc_spgemm(
-            ex.sub_indptr, ex.sub_indices, a_values[ex.src],
-            b.indptr, b.indices, b.values, p_cap=ex.p_cap,
-            out_cap=ex.out_cap, num_rows_a=len(ex.rows), n_cols_b=b.n)
-        slab, _ = _esc_to_slab(res, ex.rows, len(ex.rows), ex.out_cap)
-        slabs.append(slab)
-    stage["numeric"] = time.perf_counter() - t0
+    Results are per-row independent, so any row subset of a bin produces
+    the same per-row output as the full bin — the property device
+    partitioning relies on for bit-identical merges.
+    """
+    a_vals = jnp.asarray(
+        kops.gather_bin_values(a_values, be.pos, be.valid))
+    return kops.dense_bin_op(
+        be.a_rows, a_vals, be.a_starts, be.a_lens, be.row_lo,
+        b_cols_pad, b_vals_pad, window=be.window,
+        col_tiles=be.col_tiles, cap=be.cap)
 
-    # ---------------- overflow fallback (paper §3.2) ----------------
-    t0 = time.perf_counter()
+
+def _run_esc_bin(ex: EscExec, a_values: np.ndarray, b: CSR, *,
+                 b_arrays: Optional[Tuple] = None):
+    """Dispatch the ESC bin; returns the (device-side) ESCResult.
+
+    ``b_arrays`` overrides ``(b.indptr, b.indices, b.values)`` with
+    device-committed copies (the sharded executor ships B to each shard's
+    device once instead of per call)."""
+    b_indptr, b_indices, b_values = (
+        b_arrays if b_arrays is not None else (b.indptr, b.indices,
+                                               b.values))
+    return esc_mod.esc_spgemm(
+        ex.sub_indptr, ex.sub_indices, a_values[ex.src],
+        b_indptr, b_indices, b_values, p_cap=ex.p_cap,
+        out_cap=ex.out_cap, num_rows_a=len(ex.rows), n_cols_b=b.n)
+
+
+def _overflow_fallback(products: np.ndarray, dense_slabs: List[_Slab],
+                       tail_slabs: List[_Slab], a: CSR,
+                       b: CSR) -> Tuple[List[_Slab], int]:
+    """Re-run rows whose dense slab overflowed through the exact ESC pass
+    (paper §3.2). One global pass over all overflow rows; per-row results
+    are independent of how rows were grouped."""
     overflow_rows: List[np.ndarray] = []
     kept: List[_Slab] = []
-    for s, be in zip(slabs[: len(plan.dense)], plan.dense):
+    for s in dense_slabs:
         over = s.nnz > s.cols.shape[1]
         if over.any():
             overflow_rows.append(s.rows[over])
@@ -353,7 +362,7 @@ def execute_plan(plan: ExecutionPlan, a: CSR, b: CSR, *,
                               s.nnz[keep]))
         else:
             kept.append(s)
-    kept.extend(slabs[len(plan.dense):])
+    kept.extend(tail_slabs)
     n_overflow = 0
     if overflow_rows:
         rows = np.concatenate(overflow_rows)
@@ -366,12 +375,13 @@ def execute_plan(plan: ExecutionPlan, a: CSR, b: CSR, *,
             n_cols_b=b.n)
         slab, _ = _esc_to_slab(res, rows, sub.m, p_cap)
         kept.append(slab)
-    slabs = kept
-    stage["overflow"] = time.perf_counter() - t0
+    return kept, n_overflow
 
-    # ---------------- post-processing: compaction to CSR ----------------
-    t0 = time.perf_counter()
-    m = a.m
+
+def _compact_slabs(slabs: List[_Slab], shape: Tuple[int, int],
+                   dtype) -> Tuple[CSR, int]:
+    """Scatter row-disjoint slabs into one CSR (order-independent)."""
+    m = shape[0]
     counts = np.zeros(m, np.int64)
     for s in slabs:
         counts[s.rows] = s.nnz
@@ -379,7 +389,7 @@ def execute_plan(plan: ExecutionPlan, a: CSR, b: CSR, *,
     np.cumsum(counts, out=indptr[1:])
     total = int(indptr[-1])
     out_cols = np.full(total, PAD_COL, np.int32)
-    out_vals = np.zeros(total, a_values.dtype)
+    out_vals = np.zeros(total, dtype)
     for s in slabs:
         if not len(s.rows):
             continue
@@ -390,7 +400,47 @@ def execute_plan(plan: ExecutionPlan, a: CSR, b: CSR, *,
         pos = indptr[s.rows][:, None] + slot
         out_cols[pos[valid]] = s.cols[valid]
         out_vals[pos[valid]] = s.vals[valid]
-    c = csr_from_arrays(indptr, out_cols, out_vals, (a.m, b.n))
+    return csr_from_arrays(indptr, out_cols, out_vals, shape), total
+
+
+def execute_plan(plan: ExecutionPlan, a: CSR, b: CSR, *,
+                 stage: Optional[Dict[str, float]] = None,
+                 cache_hit: bool = False) -> Tuple[CSR, OceanReport]:
+    """Run a frozen plan against (possibly new) values of A and B."""
+    if a.shape != plan.shape_a or b.shape != plan.shape_b:
+        raise ValueError(
+            f"plan built for {plan.shape_a} @ {plan.shape_b}, "
+            f"got {a.shape} @ {b.shape}")
+    stage = dict(stage) if stage else {"analysis": 0.0, "prediction": 0.0,
+                                       "binning": 0.0}
+    a_values = np.asarray(a.values)
+
+    # ---------------- numeric accumulation ----------------
+    t0 = time.perf_counter()
+    dense_slabs: List[_Slab] = []
+    b_cols_pad, b_vals_pad = kops.pad_b_flat(b)
+    for be in plan.dense:
+        cols, vals, nnz = _run_dense_bin(be, a_values, b_cols_pad,
+                                         b_vals_pad)
+        dense_slabs.append(_Slab(be.rows, np.asarray(cols), np.asarray(vals),
+                                 np.asarray(nnz, np.int64)))
+    tail_slabs: List[_Slab] = []
+    if plan.esc is not None:
+        ex = plan.esc
+        res = _run_esc_bin(ex, a_values, b)
+        slab, _ = _esc_to_slab(res, ex.rows, len(ex.rows), ex.out_cap)
+        tail_slabs.append(slab)
+    stage["numeric"] = time.perf_counter() - t0
+
+    # ---------------- overflow fallback (paper §3.2) ----------------
+    t0 = time.perf_counter()
+    slabs, n_overflow = _overflow_fallback(plan.products, dense_slabs,
+                                           tail_slabs, a, b)
+    stage["overflow"] = time.perf_counter() - t0
+
+    # ---------------- post-processing: compaction to CSR ----------------
+    t0 = time.perf_counter()
+    c, total = _compact_slabs(slabs, (a.m, b.n), a_values.dtype)
     stage["postprocess"] = time.perf_counter() - t0
 
     report = OceanReport(
@@ -402,21 +452,102 @@ def execute_plan(plan: ExecutionPlan, a: CSR, b: CSR, *,
     return c, report
 
 
+def execute_sharded_plan(splan, a: CSR, b: CSR, *,
+                         stage: Optional[Dict[str, float]] = None,
+                         cache_hit: bool = False) -> Tuple[CSR, OceanReport]:
+    """Run a :class:`~repro.core.partition.ShardedPlan` across its devices.
+
+    Each shard's bins are dispatched onto that shard's device (jax dispatch
+    is asynchronous, so device work overlaps; with a single device this
+    degrades to the plain sequential loop). Slabs are pulled back to the
+    host and merged through the same overflow fallback + compaction path as
+    :func:`execute_plan`. Because every bin's per-row results are
+    independent of which other rows share the kernel launch, the merged CSR
+    is bit-identical to single-device execution.
+    """
+    plan: ExecutionPlan = splan.plan
+    if a.shape != plan.shape_a or b.shape != plan.shape_b:
+        raise ValueError(
+            f"plan built for {plan.shape_a} @ {plan.shape_b}, "
+            f"got {a.shape} @ {b.shape}")
+    stage = dict(stage) if stage else {"analysis": 0.0, "prediction": 0.0,
+                                       "binning": 0.0, "partition": 0.0}
+    a_values = np.asarray(a.values)
+
+    # ---------------- numeric accumulation (per-device dispatch) ----------
+    t0 = time.perf_counter()
+    pending_dense = []   # (DenseBinExec, (cols, vals, nnz) device arrays)
+    pending_esc = []     # (EscExec, ESCResult device arrays)
+    multi = len(splan.shards) > 1
+    b_cols_host, b_vals_host = kops.pad_b_flat(b)  # pad once, ship per device
+    for shard in splan.shards:
+        if not shard.dense and shard.esc is None:
+            continue
+        with jax.default_device(shard.device):
+            if multi:
+                b_cols_pad = jax.device_put(b_cols_host, shard.device)
+                b_vals_pad = jax.device_put(b_vals_host, shard.device)
+            else:
+                b_cols_pad, b_vals_pad = b_cols_host, b_vals_host
+            for be in shard.dense:
+                pending_dense.append(
+                    (be, _run_dense_bin(be, a_values, b_cols_pad,
+                                        b_vals_pad)))
+            if shard.esc is not None:
+                b_esc = (tuple(jax.device_put(x, shard.device)
+                               for x in (b.indptr, b.indices, b.values))
+                         if multi else None)
+                pending_esc.append(
+                    (shard.esc, _run_esc_bin(shard.esc, a_values, b,
+                                             b_arrays=b_esc)))
+    # gather phase: blocks on each device's stream after all dispatches
+    dense_slabs = [
+        _Slab(be.rows, np.asarray(cols), np.asarray(vals),
+              np.asarray(nnz, np.int64))
+        for be, (cols, vals, nnz) in pending_dense]
+    tail_slabs = [
+        _esc_to_slab(res, ex.rows, len(ex.rows), ex.out_cap)[0]
+        for ex, res in pending_esc]
+    stage["numeric"] = time.perf_counter() - t0
+
+    # ---------------- overflow fallback + compaction (host merge) ---------
+    t0 = time.perf_counter()
+    slabs, n_overflow = _overflow_fallback(plan.products, dense_slabs,
+                                           tail_slabs, a, b)
+    stage["overflow"] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    c, total = _compact_slabs(slabs, (a.m, b.n), a_values.dtype)
+    stage["postprocess"] = time.perf_counter() - t0
+
+    report = OceanReport(
+        workflow=plan.workflow, er=plan.er, sampled_cr=plan.sampled_cr,
+        nproducts_avg=plan.nproducts_avg,
+        total_products=plan.total_products, m_regs=plan.m_regs,
+        stage_seconds=stage, bins=dict(plan.bins_describe),
+        overflow_rows=n_overflow, nnz_out=total, plan_cache_hit=cache_hit,
+        n_shards=len(splan.shards), shard_imbalance=splan.imbalance)
+    return c, report
+
+
 # ---------------------------------------------------------------------------
 # Plan cache
 # ---------------------------------------------------------------------------
 
 class PlanCache:
-    """Thread-safe LRU cache of ExecutionPlans keyed by structure hash."""
+    """Thread-safe LRU cache keyed by structure hash.
+
+    Holds :class:`ExecutionPlan` entries and, for device-partitioned
+    execution, :class:`~repro.core.partition.ShardedPlan` entries under
+    keys extended with the device topology."""
 
     def __init__(self, maxsize: int = 32):
         self.maxsize = maxsize
-        self._plans: "OrderedDict[str, ExecutionPlan]" = OrderedDict()
+        self._plans: "OrderedDict[str, object]" = OrderedDict()
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
-    def lookup(self, key: str) -> Optional[ExecutionPlan]:
+    def lookup(self, key: str):
         with self._lock:
             plan = self._plans.get(key)
             if plan is not None:
@@ -426,7 +557,19 @@ class PlanCache:
                 self.misses += 1
             return plan
 
-    def insert(self, key: str, plan: ExecutionPlan) -> None:
+    def peek(self, key: str):
+        """Non-counting lookup — internal reuse (e.g. partitioning a
+        cached base plan for a new device topology) must not skew the
+        request-level hit/miss statistics. Still refreshes LRU recency:
+        a base plan hot via sharded derivations must not be evicted as
+        cold."""
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self._plans.move_to_end(key)
+            return plan
+
+    def insert(self, key: str, plan) -> None:
         with self._lock:
             self._plans[key] = plan
             self._plans.move_to_end(key)

@@ -30,9 +30,11 @@ import jax.numpy as jnp
 from . import esc as esc_mod
 from .analysis import AnalysisResult, OceanConfig
 from .formats import CSR
+from .partition import (DeviceSpec, ShardedPlan, partition_plan,
+                        resolve_devices, topology_key)
 from .planner import (DEFAULT_PLAN_CACHE, ExecutionPlan, OceanReport,
                       PlanCache, _pow2_at_least, build_plan, execute_plan,
-                      gather_rows, structure_key)
+                      execute_sharded_plan, gather_rows, structure_key)
 
 __all__ = ["OceanReport", "ocean_spgemm", "ocean_spgemm_many",
            "spgemm_reference", "gather_rows"]
@@ -50,46 +52,96 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
                  force_workflow: Optional[str] = None,
                  assisted: bool = True, hybrid: bool = True,
                  analysis: Optional[AnalysisResult] = None,
-                 plan: Optional[ExecutionPlan] = None,
+                 plan: Union[ExecutionPlan, ShardedPlan, None] = None,
                  cache: Union[bool, PlanCache, None] = True,
                  sketch_cache: Optional[Dict] = None,
+                 devices: DeviceSpec = None,
                  ) -> Tuple[CSR, OceanReport]:
     """Estimation-based SpGEMM, C = A @ B. Returns (C, report).
 
-    ``plan``: execute a prebuilt :class:`ExecutionPlan` directly (its
-    structure must match ``a``/``b``).
+    ``plan``: execute a prebuilt :class:`ExecutionPlan` (or
+    :class:`ShardedPlan`) directly (its structure must match ``a``/``b``).
     ``cache``: ``True`` (default) uses the process-wide LRU plan cache,
     a :class:`PlanCache` instance uses that cache, ``False``/``None``
     always plans from scratch. A caller-supplied ``analysis`` bypasses the
     cache (its provenance is unknown to the keying scheme).
     ``sketch_cache``: dict shared across calls against the same B to reuse
     HLL sketches (see ``ocean_spgemm_many``).
+    ``devices``: partition the plan's bins across these devices (int,
+    device sequence, or 1-D mesh — see ``core.partition``) and execute the
+    shards in parallel; results are bit-identical to single-device
+    execution. Sharded plans are cached under the structure key extended
+    with the device topology, reusing a cached base plan when present.
+    Combined with an explicit ``plan=ExecutionPlan`` this re-partitions
+    per call — for repeated calls pass a prebuilt ``ShardedPlan`` instead.
     """
     if plan is not None:
+        if isinstance(plan, ShardedPlan):
+            if devices is not None:
+                topo = topology_key(resolve_devices(devices))
+                if topo != plan.topology:
+                    raise ValueError(
+                        f"plan was partitioned for [{plan.topology}], "
+                        f"devices= requests [{topo}]; re-partition the "
+                        "base plan with partition_plan(plan.plan, devices)")
+            return execute_sharded_plan(plan, a, b)
+        if devices is not None:
+            # convenience path: partitions on every call. For repeated
+            # values-only updates partition once (partition_plan) and pass
+            # the ShardedPlan; the cost is surfaced as the partition stage.
+            t0 = time.perf_counter()
+            splan = partition_plan(plan, devices)
+            stage = {"analysis": 0.0, "prediction": 0.0, "binning": 0.0,
+                     "partition": time.perf_counter() - t0}
+            return execute_sharded_plan(splan, a, b, stage=stage)
         return execute_plan(plan, a, b)
 
+    devs = resolve_devices(devices) if devices is not None else None
     cache_obj = _resolve_cache(cache) if analysis is None else None
     if cache_obj is not None:
         t0 = time.perf_counter()
         key = structure_key(a, b, cfg, force_workflow, assisted, hybrid)
-        cached = cache_obj.lookup(key)
+        lkey = key if devs is None else key + "|" + topology_key(devs)
+        cached = cache_obj.lookup(lkey)
         lookup_s = time.perf_counter() - t0
         if cached is not None:
             # the cached path's entire host-side setup cost is the O(nnz)
             # structure hash + LRU lookup
             stage = {"plan_lookup": lookup_s, "analysis": 0.0,
                      "prediction": 0.0, "binning": 0.0}
-            return execute_plan(cached, a, b, stage=stage, cache_hit=True)
-        fresh = build_plan(a, b, cfg, force_workflow=force_workflow,
-                           assisted=assisted, hybrid=hybrid,
-                           sketch_cache=sketch_cache, key=key)
-        cache_obj.insert(key, fresh)
-        stage = dict(fresh.build_seconds)
+            if devs is None:
+                return execute_plan(cached, a, b, stage=stage,
+                                    cache_hit=True)
+            return execute_sharded_plan(cached, a, b, stage=stage,
+                                        cache_hit=True)
+        # sharded miss: reuse a cached base plan for this structure if one
+        # exists (peek — the request-level stats already counted the miss)
+        base = cache_obj.peek(key) if devs is not None else None
+        if base is not None:
+            stage = {"analysis": 0.0, "prediction": 0.0, "binning": 0.0}
+        else:
+            base = build_plan(a, b, cfg, force_workflow=force_workflow,
+                              assisted=assisted, hybrid=hybrid,
+                              sketch_cache=sketch_cache, key=key)
+            cache_obj.insert(key, base)
+            stage = dict(base.build_seconds)
         stage["plan_lookup"] = lookup_s
-        return execute_plan(fresh, a, b, stage=stage)
+        if devs is None:
+            return execute_plan(base, a, b, stage=stage)
+        t0 = time.perf_counter()
+        splan = partition_plan(base, devs)
+        stage["partition"] = time.perf_counter() - t0
+        cache_obj.insert(lkey, splan)
+        return execute_sharded_plan(splan, a, b, stage=stage)
     fresh = build_plan(a, b, cfg, force_workflow=force_workflow,
                        assisted=assisted, hybrid=hybrid,
                        analysis=analysis, sketch_cache=sketch_cache)
+    if devs is not None:
+        stage = dict(fresh.build_seconds)
+        t0 = time.perf_counter()
+        splan = partition_plan(fresh, devs)
+        stage["partition"] = time.perf_counter() - t0
+        return execute_sharded_plan(splan, a, b, stage=stage)
     return execute_plan(fresh, a, b, stage=fresh.build_seconds)
 
 
@@ -98,18 +150,21 @@ def ocean_spgemm_many(a_list: Sequence[CSR], b: CSR,
                       force_workflow: Optional[str] = None,
                       assisted: bool = True, hybrid: bool = True,
                       cache: Union[bool, PlanCache, None] = True,
+                      devices: DeviceSpec = None,
                       ) -> List[Tuple[CSR, OceanReport]]:
     """Batched SpGEMM: ``[A_i @ B for A_i in a_list]`` against one B.
 
     Amortizes B-sketch construction across the stream of left-hand sides
     (the sketches depend only on B); per-call outputs are bit-identical to
     a Python loop of single ``ocean_spgemm`` calls because sketch
-    construction is deterministic.
+    construction is deterministic. ``devices`` shards every multiply in
+    the stream across the same device set (resolved once).
     """
     sketch_cache: Dict = {}
+    devs = resolve_devices(devices) if devices is not None else None
     return [ocean_spgemm(a, b, cfg, force_workflow=force_workflow,
                          assisted=assisted, hybrid=hybrid, cache=cache,
-                         sketch_cache=sketch_cache)
+                         sketch_cache=sketch_cache, devices=devs)
             for a in a_list]
 
 

@@ -1,1 +1,3 @@
 from .pipeline import DataConfig, SyntheticLM, make_pipeline
+
+__all__ = ["DataConfig", "SyntheticLM", "make_pipeline"]

@@ -25,7 +25,6 @@ Roofline terms use TPU v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM,
 """
 
 import argparse
-import dataclasses
 import json
 import re
 import time
@@ -34,7 +33,6 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro import configs
@@ -260,7 +258,6 @@ def build_train_cell(cfg: ModelConfig, shape, policy: ShardingPolicy,
     bb = _block_body_args(cfg, policy, shapes, specs, b_, l_, dtype)
     plan = bb["plan"]
     kinds = plan.period_kinds
-    positions = None
 
     def body_grad(bp, x):
         def run(bp, x):

@@ -94,7 +94,6 @@ class ShardingPolicy:
 
     def param_spec(self, shape, logical: PartitionSpec) -> PartitionSpec:
         used: set = set()
-        axes = []
         # map the most-parallel axes first (model before data)
         order = sorted(range(len(shape)),
                        key=lambda i: 0 if logical[i] in

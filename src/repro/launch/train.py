@@ -10,13 +10,10 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.data import DataConfig
 from repro.launch.mesh import make_local_mesh
-from repro.launch.sharding import ShardingPolicy
 from repro.models import lm
 from repro.optim import AdamWConfig, adamw_init
 from repro.train import TrainLoopConfig, train_loop
@@ -44,7 +41,6 @@ def main():
                          "enc-dec training; this CLI trains decoder LMs")
 
     mesh = make_local_mesh(data=len(jax.devices()), model=1)
-    policy = ShardingPolicy(mesh, "tp")
     params, _ = lm.init_model(jax.random.PRNGKey(args.seed), cfg)
     opt_state = adamw_init(params)
     opt_cfg = AdamWConfig(lr=args.lr)

@@ -15,13 +15,12 @@ O(kv_lora_rank + rope_dim) per token instead of O(heads * head_dim).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from .config import ModelConfig
-from .layers import P, apply_rope, dense, make_param, ones_param, rms_norm
+from .layers import apply_rope, dense, make_param, ones_param, rms_norm
 
 NEG_INF = -1e30
 

@@ -8,8 +8,7 @@ from axis annotations at the top level.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, NamedTuple, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.optim import AdamWConfig, adamw_update, cosine_schedule
 from repro.optim.adamw import compress_grads
 from . import transformer as tf
 from .config import ModelConfig

@@ -134,7 +134,8 @@ def apply_mamba(params, x, cfg: ModelConfig, *, cache=None,
     # of saving the (B, chunk, d_inner, d_state) state history per chunk.
     @functools.partial(jax.checkpoint, prevent_cse=False)
     def chunk_step(h, i):
-        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, i * chunk, chunk, 1)
+        def sl(t):
+            return jax.lax.dynamic_slice_in_dim(t, i * chunk, chunk, 1)
         y, h_next = _chunk_scan(sl(xc_p), sl(dt_p), sl(b_p), sl(c_p), a, h)
         return h_next, y
 

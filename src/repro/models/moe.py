@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .config import ModelConfig
-from .layers import P, dense, make_param
+from .layers import dense, make_param
 
 
 def init_mlp(key, d_model: int, d_ff: int):

@@ -10,7 +10,7 @@ remat a natural boundary.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +19,7 @@ from . import attention as attn_mod
 from . import mamba as mamba_mod
 from . import moe as moe_mod
 from .config import ModelConfig
-from .layers import P, dense, make_param, ones_param, rms_norm, split_tree
+from .layers import P, make_param, ones_param, rms_norm
 
 
 class LayerKind(NamedTuple):
@@ -366,7 +366,6 @@ def apply_encdec(params, audio_embeds, tokens, cfg: ModelConfig, *,
             jnp.ones((b, 1), jnp.int32)
     else:
         positions = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32), (b, l))
-    kind = LayerKind("attn", 0, "dense")
     new_self = [] if caches is not None else None
     cross_kv_list = []
 

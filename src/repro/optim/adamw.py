@@ -32,7 +32,8 @@ class AdamWState(NamedTuple):
 
 
 def adamw_init(params) -> AdamWState:
-    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    def zeros(p):
+        return jnp.zeros_like(p, dtype=jnp.float32)
     return AdamWState(step=jnp.zeros((), jnp.int32),
                       mu=jax.tree_util.tree_map(zeros, params),
                       nu=jax.tree_util.tree_map(zeros, params))

@@ -1,2 +1,5 @@
 from .engine import Request, ServeConfig, ServingEngine
 from .spgemm_service import ServiceStats, SpGEMMService
+
+__all__ = ["Request", "ServeConfig", "ServingEngine",
+           "ServiceStats", "SpGEMMService"]

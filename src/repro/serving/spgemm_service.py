@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core.analysis import OceanConfig
 from repro.core.formats import CSR
+from repro.core.partition import DeviceSpec, resolve_devices
 from repro.core.planner import OceanReport, PlanCache
 from repro.core.workflow import ocean_spgemm
 
@@ -38,13 +39,24 @@ class ServiceStats:
 
 
 class SpGEMMService:
-    """Stateful SpGEMM endpoint with plan caching across requests."""
+    """Stateful SpGEMM endpoint with plan caching across requests.
+
+    ``devices`` (int, device sequence, or 1-D mesh) makes every request
+    execute as a device-partitioned plan so one service instance can
+    saturate a multi-device host; sharded plans live in the same LRU
+    cache, keyed by structure + device topology. Default: single-device
+    execution, as before.
+    """
 
     def __init__(self, cfg: OceanConfig = OceanConfig(), *,
-                 plan_cache_size: int = 64):
+                 plan_cache_size: int = 64, devices: DeviceSpec = None):
         self.cfg = cfg
         self.plan_cache = PlanCache(maxsize=plan_cache_size)
         self.stats = ServiceStats()
+        # resolve once so every request shards over an identical topology
+        # (and therefore hits the same cached ShardedPlan)
+        self.devices = (resolve_devices(devices) if devices is not None
+                        else None)
         # sketch caches per right-hand side, keyed by B's structure hash —
         # kept small (LRU); a stream usually reuses a handful of Bs.
         self._sketch_caches: "OrderedDict[str, Dict]" = OrderedDict()
@@ -72,7 +84,7 @@ class SpGEMMService:
         c, report = ocean_spgemm(
             a, b, self.cfg, force_workflow=force_workflow,
             assisted=assisted, hybrid=hybrid, cache=self.plan_cache,
-            sketch_cache=self._sketch_cache_for(b))
+            sketch_cache=self._sketch_cache_for(b), devices=self.devices)
         self.stats.requests += 1
         self.stats.plan_hits += int(report.plan_cache_hit)
         self.stats.plan_misses += int(not report.plan_cache_hit)

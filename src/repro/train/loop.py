@@ -19,7 +19,6 @@ import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.data import DataConfig, SyntheticLM

@@ -1,7 +1,11 @@
 """Shared test configuration.
 
 Makes ``src`` importable even when PYTHONPATH is not set (CI convenience;
-the canonical tier-1 invocation still sets ``PYTHONPATH=src``).
+the canonical tier-1 invocation still sets ``PYTHONPATH=src``), and forces
+a small multi-device host platform so device-partitioned execution
+(``core.partition``) is exercised for real. The flag must be set before
+jax initializes, which conftest import order guarantees; subprocess tests
+(``test_launch``) override XLA_FLAGS explicitly and are unaffected.
 """
 import os
 import sys
@@ -10,3 +14,23 @@ _SRC = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
+
+if "--xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4").strip()
+
+
+def csr_bits(c):
+    """Host tuples of a CSR's raw arrays (for bit-exact comparisons)."""
+    import numpy as np
+    return (np.asarray(c.indptr), np.asarray(c.indices),
+            np.asarray(c.values))
+
+
+def assert_bit_identical(c1, c2):
+    """Assert two CSRs are identical byte for byte."""
+    import numpy as np
+    for x, y in zip(csr_bits(c1), csr_bits(c2)):
+        np.testing.assert_array_equal(x, y)

@@ -45,9 +45,9 @@ def _random_bin(seed, nB, n, R, E, dtype):
     a_rows = rng.integers(0, nB, (R, E)).astype(np.int32)
     a_vals = rng.standard_normal((R, E)).astype(dtype)
     for i in range(R):
-        l = rng.integers(1, E + 1)
-        a_rows[i, l:] = -1
-        a_vals[i, l:] = 0
+        ln = rng.integers(1, E + 1)
+        a_rows[i, ln:] = -1
+        a_vals[i, ln:] = 0
     k = np.maximum(a_rows, 0)
     a_starts = np.where(a_rows >= 0, b_indptr[k], 0).astype(np.int32)
     a_lens = np.where(a_rows >= 0, b_indptr[k + 1] - b_indptr[k], 0).astype(np.int32)

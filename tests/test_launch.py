@@ -1,14 +1,12 @@
 """Launch-layer tests: sharding rules, mesh isolation, and a subprocess
 dry-run smoke (small forced-device mesh so the main test process keeps its
 single-device view)."""
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
 import numpy as np
-import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

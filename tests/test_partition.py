@@ -1,0 +1,284 @@
+"""Device-partitioned plan execution: sharding properties + exactness.
+
+conftest forces a 4-device host platform, so multi-device dispatch runs
+for real (virtual CPU devices — the same code path as a multi-chip host).
+"""
+import jax
+import numpy as np
+import pytest
+
+try:  # hypothesis is optional: the suite must collect and pass without it
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fixed-seed fallback, same properties
+    from _hypothesis_fallback import given, settings, st
+
+from conftest import assert_bit_identical
+from repro.core import formats, partition, planner, workflow
+from repro.core.analysis import OceanConfig
+from repro.launch.mesh import make_shard_mesh
+from repro.serving import SpGEMMService
+
+N_DEV = len(jax.devices())
+
+
+GENS = [
+    ("uniform", lambda: formats.random_uniform_csr(41, 220, 220, 10.0)),
+    ("banded", lambda: formats.banded_csr(42, 180, 180, 40)),
+    ("hypersparse", lambda: formats.hypersparse_csr(43, 700, 700)),
+    ("skewed", lambda: formats.skewed_rows_csr(44, 400, 400, 5.0)),
+    ("powerlaw", lambda: formats.powerlaw_csr(45, 256, 256, 8.0)),
+]
+
+
+def test_forced_multidevice_host():
+    """The suite is meant to run with >= 2 devices (conftest forces 4);
+    partitioning must see them."""
+    assert N_DEV >= 2
+    assert len(partition.resolve_devices(None)) == N_DEV
+    assert len(partition.resolve_devices(2)) == 2
+
+
+# ---------------------------------------------------------------------------
+# Property: shards are a disjoint cover of every bin
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,gen", GENS)
+@pytest.mark.parametrize("n_dev", [2, 3, 4])
+def test_shards_disjoint_cover_of_each_bin(name, gen, n_dev):
+    a = gen()
+    plan = planner.build_plan(a, a)
+    splan = partition.partition_plan(plan, n_dev)
+    assert splan.n_shards == n_dev
+    # dense bins: group shard slices by bin_id, compare row sets
+    for bin_id, be in enumerate(plan.dense):
+        shard_rows = [s.rows for sh in splan.shards for s in sh.dense
+                      if s.bin_id == bin_id]
+        got = np.concatenate(shard_rows) if shard_rows else np.zeros(0, int)
+        assert len(got) == len(np.unique(got)), "shard row-sets overlap"
+        np.testing.assert_array_equal(np.sort(got), np.sort(be.rows))
+    # esc bin
+    if plan.esc is not None:
+        got = np.concatenate([sh.esc.rows for sh in splan.shards
+                              if sh.esc is not None])
+        assert len(got) == len(np.unique(got))
+        np.testing.assert_array_equal(np.sort(got), np.sort(plan.esc.rows))
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 4))
+def test_property_balanced_split_disjoint_cover(seed, n_shards):
+    rng = np.random.default_rng(seed)
+    costs = rng.integers(1, 1000, int(rng.integers(1, 400)))
+    sels = partition.balanced_split(costs, n_shards)
+    flat = np.concatenate(sels) if sels else np.zeros(0, int)
+    np.testing.assert_array_equal(np.sort(flat), np.arange(len(costs)))
+    for s in sels:  # within-shard positions stay ascending
+        assert np.all(np.diff(s) > 0) if len(s) > 1 else True
+
+
+# ---------------------------------------------------------------------------
+# Property: estimated-cost imbalance is bounded
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_dev", [2, 4])
+def test_cost_imbalance_bounded_on_suite(n_dev):
+    """Acceptance criterion: <= 2x max/mean estimated-cost imbalance on
+    the tier-1 random-matrix suite."""
+    for name, a in formats.make_suite(scale=1):
+        plan = planner.build_plan(a, a)
+        splan = partition.partition_plan(plan, n_dev)
+        assert splan.imbalance <= 2.0, (name, splan.describe())
+        # shard costs account for every bin's total estimated cost
+        want = (sum(int(be.cost.sum()) for be in plan.dense)
+                + (int(plan.esc.cost.sum()) if plan.esc is not None else 0))
+        assert int(splan.shard_costs.sum()) == want
+
+
+# ---------------------------------------------------------------------------
+# Exactness: sharded execution == single-device execution, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,gen", GENS)
+@pytest.mark.parametrize("n_dev", [1, 2, 4])
+def test_sharded_equals_single_device_exact(name, gen, n_dev):
+    a = gen()
+    plan = planner.build_plan(a, a)
+    c1, _ = planner.execute_plan(plan, a, a)
+    splan = partition.partition_plan(plan, n_dev)
+    c2, rep = planner.execute_sharded_plan(splan, a, a)
+    assert_bit_identical(c1, c2)
+    assert rep.n_shards == n_dev
+    assert rep.nnz_out == c1.nnz
+
+
+def test_sharded_exact_rectangular():
+    a = formats.random_uniform_csr(7, 128, 512, 12.0)
+    at = formats.csr_from_dense(np.asarray(a.to_dense()).T)
+    plan = planner.build_plan(a, at)
+    c1, _ = planner.execute_plan(plan, a, at)
+    c2, _ = planner.execute_sharded_plan(
+        partition.partition_plan(plan, N_DEV), a, at)
+    assert_bit_identical(c1, c2)
+
+
+def test_sharded_exact_under_overflow():
+    """Deliberately undersized capacities: the overflow fallback must
+    produce identical results through the sharded path too."""
+    a = formats.random_uniform_csr(10, 200, 200, 16.0)
+    cfg = OceanConfig(expansion=0.05, expansion_small_regs=0.05,
+                      cr_threshold=0.0, er_threshold=0.0,
+                      upper_bound_avg_products=0.0)
+    plan = planner.build_plan(a, a, cfg, force_workflow="estimation")
+    c1, rep1 = planner.execute_plan(plan, a, a)
+    assert rep1.overflow_rows > 0
+    c2, rep2 = planner.execute_sharded_plan(
+        partition.partition_plan(plan, 4), a, a)
+    assert rep2.overflow_rows == rep1.overflow_rows
+    assert_bit_identical(c1, c2)
+
+
+def test_more_devices_than_rows():
+    """3-row matrix over 4 devices: some shards stay empty, result exact."""
+    dense = np.array([[1.0, 0, 2.0, 0], [0, 3.0, 0, 0], [4.0, 0, 0, 5.0]],
+                     np.float32)
+    a = formats.csr_from_dense(dense)
+    b = formats.csr_from_dense(dense.T.copy())
+    plan = planner.build_plan(a, b)
+    splan = partition.partition_plan(plan, 4)
+    c1, _ = planner.execute_plan(plan, a, b)
+    c2, _ = planner.execute_sharded_plan(splan, a, b)
+    assert_bit_identical(c1, c2)
+    np.testing.assert_allclose(np.asarray(c2.to_dense()), dense @ dense.T,
+                               atol=1e-5)
+
+
+def test_single_device_fallback_reuses_plan_bins():
+    a = formats.banded_csr(48, 160, 160, 30)
+    plan = planner.build_plan(a, a)
+    splan = partition.partition_plan(plan, 1)
+    assert splan.n_shards == 1
+    # the sequential fallback wraps the plan's own bins, no slicing copies
+    assert all(s is p for s, p in zip(splan.shards[0].dense, plan.dense))
+    assert splan.shards[0].esc is plan.esc
+    c1, _ = planner.execute_plan(plan, a, a)
+    c2, _ = planner.execute_sharded_plan(splan, a, a)
+    assert_bit_identical(c1, c2)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+def test_property_sharded_exact_on_random_pairs(seed, n_dev):
+    rng = np.random.default_rng(seed)
+    m, k, n = (int(rng.integers(2, 60)) for _ in range(3))
+    am = ((rng.random((m, k)) < 0.15) *
+          rng.integers(-3, 4, (m, k))).astype(np.float32)
+    bm = ((rng.random((k, n)) < 0.15) *
+          rng.integers(-3, 4, (k, n))).astype(np.float32)
+    a, b = formats.csr_from_dense(am), formats.csr_from_dense(bm)
+    if a.nnz == 0 or b.nnz == 0:
+        return
+    plan = planner.build_plan(a, b)
+    c1, _ = planner.execute_plan(plan, a, b)
+    c2, _ = planner.execute_sharded_plan(
+        partition.partition_plan(plan, n_dev), a, b)
+    assert_bit_identical(c1, c2)
+    np.testing.assert_allclose(np.asarray(c2.to_dense()), am @ bm, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Workflow / cache / service integration
+# ---------------------------------------------------------------------------
+
+def test_workflow_devices_and_topology_cache_keying():
+    a = formats.random_uniform_csr(99, 300, 300, 9.0)
+    cache = planner.PlanCache()
+    c1, rep1 = workflow.ocean_spgemm(a, a, cache=cache, devices=2)
+    assert not rep1.plan_cache_hit and rep1.n_shards == 2
+    c2, rep2 = workflow.ocean_spgemm(a, a, cache=cache, devices=2)
+    assert rep2.plan_cache_hit and rep2.n_shards == 2
+    assert_bit_identical(c1, c2)
+    # different topology -> different key -> miss (base plan reused, so
+    # no analysis/prediction/binning is re-done)
+    _, rep3 = workflow.ocean_spgemm(a, a, cache=cache, devices=4)
+    assert not rep3.plan_cache_hit and rep3.n_shards == 4
+    for k in ("analysis", "prediction", "binning"):
+        assert rep3.stage_seconds[k] == 0.0
+    # unsharded call hits the base plan inserted by the sharded miss
+    c4, rep4 = workflow.ocean_spgemm(a, a, cache=cache)
+    assert rep4.plan_cache_hit and rep4.n_shards == 1
+    assert_bit_identical(c1, c4)
+
+
+def test_workflow_devices_accepts_mesh_and_device_list():
+    a = formats.banded_csr(50, 150, 150, 25)
+    c0, _ = workflow.ocean_spgemm(a, a, cache=False)
+    mesh = make_shard_mesh(2)
+    c1, rep1 = workflow.ocean_spgemm(a, a, cache=False, devices=mesh)
+    assert rep1.n_shards == 2
+    c2, rep2 = workflow.ocean_spgemm(a, a, cache=False,
+                                     devices=jax.devices()[:3])
+    assert rep2.n_shards == 3
+    assert_bit_identical(c0, c1)
+    assert_bit_identical(c0, c2)
+
+
+def test_workflow_many_with_devices_bit_exact():
+    b = formats.random_uniform_csr(52, 180, 180, 12.0)
+    a_list = [formats.random_uniform_csr(53 + i, 140, 180, 8.0)
+              for i in range(3)]
+    many = workflow.ocean_spgemm_many(a_list, b, cache=planner.PlanCache(),
+                                      devices=N_DEV)
+    loop = [workflow.ocean_spgemm(a, b, cache=False) for a in a_list]
+    for (cm, rm), (cl, _) in zip(many, loop):
+        assert rm.n_shards == N_DEV
+        assert_bit_identical(cm, cl)
+
+
+def test_service_devices_saturates_topology():
+    a = formats.random_uniform_csr(60, 250, 250, 10.0)
+    svc = SpGEMMService(devices=N_DEV)
+    c1, rep1 = svc.multiply(a, a)
+    c2, rep2 = svc.multiply(a, a)
+    assert rep1.n_shards == N_DEV and rep2.n_shards == N_DEV
+    assert svc.stats.plan_hits == 1 and svc.stats.plan_misses == 1
+    assert_bit_identical(c1, c2)
+    ref, _ = workflow.ocean_spgemm(a, a, cache=False)
+    assert_bit_identical(c1, ref)
+
+
+def test_resolve_devices_rejects_bad_specs():
+    with pytest.raises(ValueError):
+        partition.resolve_devices(N_DEV + 1)
+    with pytest.raises(ValueError):
+        partition.resolve_devices(0)
+    with pytest.raises(ValueError):
+        partition.resolve_devices([])
+
+
+def test_prebuilt_sharded_plan_via_workflow():
+    a = formats.banded_csr(61, 140, 140, 20)
+    plan = planner.build_plan(a, a)
+    splan = partition.partition_plan(plan, 2)
+    c1, rep1 = workflow.ocean_spgemm(a, a, plan=splan)
+    assert rep1.n_shards == 2
+    c2, _ = workflow.ocean_spgemm(a, a, plan=plan)
+    assert_bit_identical(c1, c2)
+    # matching devices= is accepted; a different topology is rejected
+    # rather than silently executing on the plan's own device set
+    c3, _ = workflow.ocean_spgemm(a, a, plan=splan, devices=2)
+    assert_bit_identical(c1, c3)
+    with pytest.raises(ValueError):
+        workflow.ocean_spgemm(a, a, plan=splan, devices=4)
+
+
+def test_peek_refreshes_lru_recency_without_counting():
+    """A base plan kept hot only via sharded derivations (peek) must not
+    be evicted as cold, and peek must not skew hit/miss stats."""
+    cache = planner.PlanCache(maxsize=2)
+    cache.insert("k0", "plan0")
+    cache.insert("k1", "plan1")
+    assert cache.peek("k0") == "plan0"
+    assert cache.stats()["hits"] == 0 and cache.stats()["misses"] == 0
+    cache.insert("k2", "plan2")  # evicts k1 (LRU after the peek), not k0
+    assert cache.peek("k0") == "plan0"
+    assert cache.peek("k1") is None

@@ -3,18 +3,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import assert_bit_identical
 from repro.core import formats, planner, workflow
-from repro.core.analysis import OceanConfig
-
-
-def csr_bits(c):
-    return (np.asarray(c.indptr), np.asarray(c.indices),
-            np.asarray(c.values))
-
-
-def assert_bit_identical(c1, c2):
-    for x, y in zip(csr_bits(c1), csr_bits(c2)):
-        np.testing.assert_array_equal(x, y)
 
 
 def with_values(a, values):
