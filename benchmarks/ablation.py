@@ -12,6 +12,7 @@ import numpy as np
 
 from repro.core import workflow
 
+from . import common
 from .common import flops_of, geomean, suite, timeit
 
 VERSIONS = {
@@ -30,9 +31,12 @@ def run(rows: list, scale: int = 1):
         fl = flops_of(a, a)
         for v, kw in VERSIONS.items():
             # cache=False: measure the algorithm, not the plan cache
-            t = timeit(lambda: workflow.ocean_spgemm(a, a, cache=False, **kw))
+            ex = common.EXECUTOR
+            t = timeit(lambda: workflow.ocean_spgemm(a, a, cache=False,
+                                                     executor=ex, **kw))
             gf[v].append(fl / t / 1e9)
-            _, rep = workflow.ocean_spgemm(a, a, cache=False, **kw)
+            _, rep = workflow.ocean_spgemm(a, a, cache=False, executor=ex,
+                                           **kw)
             tot = max(rep.total_seconds, 1e-9)
             for st, sec in rep.stage_seconds.items():
                 stage_shares[v].setdefault(st, []).append(sec / tot)

@@ -12,6 +12,11 @@ from repro.core import formats
 # run finishes in seconds while exercising the same code paths.
 SMOKE = False
 
+# Set by ``run.py --executor``: which core.executor pipeline the workflow
+# benchmarks run through ("pipelined" overlaps the host merge, "serial"
+# keeps the global barrier; output is bit-identical either way).
+EXECUTOR = "pipelined"
+
 
 def flops_of(a, b) -> int:
     """Paper convention: FLOPs = 2 x number of intermediate products."""

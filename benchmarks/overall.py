@@ -18,6 +18,7 @@ from __future__ import annotations
 
 from repro.core import planner, workflow
 
+from . import common
 from .common import flops_of, geomean, suite, timeit
 
 
@@ -25,6 +26,7 @@ def run(rows: list, scale: int = 1):
     per_method = {m: [] for m in ("ocean", "ocean_cached", "two_pass",
                                   "upper_bound", "esc_global")}
     setup_fresh, setup_cached = [], []
+    ex = common.EXECUTOR
     for name, a in suite(scale):
         fl = flops_of(a, a)
         cache = planner.PlanCache()
@@ -32,18 +34,20 @@ def run(rows: list, scale: int = 1):
         # fresh-path methods plan from scratch on every call (cache=False)
         # so the numbers measure the algorithm, as the seed workflow did
         def ocean():
-            workflow.ocean_spgemm(a, a, cache=False)
+            workflow.ocean_spgemm(a, a, cache=False, executor=ex)
 
         def ocean_cached():
-            workflow.ocean_spgemm(a, a, cache=cache)
+            workflow.ocean_spgemm(a, a, cache=cache, executor=ex)
 
         def two_pass():
             workflow.ocean_spgemm(a, a, force_workflow="symbolic",
-                                  assisted=False, hybrid=False, cache=False)
+                                  assisted=False, hybrid=False, cache=False,
+                                  executor=ex)
 
         def upper_bound():
             workflow.ocean_spgemm(a, a, force_workflow="upper_bound",
-                                  assisted=False, hybrid=True, cache=False)
+                                  assisted=False, hybrid=True, cache=False,
+                                  executor=ex)
 
         def esc_global():
             workflow.spgemm_reference(a, a)
@@ -59,8 +63,8 @@ def run(rows: list, scale: int = 1):
                          f"gflops={gflops:.3f}"))
 
         # host-side planning cost: fresh build vs plan-cache hit
-        _, rep_fresh = workflow.ocean_spgemm(a, a, cache=False)
-        _, rep_hit = workflow.ocean_spgemm(a, a, cache=cache)
+        _, rep_fresh = workflow.ocean_spgemm(a, a, cache=False, executor=ex)
+        _, rep_hit = workflow.ocean_spgemm(a, a, cache=cache, executor=ex)
         assert rep_hit.plan_cache_hit
         setup_fresh.append(rep_fresh.setup_seconds)
         setup_cached.append(rep_hit.setup_seconds)

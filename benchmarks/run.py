@@ -26,6 +26,10 @@ def main() -> None:
                     help="also write rows + timing summary as JSON")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N virtual host devices before jax init")
+    ap.add_argument("--executor", default="pipelined",
+                    choices=("pipelined", "serial"),
+                    help="core.executor pipeline the workflow benchmarks "
+                         "run through (output is bit-identical either way)")
     args = ap.parse_args()
 
     if args.devices:
@@ -50,6 +54,7 @@ def main() -> None:
         "sharding": sharding,                      # device-partitioned exec
     }
     all_modules = modules
+    common.EXECUTOR = args.executor
     if args.smoke:
         common.SMOKE = True
         modules = {k: modules[k] for k in ("overall", "moe_dispatch",
@@ -75,17 +80,35 @@ def main() -> None:
     # overall module; total is the benchmark wall time) — seeds the
     # perf-trajectory record alongside the JSON artifact
     setup_us = cached_us = None
+    overlap_fracs = {}
     for name, us, derived in rows:
         if name == "overall/plan_setup/total":
             setup_us = us
-            for part in derived.split():
-                if part.startswith("cached_us="):
-                    cached_us = float(part.split("=", 1)[1])
+        for part in derived.split():
+            if name == "overall/plan_setup/total" and \
+                    part.startswith("cached_us="):
+                cached_us = float(part.split("=", 1)[1])
+            if part.startswith("merge_overlap_frac="):
+                overlap_fracs[name] = float(part.split("=", 1)[1])
     wall_s = sum(module_seconds.values())
     summary = {"plan_setup_fresh_us": setup_us,
                "plan_setup_cached_us": cached_us,
                "wall_seconds": round(wall_s, 3),
-               "module_seconds": module_seconds}
+               "module_seconds": module_seconds,
+               "executor": args.executor,
+               # per-benchmark pipelined-merge overlap + the headline max —
+               # the sharding module asserts pipelined == serial output
+               # before emitting these, so their presence doubles as the
+               # correctness canary. Only published when the run's
+               # configured executor is pipelined, so a --executor serial
+               # record never carries overlap it did not measure.
+               "merge_overlap_frac": (max(overlap_fracs.values())
+                                      if overlap_fracs
+                                      and args.executor == "pipelined"
+                                      else None),
+               "merge_overlap_frac_by_row": (overlap_fracs
+                                             if args.executor == "pipelined"
+                                             else {})}
     if setup_us is not None:
         print(f"# BENCH summary: setup_us={setup_us:.1f} "
               f"cached_setup_us={cached_us:.1f} wall_s={wall_s:.1f}",

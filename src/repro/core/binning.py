@@ -19,6 +19,8 @@ from typing import Dict, List
 
 import numpy as np
 
+from .formats import pow2_at_least
+
 # Dense VMEM window ladder. The largest window (4096 f32 accum + 4096 f32
 # counts = 32 KB) times 8 concurrently-resident rows stays well under the
 # ~16 MB/core VMEM budget with room for the B-row stream.
@@ -47,13 +49,6 @@ def round_up_ladder_vec(x: np.ndarray, ladder=CAP_LADDER) -> np.ndarray:
 
 def _round_up(x: int, mult: int) -> int:
     return max(mult, ((x + mult - 1) // mult) * mult)
-
-
-def _pow2_at_least(x: int, floor: int = 8) -> int:
-    v = floor
-    while v < x:
-        v *= 2
-    return v
 
 
 @dataclasses.dataclass
@@ -160,7 +155,7 @@ def plan_bins(pred_nnz: np.ndarray, products: np.ndarray,
         window = int(uniq[g] // 2**20)
         tiles = int(uniq[g] % 2**20)
         bin_cap = int(min(int(caps[rows_arr].max()), window * tiles))
-        ell = _pow2_at_least(int(a_row_nnz[rows_arr].max()))
+        ell = pow2_at_least(int(a_row_nnz[rows_arr].max()), floor=8)
         dense_bins.append(DenseBin(window=window, col_tiles=tiles,
                                    cap=bin_cap, rows=rows_arr,
                                    ell_width=ell,

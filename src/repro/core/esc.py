@@ -22,6 +22,17 @@ from .formats import CSR, PAD_COL
 from .hll import row_ids_from_indptr
 
 
+class EscOverflowError(ValueError):
+    """ESC output exceeded its capacity bound.
+
+    Capacities handed to the ESC pass are *upper bounds* (per-row product
+    counts), so overflow here means a sizing bug, not estimation error —
+    unlike dense-bin overflow, which the fallback path absorbs by design.
+    Subclasses ``ValueError`` so pre-existing ``except ValueError`` callers
+    keep working.
+    """
+
+
 class Expanded(NamedTuple):
     rows: jax.Array   # (p_cap,) int32 — output row of each product
     cols: jax.Array   # (p_cap,) int32 — output col of each product
@@ -160,5 +171,5 @@ def esc_to_csr(res: ESCResult, shape, out_cap: int) -> CSR:
     """Host-side wrapper: materialize an ESCResult as a CSR (nnz <= out_cap)."""
     nnz = int(res.nnz)
     if nnz > out_cap:
-        raise ValueError(f"ESC overflow: nnz {nnz} > capacity {out_cap}")
+        raise EscOverflowError(f"ESC overflow: nnz {nnz} > capacity {out_cap}")
     return CSR(res.indptr, res.indices, res.values, tuple(shape), nnz)

@@ -1,0 +1,413 @@
+"""Unified async SpGEMM executor: one dispatch -> collect -> merge pipeline.
+
+Ocean's thesis is that serial setup cost must be driven off the SpGEMM
+critical path. After the planner split, the remaining serial tax lived in
+the executors: ``core.planner`` carried two near-duplicate functions
+(single-device and device-partitioned) that both ran the host merge — slab
+pull, overflow scan, CSR compaction — strictly *after* a global barrier on
+all device work. This module replaces both with one staged pipeline:
+
+* **dispatch** — enqueue every (shard, bin) kernel launch on its device
+  without blocking (jax dispatch is asynchronous) and start async
+  device-to-host copies of each result slab;
+* **collect** — pull slabs back in *completion order* (per-slab
+  ``jax.Array`` readiness, not one global barrier);
+* **merge** — as each slab lands, run its overflow scan and the
+  incremental half of compaction on the host while later slabs are still
+  being computed/copied. Only the exact-ESC overflow fallback and the
+  final scatter wait for the full set.
+
+The merged CSR is bit-identical to the serial path: slabs are row-disjoint,
+every kernel's per-row output is independent of which other rows share the
+launch, and compaction is order-independent, so neither completion order
+nor shard shape can change a byte of the output (property-tested in
+``tests/test_executor.py``).
+
+``OceanReport.overlap_seconds`` counts host-merge work performed before
+the final slab was collected — exactly the work the serial executor
+serializes after its global barrier. On asynchronous backends (real
+accelerators) that is merge work overlapped with outstanding device
+compute/copies; on a synchronous host it still measures how much of the
+merge the pipeline moved off the post-barrier critical path.
+``merge_overlap_frac`` is the same as a fraction of all merge work.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.kernels import ops as kops
+from . import esc as esc_mod
+from .esc import EscOverflowError
+from .formats import (CSR, PAD_COL, csr_from_arrays, csr_rows_to_ell,
+                      pow2_at_least)
+from .planner import (DenseBinExec, EscExec, ExecutionPlan, OceanReport,
+                      gather_rows)
+
+SERIAL = "serial"
+PIPELINED = "pipelined"
+EXECUTORS = (PIPELINED, SERIAL)
+
+
+class _Slab:
+    """Per-row output fragments: row ids + fixed-width (cols, vals, nnz)."""
+
+    def __init__(self, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                 nnz: np.ndarray):
+        self.rows, self.cols, self.vals, self.nnz = rows, cols, vals, nnz
+
+
+def _esc_to_slab(res, rows: np.ndarray, num_rows: int,
+                 out_cap: int) -> Tuple[_Slab, int]:
+    """Convert an ESCResult over a row subset into a slab."""
+    nnz = int(res.nnz)
+    if nnz > out_cap:
+        # capacity was an upper bound; this indicates a bug, not estimation
+        raise EscOverflowError(f"ESC overflow: nnz {nnz} > capacity {out_cap}")
+    counts = np.asarray(res.indptr[1:] - res.indptr[:-1])
+    width = int(counts.max()) if len(counts) else 1
+    width = max(width, 1)
+    ell_i, ell_v = csr_rows_to_ell(res.indptr, res.indices, res.values,
+                                   num_rows=num_rows, ell_width=width,
+                                   pad_index=int(PAD_COL))
+    return _Slab(rows, np.asarray(ell_i), np.asarray(ell_v),
+                 counts.astype(np.int64)), nnz
+
+
+def _run_dense_bin(be: DenseBinExec, a_values: np.ndarray, b_cols_pad,
+                   b_vals_pad):
+    """Dispatch one dense bin; returns device arrays (cols, vals, nnz).
+
+    Results are per-row independent, so any row subset of a bin produces
+    the same per-row output as the full bin — the property device
+    partitioning relies on for bit-identical merges. Shape-bucketed shard
+    slices carry inert pad rows (``a_lens == 0``: the kernel does no work
+    for them) and pin the bin-level ``p_cap`` so every slice of one bin
+    replays a single jit specialization.
+    """
+    a_vals = jax.numpy.asarray(
+        kops.gather_bin_values(a_values, be.pos, be.valid))
+    return kops.dense_bin_op(
+        be.a_rows, a_vals, be.a_starts, be.a_lens, be.row_lo,
+        b_cols_pad, b_vals_pad, window=be.window,
+        col_tiles=be.col_tiles, cap=be.cap, p_cap=be.p_cap)
+
+
+def _run_esc_bin(ex: EscExec, a_values: np.ndarray, b: CSR, *,
+                 b_arrays: Optional[Tuple] = None):
+    """Dispatch the ESC bin; returns the (device-side) ESCResult.
+
+    ``b_arrays`` overrides ``(b.indptr, b.indices, b.values)`` with
+    device-committed copies (the sharded path ships B to each shard's
+    device once instead of per call)."""
+    b_indptr, b_indices, b_values = (
+        b_arrays if b_arrays is not None else (b.indptr, b.indices,
+                                               b.values))
+    return esc_mod.esc_spgemm(
+        ex.sub_indptr, ex.sub_indices, a_values[ex.src],
+        b_indptr, b_indices, b_values, p_cap=ex.p_cap,
+        out_cap=ex.out_cap, num_rows_a=len(ex.rows), n_cols_b=b.n)
+
+
+def _compact_slabs(slabs: List[_Slab], shape: Tuple[int, int],
+                   dtype) -> Tuple[CSR, int]:
+    """Scatter row-disjoint slabs into one CSR (order-independent)."""
+    m = shape[0]
+    counts = np.zeros(m, np.int64)
+    for s in slabs:
+        counts[s.rows] = s.nnz
+    indptr = np.zeros(m + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    total = int(indptr[-1])
+    out_cols = np.full(total, PAD_COL, np.int32)
+    out_vals = np.zeros(total, dtype)
+    for s in slabs:
+        if not len(s.rows):
+            continue
+        # flat scatter of each slab's valid slots into the output arrays
+        capw = s.cols.shape[1]
+        slot = np.arange(capw)[None, :]
+        valid = slot < s.nnz[:, None]
+        pos = indptr[s.rows][:, None] + slot
+        out_cols[pos[valid]] = s.cols[valid]
+        out_vals[pos[valid]] = s.vals[valid]
+    return csr_from_arrays(indptr, out_cols, out_vals, shape), total
+
+
+# ---------------------------------------------------------------------------
+# Pipeline stages
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _ShardWork:
+    """One device's slice of the launch schedule (the whole plan when
+    executing unsharded)."""
+    device: Optional[object]
+    dense: List[DenseBinExec]
+    esc: Optional[EscExec]
+
+
+@dataclasses.dataclass
+class _Pending:
+    """One in-flight kernel launch awaiting collection."""
+    kind: str                  # 'dense' | 'esc'
+    order: int                 # dispatch order (stable merge anchor)
+    exec_: object              # DenseBinExec | EscExec
+    arrays: Tuple              # device arrays
+
+
+def _shards_of_plan(plan: ExecutionPlan) -> List[_ShardWork]:
+    return [_ShardWork(device=None, dense=plan.dense, esc=plan.esc)]
+
+
+def _dispatch(shards: List[_ShardWork], a_values: np.ndarray,
+              b: CSR) -> List[_Pending]:
+    """Dispatch stage: enqueue every (shard, bin) launch without blocking.
+
+    B is padded once on the host and shipped to each shard's device when
+    more than one shard participates. Async D2H copies are started for
+    every result so the collect stage overlaps transfers with compute.
+    """
+    items: List[_Pending] = []
+    order = 0
+    multi = len(shards) > 1
+    b_cols_host, b_vals_host = kops.pad_b_flat(b)
+    for shard in shards:
+        if not shard.dense and shard.esc is None:
+            continue
+        ctx = (jax.default_device(shard.device)
+               if shard.device is not None else contextlib.nullcontext())
+        with ctx:
+            if multi and shard.device is not None:
+                b_cols_pad = jax.device_put(b_cols_host, shard.device)
+                b_vals_pad = jax.device_put(b_vals_host, shard.device)
+            else:
+                b_cols_pad, b_vals_pad = b_cols_host, b_vals_host
+            for be in shard.dense:
+                arrays = _run_dense_bin(be, a_values, b_cols_pad, b_vals_pad)
+                items.append(_Pending("dense", order, be, tuple(arrays)))
+                order += 1
+            if shard.esc is not None:
+                b_esc = (tuple(jax.device_put(x, shard.device)
+                               for x in (b.indptr, b.indices, b.values))
+                         if multi and shard.device is not None else None)
+                res = _run_esc_bin(shard.esc, a_values, b, b_arrays=b_esc)
+                items.append(_Pending("esc", order, shard.esc, tuple(res)))
+                order += 1
+    for it in items:
+        for arr in it.arrays:
+            start = getattr(arr, "copy_to_host_async", None)
+            if start is not None:
+                start()
+    return items
+
+
+def _is_ready(it: _Pending) -> bool:
+    for arr in it.arrays:
+        ready = getattr(arr, "is_ready", None)
+        if ready is not None and not ready():
+            return False
+    return True
+
+
+def _materialize(it: _Pending) -> _Slab:
+    """Pull one pending launch to the host (blocks only on this item) and
+    shape it as a slab, dropping any shape-bucketing pad rows."""
+    if it.kind == "dense":
+        be: DenseBinExec = it.exec_
+        nv = be.n_valid
+        cols, vals, nnz = (np.asarray(x) for x in it.arrays)
+        return _Slab(be.rows, cols[:nv], vals[:nv],
+                     nnz[:nv].astype(np.int64))
+    ex: EscExec = it.exec_
+    res = esc_mod.ESCResult(*(np.asarray(x) for x in it.arrays))
+    slab, _ = _esc_to_slab(res, ex.rows, len(ex.rows), ex.out_cap)
+    return slab
+
+
+class _MergeState:
+    """Incremental host merge: overflow scanning + the counting half of
+    compaction, fed one slab at a time."""
+
+    def __init__(self):
+        self.kept: List[_Slab] = []
+        self.overflow: Dict[int, np.ndarray] = {}
+
+    def add(self, it: _Pending, slab: _Slab) -> None:
+        if it.kind != "dense":
+            self.kept.append(slab)   # ESC capacities are upper bounds
+            return
+        over = slab.nnz > slab.cols.shape[1]
+        if over.any():
+            self.overflow[it.order] = slab.rows[over]
+            keep = ~over
+            self.kept.append(_Slab(slab.rows[keep], slab.cols[keep],
+                                   slab.vals[keep], slab.nnz[keep]))
+        else:
+            self.kept.append(slab)
+
+    def fallback_rows(self) -> Optional[np.ndarray]:
+        """Overflowed rows in dispatch order — deterministic regardless of
+        the completion order slabs were merged in."""
+        if not self.overflow:
+            return None
+        return np.concatenate(
+            [self.overflow[k] for k in sorted(self.overflow)])
+
+
+def _run_overflow_fallback(state: _MergeState, products: np.ndarray,
+                           a: CSR, b: CSR) -> int:
+    """Re-run overflowed rows through the exact ESC pass (paper §3.2).
+
+    One global pass over all overflow rows; per-row results are independent
+    of how rows were grouped, so this matches the serial path bit for bit.
+    """
+    rows = state.fallback_rows()
+    if rows is None:
+        return 0
+    sub = gather_rows(a, rows)
+    p_cap = pow2_at_least(int(products[rows].sum()) + 1, floor=64)
+    res = esc_mod.esc_spgemm(
+        sub.indptr, sub.indices, sub.values, b.indptr, b.indices,
+        b.values, p_cap=p_cap, out_cap=p_cap, num_rows_a=sub.m,
+        n_cols_b=b.n)
+    slab, _ = _esc_to_slab(res, rows, sub.m, p_cap)
+    state.kept.append(slab)
+    return len(rows)
+
+
+# ---------------------------------------------------------------------------
+# The two collect policies
+# ---------------------------------------------------------------------------
+
+def _collect_serial(items: List[_Pending], plan: ExecutionPlan, a: CSR,
+                    b: CSR, a_values: np.ndarray, stage: Dict[str, float],
+                    dispatch_s: float):
+    """Reference semantics: one global barrier, then merge. Keeps the
+    legacy stage keys (numeric/overflow/postprocess)."""
+    t0 = time.perf_counter()
+    state = _MergeState()
+    slabs = [(it, _materialize(it)) for it in items]
+    stage["numeric"] = dispatch_s + (time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    for it, slab in slabs:
+        state.add(it, slab)
+    n_overflow = _run_overflow_fallback(state, plan.products, a, b)
+    stage["overflow"] = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    c, total = _compact_slabs(state.kept, (a.m, b.n), a_values.dtype)
+    stage["postprocess"] = time.perf_counter() - t0
+    return c, total, n_overflow, 0.0, 0.0
+
+
+def _collect_pipelined(items: List[_Pending], plan: ExecutionPlan, a: CSR,
+                       b: CSR, a_values: np.ndarray,
+                       stage: Dict[str, float], dispatch_s: float):
+    """Overlapped collect/merge: slabs are pulled in completion order and
+    each one's overflow scan + count accumulation runs while later slabs
+    are still being computed or copied back."""
+    state = _MergeState()
+    collect_s = merge_s = overlap_s = 0.0
+    remaining = list(items)
+    while remaining:
+        idx = next((i for i, it in enumerate(remaining) if _is_ready(it)), 0)
+        it = remaining.pop(idx)
+        t0 = time.perf_counter()
+        slab = _materialize(it)
+        collect_s += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        state.add(it, slab)
+        dt = time.perf_counter() - t0
+        merge_s += dt
+        if remaining:
+            # merge work done before the last slab was collected — the
+            # serial executor runs all of this after its global barrier;
+            # on async backends the outstanding items are still computing
+            # or copying while this chunk executes
+            overlap_s += dt
+    t0 = time.perf_counter()
+    n_overflow = _run_overflow_fallback(state, plan.products, a, b)
+    c, total = _compact_slabs(state.kept, (a.m, b.n), a_values.dtype)
+    merge_s += time.perf_counter() - t0
+    stage["dispatch"] = dispatch_s
+    stage["collect"] = collect_s
+    stage["merge"] = merge_s
+    frac = overlap_s / merge_s if merge_s > 0.0 else 0.0
+    return c, total, n_overflow, overlap_s, frac
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def _execute(plan: ExecutionPlan, shards: List[_ShardWork], a: CSR, b: CSR,
+             *, stage: Optional[Dict[str, float]], cache_hit: bool,
+             mode: str, n_shards: int, shard_imbalance: float,
+             ) -> Tuple[CSR, OceanReport]:
+    if mode not in EXECUTORS:
+        raise ValueError(f"unknown executor {mode!r}; expected one of "
+                         f"{EXECUTORS}")
+    if a.shape != plan.shape_a or b.shape != plan.shape_b:
+        raise ValueError(
+            f"plan built for {plan.shape_a} @ {plan.shape_b}, "
+            f"got {a.shape} @ {b.shape}")
+    stage = dict(stage) if stage else {"analysis": 0.0, "prediction": 0.0,
+                                       "binning": 0.0}
+    a_values = np.asarray(a.values)
+
+    t0 = time.perf_counter()
+    items = _dispatch(shards, a_values, b)
+    dispatch_s = time.perf_counter() - t0
+
+    collect = _collect_pipelined if mode == PIPELINED else _collect_serial
+    c, total, n_overflow, overlap_s, frac = collect(
+        items, plan, a, b, a_values, stage, dispatch_s)
+
+    report = OceanReport(
+        workflow=plan.workflow, er=plan.er, sampled_cr=plan.sampled_cr,
+        nproducts_avg=plan.nproducts_avg,
+        total_products=plan.total_products, m_regs=plan.m_regs,
+        stage_seconds=stage, bins=dict(plan.bins_describe),
+        overflow_rows=n_overflow, nnz_out=total, plan_cache_hit=cache_hit,
+        n_shards=n_shards, shard_imbalance=shard_imbalance,
+        executor=mode, overlap_seconds=overlap_s, merge_overlap_frac=frac)
+    return c, report
+
+
+def execute_plan(plan: ExecutionPlan, a: CSR, b: CSR, *,
+                 stage: Optional[Dict[str, float]] = None,
+                 cache_hit: bool = False,
+                 executor: str = PIPELINED) -> Tuple[CSR, OceanReport]:
+    """Run a frozen plan against (possibly new) values of A and B."""
+    return _execute(plan, _shards_of_plan(plan), a, b, stage=stage,
+                    cache_hit=cache_hit, mode=executor, n_shards=1,
+                    shard_imbalance=1.0)
+
+
+def execute_sharded_plan(splan, a: CSR, b: CSR, *,
+                         stage: Optional[Dict[str, float]] = None,
+                         cache_hit: bool = False,
+                         executor: str = PIPELINED,
+                         ) -> Tuple[CSR, OceanReport]:
+    """Run a :class:`~repro.core.partition.ShardedPlan` across its devices.
+
+    Each shard's bins are dispatched onto that shard's device; slabs are
+    merged through the same pipeline as :func:`execute_plan`. Because every
+    bin's per-row results are independent of which other rows share the
+    kernel launch, the merged CSR is bit-identical to single-device
+    execution.
+    """
+    if stage is None:
+        stage = {"analysis": 0.0, "prediction": 0.0, "binning": 0.0,
+                 "partition": 0.0}
+    shards = [_ShardWork(device=sh.device, dense=sh.dense, esc=sh.esc)
+              for sh in splan.shards]
+    return _execute(splan.plan, shards, a, b, stage=stage,
+                    cache_hit=cache_hit, mode=executor,
+                    n_shards=len(splan.shards),
+                    shard_imbalance=splan.imbalance)

@@ -18,6 +18,21 @@ import numpy as np
 PAD_COL = np.int32(2**31 - 1)  # sorts after every real column index
 
 
+def pow2_at_least(x: int, *, floor: int) -> int:
+    """Smallest power-of-two multiple of ``floor`` that is >= ``x``.
+
+    The repo-wide capacity bucketing primitive: ESC product capacities,
+    ELL widths, and shard row padding all round up through this so static
+    kernel shapes come from a small ladder (bounding jit recompilation).
+    ``floor`` is explicit because call sites deliberately differ (ELL
+    widths start at 8, product capacities at 64).
+    """
+    v = floor
+    while v < x:
+        v *= 2
+    return v
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class CSR:

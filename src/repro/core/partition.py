@@ -27,10 +27,26 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import jax
 import numpy as np
 
-from .formats import flat_gather_index
-from .planner import DenseBinExec, EscExec, ExecutionPlan, _pow2_at_least
+from .formats import flat_gather_index, pow2_at_least
+from .planner import DenseBinExec, EscExec, ExecutionPlan
 
 DeviceSpec = Union[None, int, Sequence, "jax.sharding.Mesh"]
+
+# Shard row counts are rounded up this pow2 ladder (floor below, clamped to
+# the parent bin's row count) and padded with inert rows: compilations are
+# bounded per (bin, ladder rung, device) instead of per (bin, shard,
+# topology) — shards whose sizes land on the same rung share one jit
+# specialization, and the clamp guarantees that for bins at or below a
+# rung every topology lands on the same shape.
+SHARD_ROW_FLOOR = 32
+
+
+def bucket_shard_rows(n_rows: int, bin_rows: int) -> int:
+    """Padded row count for a shard of ``n_rows`` sliced from a bin of
+    ``bin_rows``: next pow2 ladder rung, clamped to the bin size (a shard
+    never needs more rows than its whole bin, and the clamp is what lets
+    different topologies land on the same shape for small bins)."""
+    return min(pow2_at_least(n_rows, floor=SHARD_ROW_FLOOR), bin_rows)
 
 
 def resolve_devices(devices: DeviceSpec = None) -> Tuple:
@@ -87,19 +103,42 @@ def balanced_split(costs: np.ndarray, n_shards: int,
 
 def _slice_dense(be: DenseBinExec, sel: np.ndarray, device) -> DenseBinExec:
     """Row-subset view of a dense bin: same window/tiles/cap/ell width,
-    sliced gather maps, device-committed ELL blocks. Row counts differ
-    per shard, so first execution jit-compiles per (bin, shard) shape;
-    the cached ShardedPlan then replays those specializations across
-    values-only traffic, which is where the compile cost amortizes."""
-    def put(x):
-        return jax.device_put(x, device)
+    sliced gather maps, device-committed ELL blocks.
+
+    The slice's kernel arrays are padded with inert rows (``a_lens == 0``,
+    so the kernel does no work for them) up to :func:`bucket_shard_rows`,
+    and the bin-level ``p_cap`` is inherited, so every shard of one bin —
+    across devices and across topologies — replays a single jit
+    specialization instead of compiling per (bin, shard) shape. Any
+    topology-independent ``p_cap`` must cover the worst-case shard
+    (≈ the whole bin), so bin-level inheritance is the minimal choice;
+    the Pallas kernel never reads ``p_cap`` (its grid is per-row), but
+    the ``_dense_bin_xla`` fallback enumerates ``p_cap`` product slots,
+    so on that path each shard pays the full bin's slot count. Host-side
+    metadata (``rows``/``cost``) stays unpadded; ``n_valid`` tells the
+    executor where real rows end."""
+    n_valid = len(sel)
+    r_pad = bucket_shard_rows(n_valid, len(be.rows))
+    pad = r_pad - n_valid
+
+    def sliced(x, fill):
+        x = np.asarray(x)
+        x = x[sel]
+        if pad:
+            x = np.concatenate(
+                [x, np.full((pad,) + x.shape[1:], fill, x.dtype)])
+        return x
+
+    def put(x, fill):
+        return jax.device_put(sliced(x, fill), device)
     return DenseBinExec(
         window=be.window, col_tiles=be.col_tiles, cap=be.cap,
         rows=be.rows[sel], ell_width=be.ell_width, is_longrow=be.is_longrow,
-        pos=be.pos[sel], valid=be.valid[sel],
-        a_rows=put(be.a_rows[sel]), a_starts=put(be.a_starts[sel]),
-        a_lens=put(be.a_lens[sel]), row_lo=put(be.row_lo[sel]),
-        cost=be.cost[sel], bin_id=be.bin_id)
+        pos=sliced(be.pos, 0), valid=sliced(be.valid, False),
+        a_rows=put(be.a_rows, -1), a_starts=put(be.a_starts, 0),
+        a_lens=put(be.a_lens, 0), row_lo=put(be.row_lo, 0),
+        cost=be.cost[sel], bin_id=be.bin_id, n_valid=n_valid,
+        p_cap=be.p_cap)
 
 
 def _slice_esc(ex: EscExec, sel: np.ndarray) -> EscExec:
@@ -107,7 +146,7 @@ def _slice_esc(ex: EscExec, sel: np.ndarray) -> EscExec:
     a flat segment gather; capacity shrinks to the shard's product sum."""
     new_ptr, seg = flat_gather_index(ex.sub_indptr, sel)
     cost = ex.cost[sel]
-    p_cap = _pow2_at_least(int(cost.sum()) + 1)
+    p_cap = pow2_at_least(int(cost.sum()) + 1, floor=64)
     return EscExec(rows=ex.rows[sel], sub_indptr=new_ptr.astype(np.int32),
                    sub_indices=ex.sub_indices[seg], src=ex.src[seg],
                    p_cap=p_cap, out_cap=p_cap, cost=cost)

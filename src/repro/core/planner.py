@@ -15,6 +15,10 @@ Plan lifecycle:
     build_plan(a, b)  ->  ExecutionPlan          (structure-only, cacheable)
     execute_plan(plan, a, b)  ->  (CSR, report)  (values in, values out)
 
+Execution itself lives in ``core.executor`` (one dispatch/collect/merge
+pipeline shared by single-device and sharded paths); the ``execute_*``
+functions here are thin wrappers kept for API stability.
+
 A plan is invalidated implicitly: the cache key hashes both sparsity
 patterns plus every planning knob (config, forced workflow, ablation
 flags), so any structural or configuration change misses the cache and
@@ -37,8 +41,7 @@ from repro.kernels import ops as kops
 from . import esc as esc_mod
 from .analysis import (AnalysisResult, OceanConfig, analyze, sketches_for)
 from .binning import BinPlan, plan_bins
-from .formats import (CSR, PAD_COL, csr_from_arrays, csr_rows_to_ell,
-                      flat_gather_index)
+from .formats import CSR, csr_from_arrays, flat_gather_index, pow2_at_least
 
 
 @dataclasses.dataclass
@@ -56,6 +59,12 @@ class OceanReport:
     plan_cache_hit: bool = False
     n_shards: int = 1
     shard_imbalance: float = 1.0
+    executor: str = "serial"
+    # host-merge work performed before the final slab was collected, i.e.
+    # moved off the post-barrier critical path (overlapped with device
+    # work on async backends; pipelined executor only, serial reports 0.0)
+    overlap_seconds: float = 0.0
+    merge_overlap_frac: float = 0.0
 
     @property
     def total_seconds(self) -> float:
@@ -71,43 +80,11 @@ class OceanReport:
                              "binning", "partition"))
 
 
-def _pow2_at_least(x: int, floor: int = 64) -> int:
-    v = floor
-    while v < x:
-        v *= 2
-    return v
-
-
 def gather_rows(a: CSR, rows: np.ndarray) -> CSR:
     """Host-side sub-CSR of the selected rows (order preserved)."""
     new_ptr, src = flat_gather_index(a.indptr, rows)
     return csr_from_arrays(new_ptr, np.asarray(a.indices)[src],
                            np.asarray(a.values)[src], (len(rows), a.n))
-
-
-class _Slab:
-    """Per-row output fragments: row ids + fixed-width (cols, vals, nnz)."""
-
-    def __init__(self, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
-                 nnz: np.ndarray):
-        self.rows, self.cols, self.vals, self.nnz = rows, cols, vals, nnz
-
-
-def _esc_to_slab(res, rows: np.ndarray, num_rows: int,
-                 out_cap: int) -> Tuple[_Slab, int]:
-    """Convert an ESCResult over a row subset into a slab."""
-    nnz = int(res.nnz)
-    if nnz > out_cap:
-        # capacity was an upper bound; this indicates a bug, not estimation
-        raise AssertionError(f"ESC overflow {nnz} > {out_cap}")
-    counts = np.asarray(res.indptr[1:] - res.indptr[:-1])
-    width = int(counts.max()) if len(counts) else 1
-    width = max(width, 1)
-    ell_i, ell_v = csr_rows_to_ell(res.indptr, res.indices, res.values,
-                                   num_rows=num_rows, ell_width=width,
-                                   pad_index=int(PAD_COL))
-    return _Slab(rows, np.asarray(ell_i), np.asarray(ell_v),
-                 counts.astype(np.int64)), nnz
 
 
 # ---------------------------------------------------------------------------
@@ -132,6 +109,11 @@ class DenseBinExec:
     cost: np.ndarray           # (R,) int64 per-row estimated product counts
     bin_id: int                # position in the plan's bin ladder (stable
                                # across sharding; shard slices keep it)
+    n_valid: int               # real rows; kernel rows beyond this are
+                               # inert shape-bucketing padding (a_lens == 0)
+    p_cap: int                 # bin-level product capacity — every shard
+                               # slice pins this so slices of one bin share
+                               # a single jit specialization
 
 
 @dataclasses.dataclass
@@ -240,7 +222,7 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
         pred = np.where(products > 0, pred, 0.0)
         pred = np.minimum(pred, products)  # distinct count <= products
     elif wf == "symbolic":
-        p_cap = _pow2_at_least(total_products + 1)
+        p_cap = pow2_at_least(total_products + 1, floor=64)
         pred = np.asarray(
             esc_mod.symbolic_exact(a.indptr, a.indices, b.indptr, b.indices,
                                    p_cap=p_cap, num_rows_a=a.m,
@@ -278,19 +260,21 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
         lo_arr = (out_lo[bn.rows] if not bn.is_longrow
                   else np.zeros(len(bn.rows)))
         row_lo = jnp.asarray(lo_arr.reshape(-1, 1).astype(np.int32))
+        bin_products = int(np.asarray(a_lens, np.int64).sum())
         dense_execs.append(DenseBinExec(
             window=bn.window, col_tiles=bn.col_tiles, cap=bn.cap,
             rows=bn.rows, ell_width=bn.ell_width, is_longrow=bn.is_longrow,
             pos=pos, valid=valid, a_rows=jnp.asarray(a_rows),
             a_starts=jnp.asarray(a_starts), a_lens=jnp.asarray(a_lens),
             row_lo=row_lo, cost=np.asarray(bn.cost, np.int64),
-            bin_id=bin_id))
+            bin_id=bin_id, n_valid=len(bn.rows),
+            p_cap=pow2_at_least(bin_products + 1, floor=64)))
 
     esc_exec = None
     if len(plan.esc_rows):
         rows = plan.esc_rows
         sub_ptr, src = flat_gather_index(a.indptr, rows)
-        p_cap = _pow2_at_least(int(products[rows].sum()) + 1)
+        p_cap = pow2_at_least(int(products[rows].sum()) + 1, floor=64)
         esc_exec = EscExec(rows=rows, sub_indptr=sub_ptr.astype(np.int32),
                            sub_indices=np.asarray(a.indices)[src], src=src,
                            p_cap=p_cap, out_cap=p_cap,
@@ -310,223 +294,34 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
 
 
 # ---------------------------------------------------------------------------
-# Executor
+# Executor entry points (thin wrappers over core.executor)
 # ---------------------------------------------------------------------------
-
-def _run_dense_bin(be: DenseBinExec, a_values: np.ndarray, b_cols_pad,
-                   b_vals_pad):
-    """Dispatch one dense bin; returns device arrays (cols, vals, nnz).
-
-    Results are per-row independent, so any row subset of a bin produces
-    the same per-row output as the full bin — the property device
-    partitioning relies on for bit-identical merges.
-    """
-    a_vals = jnp.asarray(
-        kops.gather_bin_values(a_values, be.pos, be.valid))
-    return kops.dense_bin_op(
-        be.a_rows, a_vals, be.a_starts, be.a_lens, be.row_lo,
-        b_cols_pad, b_vals_pad, window=be.window,
-        col_tiles=be.col_tiles, cap=be.cap)
-
-
-def _run_esc_bin(ex: EscExec, a_values: np.ndarray, b: CSR, *,
-                 b_arrays: Optional[Tuple] = None):
-    """Dispatch the ESC bin; returns the (device-side) ESCResult.
-
-    ``b_arrays`` overrides ``(b.indptr, b.indices, b.values)`` with
-    device-committed copies (the sharded executor ships B to each shard's
-    device once instead of per call)."""
-    b_indptr, b_indices, b_values = (
-        b_arrays if b_arrays is not None else (b.indptr, b.indices,
-                                               b.values))
-    return esc_mod.esc_spgemm(
-        ex.sub_indptr, ex.sub_indices, a_values[ex.src],
-        b_indptr, b_indices, b_values, p_cap=ex.p_cap,
-        out_cap=ex.out_cap, num_rows_a=len(ex.rows), n_cols_b=b.n)
-
-
-def _overflow_fallback(products: np.ndarray, dense_slabs: List[_Slab],
-                       tail_slabs: List[_Slab], a: CSR,
-                       b: CSR) -> Tuple[List[_Slab], int]:
-    """Re-run rows whose dense slab overflowed through the exact ESC pass
-    (paper §3.2). One global pass over all overflow rows; per-row results
-    are independent of how rows were grouped."""
-    overflow_rows: List[np.ndarray] = []
-    kept: List[_Slab] = []
-    for s in dense_slabs:
-        over = s.nnz > s.cols.shape[1]
-        if over.any():
-            overflow_rows.append(s.rows[over])
-            keep = ~over
-            kept.append(_Slab(s.rows[keep], s.cols[keep], s.vals[keep],
-                              s.nnz[keep]))
-        else:
-            kept.append(s)
-    kept.extend(tail_slabs)
-    n_overflow = 0
-    if overflow_rows:
-        rows = np.concatenate(overflow_rows)
-        n_overflow = len(rows)
-        sub = gather_rows(a, rows)
-        p_cap = _pow2_at_least(int(products[rows].sum()) + 1)
-        res = esc_mod.esc_spgemm(
-            sub.indptr, sub.indices, sub.values, b.indptr, b.indices,
-            b.values, p_cap=p_cap, out_cap=p_cap, num_rows_a=sub.m,
-            n_cols_b=b.n)
-        slab, _ = _esc_to_slab(res, rows, sub.m, p_cap)
-        kept.append(slab)
-    return kept, n_overflow
-
-
-def _compact_slabs(slabs: List[_Slab], shape: Tuple[int, int],
-                   dtype) -> Tuple[CSR, int]:
-    """Scatter row-disjoint slabs into one CSR (order-independent)."""
-    m = shape[0]
-    counts = np.zeros(m, np.int64)
-    for s in slabs:
-        counts[s.rows] = s.nnz
-    indptr = np.zeros(m + 1, np.int64)
-    np.cumsum(counts, out=indptr[1:])
-    total = int(indptr[-1])
-    out_cols = np.full(total, PAD_COL, np.int32)
-    out_vals = np.zeros(total, dtype)
-    for s in slabs:
-        if not len(s.rows):
-            continue
-        # flat scatter of each slab's valid slots into the output arrays
-        capw = s.cols.shape[1]
-        slot = np.arange(capw)[None, :]
-        valid = slot < s.nnz[:, None]
-        pos = indptr[s.rows][:, None] + slot
-        out_cols[pos[valid]] = s.cols[valid]
-        out_vals[pos[valid]] = s.vals[valid]
-    return csr_from_arrays(indptr, out_cols, out_vals, shape), total
-
+#
+# The dispatch/collect/merge pipeline lives in ``core.executor``; these
+# wrappers exist so the established ``planner.execute_plan`` /
+# ``planner.execute_sharded_plan`` call sites keep working. The import is
+# function-local because executor imports the plan containers from here.
 
 def execute_plan(plan: ExecutionPlan, a: CSR, b: CSR, *,
                  stage: Optional[Dict[str, float]] = None,
-                 cache_hit: bool = False) -> Tuple[CSR, OceanReport]:
+                 cache_hit: bool = False,
+                 executor: str = "pipelined") -> Tuple[CSR, OceanReport]:
     """Run a frozen plan against (possibly new) values of A and B."""
-    if a.shape != plan.shape_a or b.shape != plan.shape_b:
-        raise ValueError(
-            f"plan built for {plan.shape_a} @ {plan.shape_b}, "
-            f"got {a.shape} @ {b.shape}")
-    stage = dict(stage) if stage else {"analysis": 0.0, "prediction": 0.0,
-                                       "binning": 0.0}
-    a_values = np.asarray(a.values)
-
-    # ---------------- numeric accumulation ----------------
-    t0 = time.perf_counter()
-    dense_slabs: List[_Slab] = []
-    b_cols_pad, b_vals_pad = kops.pad_b_flat(b)
-    for be in plan.dense:
-        cols, vals, nnz = _run_dense_bin(be, a_values, b_cols_pad,
-                                         b_vals_pad)
-        dense_slabs.append(_Slab(be.rows, np.asarray(cols), np.asarray(vals),
-                                 np.asarray(nnz, np.int64)))
-    tail_slabs: List[_Slab] = []
-    if plan.esc is not None:
-        ex = plan.esc
-        res = _run_esc_bin(ex, a_values, b)
-        slab, _ = _esc_to_slab(res, ex.rows, len(ex.rows), ex.out_cap)
-        tail_slabs.append(slab)
-    stage["numeric"] = time.perf_counter() - t0
-
-    # ---------------- overflow fallback (paper §3.2) ----------------
-    t0 = time.perf_counter()
-    slabs, n_overflow = _overflow_fallback(plan.products, dense_slabs,
-                                           tail_slabs, a, b)
-    stage["overflow"] = time.perf_counter() - t0
-
-    # ---------------- post-processing: compaction to CSR ----------------
-    t0 = time.perf_counter()
-    c, total = _compact_slabs(slabs, (a.m, b.n), a_values.dtype)
-    stage["postprocess"] = time.perf_counter() - t0
-
-    report = OceanReport(
-        workflow=plan.workflow, er=plan.er, sampled_cr=plan.sampled_cr,
-        nproducts_avg=plan.nproducts_avg,
-        total_products=plan.total_products, m_regs=plan.m_regs,
-        stage_seconds=stage, bins=dict(plan.bins_describe),
-        overflow_rows=n_overflow, nnz_out=total, plan_cache_hit=cache_hit)
-    return c, report
+    from .executor import execute_plan as _execute
+    return _execute(plan, a, b, stage=stage, cache_hit=cache_hit,
+                    executor=executor)
 
 
 def execute_sharded_plan(splan, a: CSR, b: CSR, *,
                          stage: Optional[Dict[str, float]] = None,
-                         cache_hit: bool = False) -> Tuple[CSR, OceanReport]:
-    """Run a :class:`~repro.core.partition.ShardedPlan` across its devices.
-
-    Each shard's bins are dispatched onto that shard's device (jax dispatch
-    is asynchronous, so device work overlaps; with a single device this
-    degrades to the plain sequential loop). Slabs are pulled back to the
-    host and merged through the same overflow fallback + compaction path as
-    :func:`execute_plan`. Because every bin's per-row results are
-    independent of which other rows share the kernel launch, the merged CSR
-    is bit-identical to single-device execution.
-    """
-    plan: ExecutionPlan = splan.plan
-    if a.shape != plan.shape_a or b.shape != plan.shape_b:
-        raise ValueError(
-            f"plan built for {plan.shape_a} @ {plan.shape_b}, "
-            f"got {a.shape} @ {b.shape}")
-    stage = dict(stage) if stage else {"analysis": 0.0, "prediction": 0.0,
-                                       "binning": 0.0, "partition": 0.0}
-    a_values = np.asarray(a.values)
-
-    # ---------------- numeric accumulation (per-device dispatch) ----------
-    t0 = time.perf_counter()
-    pending_dense = []   # (DenseBinExec, (cols, vals, nnz) device arrays)
-    pending_esc = []     # (EscExec, ESCResult device arrays)
-    multi = len(splan.shards) > 1
-    b_cols_host, b_vals_host = kops.pad_b_flat(b)  # pad once, ship per device
-    for shard in splan.shards:
-        if not shard.dense and shard.esc is None:
-            continue
-        with jax.default_device(shard.device):
-            if multi:
-                b_cols_pad = jax.device_put(b_cols_host, shard.device)
-                b_vals_pad = jax.device_put(b_vals_host, shard.device)
-            else:
-                b_cols_pad, b_vals_pad = b_cols_host, b_vals_host
-            for be in shard.dense:
-                pending_dense.append(
-                    (be, _run_dense_bin(be, a_values, b_cols_pad,
-                                        b_vals_pad)))
-            if shard.esc is not None:
-                b_esc = (tuple(jax.device_put(x, shard.device)
-                               for x in (b.indptr, b.indices, b.values))
-                         if multi else None)
-                pending_esc.append(
-                    (shard.esc, _run_esc_bin(shard.esc, a_values, b,
-                                             b_arrays=b_esc)))
-    # gather phase: blocks on each device's stream after all dispatches
-    dense_slabs = [
-        _Slab(be.rows, np.asarray(cols), np.asarray(vals),
-              np.asarray(nnz, np.int64))
-        for be, (cols, vals, nnz) in pending_dense]
-    tail_slabs = [
-        _esc_to_slab(res, ex.rows, len(ex.rows), ex.out_cap)[0]
-        for ex, res in pending_esc]
-    stage["numeric"] = time.perf_counter() - t0
-
-    # ---------------- overflow fallback + compaction (host merge) ---------
-    t0 = time.perf_counter()
-    slabs, n_overflow = _overflow_fallback(plan.products, dense_slabs,
-                                           tail_slabs, a, b)
-    stage["overflow"] = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    c, total = _compact_slabs(slabs, (a.m, b.n), a_values.dtype)
-    stage["postprocess"] = time.perf_counter() - t0
-
-    report = OceanReport(
-        workflow=plan.workflow, er=plan.er, sampled_cr=plan.sampled_cr,
-        nproducts_avg=plan.nproducts_avg,
-        total_products=plan.total_products, m_regs=plan.m_regs,
-        stage_seconds=stage, bins=dict(plan.bins_describe),
-        overflow_rows=n_overflow, nnz_out=total, plan_cache_hit=cache_hit,
-        n_shards=len(splan.shards), shard_imbalance=splan.imbalance)
-    return c, report
+                         cache_hit: bool = False,
+                         executor: str = "pipelined",
+                         ) -> Tuple[CSR, OceanReport]:
+    """Run a :class:`~repro.core.partition.ShardedPlan` across its devices
+    through the unified executor pipeline."""
+    from .executor import execute_sharded_plan as _execute
+    return _execute(splan, a, b, stage=stage, cache_hit=cache_hit,
+                    executor=executor)
 
 
 # ---------------------------------------------------------------------------
@@ -583,11 +378,15 @@ class PlanCache:
             self.misses = 0
 
     def __len__(self) -> int:
-        return len(self._plans)
+        with self._lock:
+            return len(self._plans)
 
     def stats(self) -> Dict[str, int]:
-        return {"hits": self.hits, "misses": self.misses,
-                "size": len(self._plans)}
+        # snapshot under the lock: unlocked reads next to locked writers
+        # could observe a hits/misses/size triple that never existed
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "size": len(self._plans)}
 
 
 DEFAULT_PLAN_CACHE = PlanCache()

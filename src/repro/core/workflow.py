@@ -29,11 +29,11 @@ import jax.numpy as jnp
 
 from . import esc as esc_mod
 from .analysis import AnalysisResult, OceanConfig
-from .formats import CSR
+from .formats import CSR, pow2_at_least
 from .partition import (DeviceSpec, ShardedPlan, partition_plan,
                         resolve_devices, topology_key)
 from .planner import (DEFAULT_PLAN_CACHE, ExecutionPlan, OceanReport,
-                      PlanCache, _pow2_at_least, build_plan, execute_plan,
+                      PlanCache, build_plan, execute_plan,
                       execute_sharded_plan, gather_rows, structure_key)
 
 __all__ = ["OceanReport", "ocean_spgemm", "ocean_spgemm_many",
@@ -56,6 +56,7 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
                  cache: Union[bool, PlanCache, None] = True,
                  sketch_cache: Optional[Dict] = None,
                  devices: DeviceSpec = None,
+                 executor: str = "pipelined",
                  ) -> Tuple[CSR, OceanReport]:
     """Estimation-based SpGEMM, C = A @ B. Returns (C, report).
 
@@ -74,6 +75,9 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
     with the device topology, reusing a cached base plan when present.
     Combined with an explicit ``plan=ExecutionPlan`` this re-partitions
     per call — for repeated calls pass a prebuilt ``ShardedPlan`` instead.
+    ``executor``: ``"pipelined"`` (default) overlaps the host merge with
+    device work through ``core.executor``; ``"serial"`` keeps the global
+    barrier before the merge. Output is bit-identical either way.
     """
     if plan is not None:
         if isinstance(plan, ShardedPlan):
@@ -84,7 +88,7 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
                         f"plan was partitioned for [{plan.topology}], "
                         f"devices= requests [{topo}]; re-partition the "
                         "base plan with partition_plan(plan.plan, devices)")
-            return execute_sharded_plan(plan, a, b)
+            return execute_sharded_plan(plan, a, b, executor=executor)
         if devices is not None:
             # convenience path: partitions on every call. For repeated
             # values-only updates partition once (partition_plan) and pass
@@ -93,8 +97,9 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
             splan = partition_plan(plan, devices)
             stage = {"analysis": 0.0, "prediction": 0.0, "binning": 0.0,
                      "partition": time.perf_counter() - t0}
-            return execute_sharded_plan(splan, a, b, stage=stage)
-        return execute_plan(plan, a, b)
+            return execute_sharded_plan(splan, a, b, stage=stage,
+                                        executor=executor)
+        return execute_plan(plan, a, b, executor=executor)
 
     devs = resolve_devices(devices) if devices is not None else None
     cache_obj = _resolve_cache(cache) if analysis is None else None
@@ -111,9 +116,9 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
                      "prediction": 0.0, "binning": 0.0}
             if devs is None:
                 return execute_plan(cached, a, b, stage=stage,
-                                    cache_hit=True)
+                                    cache_hit=True, executor=executor)
             return execute_sharded_plan(cached, a, b, stage=stage,
-                                        cache_hit=True)
+                                        cache_hit=True, executor=executor)
         # sharded miss: reuse a cached base plan for this structure if one
         # exists (peek — the request-level stats already counted the miss)
         base = cache_obj.peek(key) if devs is not None else None
@@ -127,12 +132,13 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
             stage = dict(base.build_seconds)
         stage["plan_lookup"] = lookup_s
         if devs is None:
-            return execute_plan(base, a, b, stage=stage)
+            return execute_plan(base, a, b, stage=stage, executor=executor)
         t0 = time.perf_counter()
         splan = partition_plan(base, devs)
         stage["partition"] = time.perf_counter() - t0
         cache_obj.insert(lkey, splan)
-        return execute_sharded_plan(splan, a, b, stage=stage)
+        return execute_sharded_plan(splan, a, b, stage=stage,
+                                    executor=executor)
     fresh = build_plan(a, b, cfg, force_workflow=force_workflow,
                        assisted=assisted, hybrid=hybrid,
                        analysis=analysis, sketch_cache=sketch_cache)
@@ -141,8 +147,10 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
         t0 = time.perf_counter()
         splan = partition_plan(fresh, devs)
         stage["partition"] = time.perf_counter() - t0
-        return execute_sharded_plan(splan, a, b, stage=stage)
-    return execute_plan(fresh, a, b, stage=fresh.build_seconds)
+        return execute_sharded_plan(splan, a, b, stage=stage,
+                                    executor=executor)
+    return execute_plan(fresh, a, b, stage=fresh.build_seconds,
+                        executor=executor)
 
 
 def ocean_spgemm_many(a_list: Sequence[CSR], b: CSR,
@@ -151,6 +159,7 @@ def ocean_spgemm_many(a_list: Sequence[CSR], b: CSR,
                       assisted: bool = True, hybrid: bool = True,
                       cache: Union[bool, PlanCache, None] = True,
                       devices: DeviceSpec = None,
+                      executor: str = "pipelined",
                       ) -> List[Tuple[CSR, OceanReport]]:
     """Batched SpGEMM: ``[A_i @ B for A_i in a_list]`` against one B.
 
@@ -158,13 +167,15 @@ def ocean_spgemm_many(a_list: Sequence[CSR], b: CSR,
     (the sketches depend only on B); per-call outputs are bit-identical to
     a Python loop of single ``ocean_spgemm`` calls because sketch
     construction is deterministic. ``devices`` shards every multiply in
-    the stream across the same device set (resolved once).
+    the stream across the same device set (resolved once); ``executor``
+    picks the pipelined (overlapped merge) or serial execution path.
     """
     sketch_cache: Dict = {}
     devs = resolve_devices(devices) if devices is not None else None
     return [ocean_spgemm(a, b, cfg, force_workflow=force_workflow,
                          assisted=assisted, hybrid=hybrid, cache=cache,
-                         sketch_cache=sketch_cache, devices=devs)
+                         sketch_cache=sketch_cache, devices=devs,
+                         executor=executor)
             for a in a_list]
 
 
@@ -173,7 +184,7 @@ def spgemm_reference(a: CSR, b: CSR) -> CSR:
     from .analysis import products_per_row
     prod = products_per_row(a.indptr, a.indices, b.indptr, num_rows_a=a.m)
     p = int(jnp.sum(prod))
-    p_cap = _pow2_at_least(p + 1)
+    p_cap = pow2_at_least(p + 1, floor=64)
     res = esc_mod.esc_spgemm(a.indptr, a.indices, a.values, b.indptr,
                              b.indices, b.values, p_cap=p_cap, out_cap=p_cap,
                              num_rows_a=a.m, n_cols_b=b.n)

@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import CSR, PAD_COL, csr_rows_to_ell, pad_axis
+from repro.core.formats import (CSR, PAD_COL, csr_rows_to_ell, pad_axis,
+                                pow2_at_least)
 from . import hll as khll
 from . import spgemm_dense as kdense
 
@@ -124,13 +125,6 @@ def extract_window_rows(acc, cnt, row_lo, *, cap: int):
     return cols, vals, nnz
 
 
-def _pow2_at_least(x: int, floor: int = 64) -> int:
-    v = floor
-    while v < x:
-        v *= 2
-    return v
-
-
 @functools.partial(jax.jit, static_argnames=("window", "col_tiles", "p_cap"))
 def _dense_bin_xla(a_rows, a_vals, a_starts, a_lens, row_lo, b_cols, b_vals,
                    *, window: int, col_tiles: int, p_cap: int):
@@ -166,13 +160,16 @@ def _dense_bin_xla(a_rows, a_vals, a_starts, a_lens, row_lo, b_cols, b_vals,
 
 def dense_bin_op(a_rows, a_vals, a_starts, a_lens, row_lo, b_cols_pad,
                  b_vals_pad, *, window: int, col_tiles: int = 1,
-                 cap: int | None = None):
+                 cap: int | None = None, p_cap: int | None = None):
     """Run one bin through the dense-accumulator kernel and compact it.
 
     Returns (cols (R, cap), vals (R, cap), nnz (R,)). On TPU this is the
     Pallas kernel; on CPU the vectorized XLA executor with identical
     semantics runs instead (``REPRO_CPU_NUMERIC=pallas`` forces the
-    interpret-mode kernel, as the per-kernel tests do).
+    interpret-mode kernel, as the per-kernel tests do). ``p_cap`` pins the
+    XLA path's static product capacity — shard slices of one bin pass the
+    bin-level capacity so they share a single jit specialization instead
+    of compiling per shard-local product sum.
     """
     use_pallas = (not use_interpret()
                   or os.environ.get("REPRO_CPU_NUMERIC") == "pallas")
@@ -181,7 +178,8 @@ def dense_bin_op(a_rows, a_vals, a_starts, a_lens, row_lo, b_cols_pad,
             a_rows, a_vals, a_starts, a_lens, row_lo, b_cols_pad, b_vals_pad,
             window=window, col_tiles=col_tiles, interpret=use_interpret())
     else:
-        p_cap = _pow2_at_least(int(jnp.sum(a_lens)) + 1)
+        if p_cap is None:
+            p_cap = pow2_at_least(int(jnp.sum(a_lens)) + 1, floor=64)
         acc, cnt = _dense_bin_xla(
             a_rows, a_vals, a_starts, a_lens, row_lo, b_cols_pad, b_vals_pad,
             window=window, col_tiles=col_tiles, p_cap=p_cap)

@@ -32,10 +32,20 @@ class ServiceStats:
     plan_misses: int = 0
     total_seconds: float = 0.0
     setup_seconds: float = 0.0
+    # pipelined-executor overlap: host-merge work moved off the
+    # post-barrier critical path (see OceanReport.overlap_seconds), and
+    # the total merge work it is a fraction of
+    overlap_seconds: float = 0.0
+    merge_seconds: float = 0.0
 
     @property
     def hit_rate(self) -> float:
         return self.plan_hits / max(self.requests, 1)
+
+    @property
+    def merge_overlap_frac(self) -> float:
+        return self.overlap_seconds / self.merge_seconds \
+            if self.merge_seconds > 0.0 else 0.0
 
 
 class SpGEMMService:
@@ -49,10 +59,13 @@ class SpGEMMService:
     """
 
     def __init__(self, cfg: OceanConfig = OceanConfig(), *,
-                 plan_cache_size: int = 64, devices: DeviceSpec = None):
+                 plan_cache_size: int = 64, devices: DeviceSpec = None,
+                 executor: str = "pipelined"):
         self.cfg = cfg
         self.plan_cache = PlanCache(maxsize=plan_cache_size)
         self.stats = ServiceStats()
+        # service-wide default; individual requests may override
+        self.executor = executor
         # resolve once so every request shards over an identical topology
         # (and therefore hits the same cached ShardedPlan)
         self.devices = (resolve_devices(devices) if devices is not None
@@ -78,18 +91,26 @@ class SpGEMMService:
     def multiply(self, a: CSR, b: CSR, *,
                  force_workflow: Optional[str] = None,
                  assisted: bool = True,
-                 hybrid: bool = True) -> Tuple[CSR, OceanReport]:
-        """Serve one C = A @ B request through the plan cache."""
+                 hybrid: bool = True,
+                 executor: Optional[str] = None) -> Tuple[CSR, OceanReport]:
+        """Serve one C = A @ B request through the plan cache.
+
+        ``executor`` overrides the service default for this request
+        (``"pipelined"`` overlaps the host merge with device work,
+        ``"serial"`` keeps the global barrier; output is identical)."""
         t0 = time.perf_counter()
         c, report = ocean_spgemm(
             a, b, self.cfg, force_workflow=force_workflow,
             assisted=assisted, hybrid=hybrid, cache=self.plan_cache,
-            sketch_cache=self._sketch_cache_for(b), devices=self.devices)
+            sketch_cache=self._sketch_cache_for(b), devices=self.devices,
+            executor=executor if executor is not None else self.executor)
         self.stats.requests += 1
         self.stats.plan_hits += int(report.plan_cache_hit)
         self.stats.plan_misses += int(not report.plan_cache_hit)
         self.stats.total_seconds += time.perf_counter() - t0
         self.stats.setup_seconds += report.setup_seconds
+        self.stats.overlap_seconds += report.overlap_seconds
+        self.stats.merge_seconds += report.stage_seconds.get("merge", 0.0)
         return c, report
 
     def multiply_many(self, a_list: Sequence[CSR], b: CSR, **kw
