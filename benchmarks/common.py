@@ -17,6 +17,12 @@ SMOKE = False
 # keeps the global barrier; output is bit-identical either way).
 EXECUTOR = "pipelined"
 
+# Set by ``run.py --analysis-shards``: how many devices the sharding
+# benchmark partitions the analysis stage across (0 = every local device).
+# Output is bit-identical at any shard count; the benchmark asserts that
+# parity before emitting timing rows.
+ANALYSIS_SHARDS = 0
+
 
 def flops_of(a, b) -> int:
     """Paper convention: FLOPs = 2 x number of intermediate products."""

@@ -30,6 +30,10 @@ def main() -> None:
                     choices=("pipelined", "serial"),
                     help="core.executor pipeline the workflow benchmarks "
                          "run through (output is bit-identical either way)")
+    ap.add_argument("--analysis-shards", type=int, default=0,
+                    help="devices the sharding benchmark partitions the "
+                         "analysis stage across (0 = all local devices; "
+                         "parity with monolithic analysis is asserted)")
     args = ap.parse_args()
 
     if args.devices:
@@ -55,6 +59,7 @@ def main() -> None:
     }
     all_modules = modules
     common.EXECUTOR = args.executor
+    common.ANALYSIS_SHARDS = args.analysis_shards
     if args.smoke:
         common.SMOKE = True
         modules = {k: modules[k] for k in ("overall", "moe_dispatch",
@@ -81,15 +86,22 @@ def main() -> None:
     # perf-trajectory record alongside the JSON artifact
     setup_us = cached_us = None
     overlap_fracs = {}
+    analysis_rows = {}
+    analysis_shards_used = None
     for name, us, derived in rows:
         if name == "overall/plan_setup/total":
             setup_us = us
+        if name.endswith("/analysis_sharded"):
+            analysis_rows[name] = us
         for part in derived.split():
             if name == "overall/plan_setup/total" and \
                     part.startswith("cached_us="):
                 cached_us = float(part.split("=", 1)[1])
             if part.startswith("merge_overlap_frac="):
                 overlap_fracs[name] = float(part.split("=", 1)[1])
+            if name.endswith("/analysis_sharded") and \
+                    part.startswith("shards="):
+                analysis_shards_used = int(part.split("=", 1)[1])
     wall_s = sum(module_seconds.values())
     summary = {"plan_setup_fresh_us": setup_us,
                "plan_setup_cached_us": cached_us,
@@ -108,7 +120,13 @@ def main() -> None:
                                       else None),
                "merge_overlap_frac_by_row": (overlap_fracs
                                              if args.executor == "pipelined"
-                                             else {})}
+                                             else {}),
+               # sharded-analysis stage seconds (the sharding module
+               # asserts sharded == monolithic AnalysisResult parity
+               # before emitting these rows, so their presence doubles as
+               # the sharded-analysis correctness canary)
+               "analysis_shards": analysis_shards_used,
+               "analysis_sharded_us_by_row": analysis_rows}
     if setup_us is not None:
         print(f"# BENCH summary: setup_us={setup_us:.1f} "
               f"cached_setup_us={cached_us:.1f} wall_s={wall_s:.1f}",

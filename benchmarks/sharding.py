@@ -12,24 +12,55 @@ dispatch over virtual host devices.
 Every matrix also runs as a correctness canary: pipelined and serial
 executors must agree on the output nnz (and raw arrays) before any timing
 row is emitted, so the uploaded ``BENCH_smoke.json`` doubles as evidence
-the overlapped merge is bit-exact.
+the overlapped merge is bit-exact. The sharded *analysis* stage
+(``--analysis-shards N``) gets the same treatment: every field of the
+sharded AnalysisResult is asserted identical to the monolithic one before
+its timing row is emitted.
 """
 from __future__ import annotations
 
 import jax
 import numpy as np
 
-from repro.core import partition, planner
+from repro.core import analysis, partition, planner
 
 from . import common
 from .common import suite, timeit
 
 
+def _assert_analysis_parity(name: str, r, r0) -> None:
+    assert r.workflow == r0.workflow, (name, r.workflow, r0.workflow)
+    assert (r.total_products, r.er, r.nproducts_avg, r.m_regs) == \
+        (r0.total_products, r0.er, r0.nproducts_avg, r0.m_regs), name
+    assert (r.sampled_cr, r.cr_mean, r.cr_std) == \
+        (r0.sampled_cr, r0.cr_mean, r0.cr_std), name
+    for x, y in ((r.products_row, r0.products_row),
+                 (r.out_lo, r0.out_lo), (r.out_hi, r0.out_hi)):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), name
+    if r0.b_sketches is None:
+        assert r.b_sketches is None, name
+    else:
+        assert np.array_equal(np.asarray(r.b_sketches),
+                              np.asarray(r0.b_sketches)), name
+
+
 def run(rows: list, scale: int = 1):
     devices = jax.devices()
     nd = len(devices)
+    n_an = min(common.ANALYSIS_SHARDS, nd) if common.ANALYSIS_SHARDS else nd
     for name, a in suite(scale):
         plan = planner.build_plan(a, a)
+
+        # sharded-analysis canary + stage seconds: parity is asserted on
+        # every AnalysisResult field before the timing row is emitted
+        r_mono = analysis.analyze(a, a)
+        r_shard = analysis.analyze(a, a, devices=n_an)
+        _assert_analysis_parity(name, r_shard, r_mono)
+        t_an_mono = timeit(lambda: analysis.analyze(a, a))
+        t_an_shard = timeit(lambda: analysis.analyze(a, a, devices=n_an))
+        rows.append((f"sharding/{name}/analysis_sharded", t_an_shard * 1e6,
+                     f"shards={n_an} mono_us={t_an_mono * 1e6:.1f} "
+                     f"parity=ok"))
 
         t_part = timeit(lambda: partition.partition_plan(plan, nd))
         splan = partition.partition_plan(plan, nd)

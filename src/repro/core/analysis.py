@@ -5,19 +5,35 @@ Everything here is O(nnz_A) + O(nnz_B) + O(sample * m_regs), mirroring the
 paper's lightweight analysis. Results surface as host scalars because
 workflow/kernel selection happens on the host (exactly as CUDA SpGEMM picks
 kernels on the host after its analysis step).
+
+The step is organized as a staged :class:`AnalysisPipeline` whose device
+stages can be partitioned across a device set (``analyze(..., devices=N)``)
+through the same dispatch/collect substrate the numeric executor uses
+(``core.dispatch``): A's rows and B's rows are split into contiguous
+cost-balanced blocks (``partition.contiguous_split`` on per-row nnz), each
+device computes its block's ``products_per_row`` / column ranges / HLL
+registers, and the host folds the partials with *exact* merge operators
+(disjoint segment-sum concatenation for products, elementwise min/max for
+ranges, register-wise max for sketches), so the sharded result is
+bit-identical to the monolithic one — property-tested in
+``tests/test_analysis_pipeline.py``.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import hll
-from .formats import CSR, csr_from_arrays, flat_gather_index
+from .dispatch import (DeviceSpec, Launch, collect_in_completion_order,
+                       device_context, resolve_devices,
+                       start_async_host_copies)
+from .formats import CSR, csr_from_arrays, flat_gather_index, pow2_at_least
 from .hll import row_ids_from_indptr
 
 
@@ -53,6 +69,13 @@ class OceanConfig:
         return self.expansion_small_regs if m_regs <= 32 else self.expansion
 
 
+# ---------------------------------------------------------------------------
+# Per-shard device statistics. Invalid (padding) slots route to an overflow
+# segment that is dropped: masked slots must never touch a real row's
+# statistics, because the sharded pipeline's row blocks carry pow2 shape
+# padding (and callers may pass capacity-padded CSRs).
+# ---------------------------------------------------------------------------
+
 @partial(jax.jit, static_argnames=("num_rows_a",))
 def products_per_row(a_indptr, a_indices, b_indptr, *, num_rows_a: int):
     """Number of intermediate products per output row — O(nnz_A)."""
@@ -63,8 +86,9 @@ def products_per_row(a_indptr, a_indices, b_indptr, *, num_rows_a: int):
     k = jnp.clip(a_indices, 0, b_len.shape[0] - 1)
     contrib = jnp.where(valid, b_len[k], 0)
     row = jnp.where(valid, jnp.clip(row_ids_from_indptr(a_indptr, cap), 0,
-                                    num_rows_a - 1), 0)
-    return jax.ops.segment_sum(contrib, row, num_segments=num_rows_a)
+                                    num_rows_a - 1), num_rows_a)
+    return jax.ops.segment_sum(contrib, row,
+                               num_segments=num_rows_a + 1)[:num_rows_a]
 
 
 @partial(jax.jit, static_argnames=("num_rows",))
@@ -74,12 +98,12 @@ def row_col_ranges(indptr, indices, *, num_rows: int):
     nnz = indptr[-1]
     valid = jnp.arange(cap, dtype=jnp.int32) < nnz
     row = jnp.where(valid, jnp.clip(row_ids_from_indptr(indptr, cap), 0,
-                                    num_rows - 1), 0)
+                                    num_rows - 1), num_rows)
     big = jnp.int32(2**31 - 1)
     mins = jax.ops.segment_min(jnp.where(valid, indices, big), row,
-                               num_segments=num_rows)
+                               num_segments=num_rows + 1)[:num_rows]
     maxs = jax.ops.segment_max(jnp.where(valid, indices, -1), row,
-                               num_segments=num_rows)
+                               num_segments=num_rows + 1)[:num_rows]
     return mins, maxs
 
 
@@ -90,13 +114,13 @@ def output_col_ranges(a_indptr, a_indices, b_min, b_max, *, num_rows_a: int):
     nnz_a = a_indptr[-1]
     valid = jnp.arange(cap, dtype=jnp.int32) < nnz_a
     row = jnp.where(valid, jnp.clip(row_ids_from_indptr(a_indptr, cap), 0,
-                                    num_rows_a - 1), 0)
+                                    num_rows_a - 1), num_rows_a)
     k = jnp.clip(a_indices, 0, b_min.shape[0] - 1)
     big = jnp.int32(2**31 - 1)
     lo = jax.ops.segment_min(jnp.where(valid, b_min[k], big), row,
-                             num_segments=num_rows_a)
+                             num_segments=num_rows_a + 1)[:num_rows_a]
     hi = jax.ops.segment_max(jnp.where(valid, b_max[k], -1), row,
-                             num_segments=num_rows_a)
+                             num_segments=num_rows_a + 1)[:num_rows_a]
     return lo, hi
 
 
@@ -118,13 +142,20 @@ class AnalysisResult:
     out_hi: jax.Array
     workflow: str                    # 'upper_bound' | 'estimation' | 'symbolic'
     sample_rows: Optional[np.ndarray] = None
+    cr_sigma: float = 1.0            # OceanConfig.cr_sigma at analysis time
+    n_shards: int = 1                # device shards the analysis ran across
+    # per-shard host-side seconds: dispatch enqueue + block commit + the
+    # blocking collect/merge of that shard's partials. On async backends
+    # device compute overlaps these, so this reads as "host time spent on
+    # shard i", not device execution time.
+    shard_seconds: Optional[List[float]] = None
 
     @property
     def conservative_cr(self) -> float:
-        """§4.1 assisted sizing: mean - sigma*std, clipped to >= 1."""
+        """§4.1 assisted sizing: mean - cr_sigma * std, clipped to >= 1."""
         if self.cr_mean is None:
             return 1.0
-        return max(1.0, self.cr_mean - self.cr_std)
+        return max(1.0, self.cr_mean - self.cr_sigma * self.cr_std)
 
 
 def _pick_sample_rows(num_rows: int, cfg: OceanConfig) -> np.ndarray:
@@ -141,8 +172,10 @@ def sketches_for(b: CSR, m_regs: int, seed: int,
     The cache is a plain dict keyed by ``(m_regs, seed)``; sharing one dict
     across calls against the same B amortizes sketch construction over a
     stream of left-hand sides (``ocean_spgemm_many`` / plan reuse).
-    Construction is deterministic, so cached and fresh sketches are
-    bit-identical.
+    Construction is deterministic — and the sharded pipeline's merged
+    sketches are bit-identical to monolithic ones — so the key is
+    deliberately device-independent: sketches built at any shard count
+    interchange with sketches built at any other.
     """
     key = (m_regs, seed)
     if sketch_cache is not None and key in sketch_cache:
@@ -153,66 +186,344 @@ def sketches_for(b: CSR, m_regs: int, seed: int,
     return sk
 
 
+# ---------------------------------------------------------------------------
+# Sharded device stages
+# ---------------------------------------------------------------------------
+
+# Shard-block shapes are rounded up pow2 ladders (clamped to the full
+# matrix) so analysis shards share jit specializations across splits and
+# topologies, exactly like partition.bucket_shard_rows does for execution
+# shards. Padding is inert: indptr repeats its last value (empty rows) and
+# index slots past nnz are masked by every stage above.
+SHARD_ROW_FLOOR = 64
+SHARD_NNZ_FLOOR = 256
+
+
+def _block_arrays(indptr: np.ndarray, indices: np.ndarray, r0: int, r1: int,
+                  *, num_rows: int, nnz_total: int
+                  ) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Padded (sub_indptr, sub_indices, padded_rows) of rows [r0, r1)."""
+    rows = r1 - r0
+    lo, hi = int(indptr[r0]), int(indptr[r1])
+    r_pad = min(pow2_at_least(max(rows, 1), floor=SHARD_ROW_FLOOR),
+                max(num_rows, 1))
+    n_pad = min(pow2_at_least(max(hi - lo, 1), floor=SHARD_NNZ_FLOOR),
+                max(nnz_total, 1))
+    sub_ptr = np.full(r_pad + 1, hi - lo, np.int32)
+    sub_ptr[: rows + 1] = indptr[r0:r1 + 1] - lo
+    sub_idx = np.zeros(n_pad, np.int32)
+    sub_idx[: hi - lo] = indices[lo:hi]
+    return sub_ptr, sub_idx, r_pad
+
+
+@dataclasses.dataclass
+class _ShardBlock:
+    """One device's contiguous row block of a CSR, committed to the device."""
+    index: int                 # shard slot (device position)
+    device: object
+    r0: int
+    r1: int
+    indptr: jax.Array          # (r_pad+1,) device-resident, padded
+    indices: jax.Array         # (n_pad,) device-resident, padded
+    r_pad: int
+
+    @property
+    def rows(self) -> int:
+        return self.r1 - self.r0
+
+
+class AnalysisPipeline:
+    """Ocean's analysis as a staged pipeline with shardable device stages.
+
+    Stage graph (device stages marked *):
+
+        wave 1:  *A-products (per A-row block)   *B-ranges (per B-row block)
+                       |                               |
+                 segment-sum concat              min/max merge
+                       |                               |
+        host:    ER / nproducts_avg / m_regs / workflow gate
+                       |
+        wave 2:  *A-out-ranges (needs merged B ranges)
+                 *B-sketches   (needs m_regs; skipped for upper_bound /
+                                build_sketches=False / sketch-cache hit)
+                       |                  |
+                 min/max concat     register-wise max merge
+                       |
+        host:    sampled CR + workflow selection (monolithic: tiny sample)
+
+    Every merge operator is exact (integer sums over disjoint row blocks,
+    min/max, register max), so ``run(devices=N)`` is bit-identical to
+    ``run()`` for every field of :class:`AnalysisResult`. Device launches
+    go through ``core.dispatch`` — the same dispatch/collect substrate as
+    the numeric executor — so D2H copies overlap with outstanding compute
+    and partials merge in completion order.
+    """
+
+    def __init__(self, cfg: OceanConfig = OceanConfig()):
+        self.cfg = cfg
+
+    def _needs_sketches(self, er: float, nproducts_avg: float,
+                        build_sketches: bool) -> bool:
+        """The single gate for the sketch stage — shared by the sharded
+        wave-2 dispatch and the host tail so the two can never diverge
+        (a divergence would surface as all-zero merged sketches)."""
+        return (build_sketches
+                and nproducts_avg >= self.cfg.upper_bound_avg_products
+                and er >= self.cfg.er_threshold)
+
+    def run(self, a: CSR, b: CSR, *, build_sketches: bool = True,
+            sketch_cache: Optional[Dict] = None,
+            devices: DeviceSpec = None) -> AnalysisResult:
+        devs = resolve_devices(devices) if devices is not None else None
+        if devs is not None and (len(devs) <= 1 or a.m == 0 or b.m == 0):
+            devs = None
+        if devs is None:
+            return self._run_monolithic(a, b, build_sketches, sketch_cache)
+        return self._run_sharded(a, b, devs, build_sketches, sketch_cache)
+
+    # -- single-device path (the legacy monolithic analyze) ----------------
+
+    def _run_monolithic(self, a: CSR, b: CSR, build_sketches: bool,
+                        sketch_cache: Optional[Dict]) -> AnalysisResult:
+        cfg = self.cfg
+        prod_row = products_per_row(a.indptr, a.indices, b.indptr,
+                                    num_rows_a=a.m)
+        b_min, b_max = row_col_ranges(b.indptr, b.indices, num_rows=b.m)
+        out_lo, out_hi = output_col_ranges(a.indptr, a.indices, b_min, b_max,
+                                           num_rows_a=a.m)
+        return self._finish(
+            a, b, prod_row=prod_row, out_lo=out_lo, out_hi=out_hi,
+            build_sketches=build_sketches,
+            sketch_builder=lambda m: sketches_for(b, m, cfg.seed,
+                                                  sketch_cache),
+            n_shards=1, shard_seconds=None)
+
+    # -- device-partitioned path -------------------------------------------
+
+    def _run_sharded(self, a: CSR, b: CSR, devs: Tuple,
+                     build_sketches: bool,
+                     sketch_cache: Optional[Dict]) -> AnalysisResult:
+        # partition is imported lazily: it depends on the plan containers
+        # (planner), which import this module.
+        from .partition import contiguous_split
+        cfg = self.cfg
+        n_dev = len(devs)
+        shard_s = [0.0] * n_dev
+        a_ptr, a_idx = np.asarray(a.indptr), np.asarray(a.indices)
+        b_ptr, b_idx = np.asarray(b.indptr), np.asarray(b.indices)
+
+        # Analysis work is O(nnz) in each matrix, so per-row nnz is the
+        # balance weight (per-row products are this stage's *output*).
+        a_blocks = contiguous_split(
+            (a_ptr[1:] - a_ptr[:-1]).astype(np.int64), n_dev)
+        b_blocks = contiguous_split(
+            (b_ptr[1:] - b_ptr[:-1]).astype(np.int64), n_dev)
+
+        def commit(blocks, ptr, idx, num_rows, nnz_total) -> List[_ShardBlock]:
+            parts = []
+            for i, (r0, r1) in enumerate(blocks):
+                if r1 <= r0:
+                    continue
+                t0 = time.perf_counter()
+                sp, si, r_pad = _block_arrays(ptr, idx, r0, r1,
+                                              num_rows=num_rows,
+                                              nnz_total=nnz_total)
+                dev = devs[i]
+                parts.append(_ShardBlock(
+                    index=i, device=dev, r0=r0, r1=r1,
+                    indptr=jax.device_put(sp, dev),
+                    indices=jax.device_put(si, dev), r_pad=r_pad))
+                shard_s[i] += time.perf_counter() - t0
+            return parts
+
+        a_parts = commit(a_blocks, a_ptr, a_idx, a.m, a.nnz)
+        b_parts = commit(b_blocks, b_ptr, b_idx, b.m, b.nnz)
+
+        # ---- wave 1: per-block products + B column ranges ----
+        launches: List[Launch] = []
+        order = 0
+        for part in a_parts:
+            t0 = time.perf_counter()
+            with device_context(part.device):
+                bp = jax.device_put(b_ptr, part.device)
+                out = products_per_row(part.indptr, part.indices, bp,
+                                       num_rows_a=part.r_pad)
+            launches.append(Launch(("prod", part), order, (out,)))
+            order += 1
+            shard_s[part.index] += time.perf_counter() - t0
+        for part in b_parts:
+            t0 = time.perf_counter()
+            with device_context(part.device):
+                mins, maxs = row_col_ranges(part.indptr, part.indices,
+                                            num_rows=part.r_pad)
+            launches.append(Launch(("brange", part), order, (mins, maxs)))
+            order += 1
+            shard_s[part.index] += time.perf_counter() - t0
+        start_async_host_copies(launches)
+
+        prod_row = np.zeros(a.m, np.int32)
+        b_min = np.full(b.m, np.iinfo(np.int32).max, np.int32)
+        b_max = np.full(b.m, np.iinfo(np.int32).min, np.int32)
+        for it in collect_in_completion_order(launches):
+            kind, part = it.tag
+            t0 = time.perf_counter()
+            host = [np.asarray(x) for x in it.arrays]
+            n = part.rows
+            if kind == "prod":
+                # disjoint row blocks: per-block segment sums concatenate
+                prod_row[part.r0:part.r1] = host[0][:n]
+            else:
+                np.minimum(b_min[part.r0:part.r1], host[0][:n],
+                           out=b_min[part.r0:part.r1])
+                np.maximum(b_max[part.r0:part.r1], host[1][:n],
+                           out=b_max[part.r0:part.r1])
+            shard_s[part.index] += time.perf_counter() - t0
+
+        total_products = int(prod_row.astype(np.int64).sum())
+        er = total_products / max(a.nnz, 1)
+        nproducts_avg = total_products / max(a.m, 1)
+        m_regs = cfg.m_regs(er)
+        need_sketches = self._needs_sketches(er, nproducts_avg,
+                                             build_sketches)
+        cached_sk = (sketch_cache.get((m_regs, cfg.seed))
+                     if need_sketches and sketch_cache is not None else None)
+
+        # ---- wave 2: output ranges (+ sketches on a cache miss) ----
+        launches = []
+        for part in a_parts:
+            t0 = time.perf_counter()
+            with device_context(part.device):
+                bmin_d = jax.device_put(b_min, part.device)
+                bmax_d = jax.device_put(b_max, part.device)
+                lo, hi = output_col_ranges(part.indptr, part.indices,
+                                           bmin_d, bmax_d,
+                                           num_rows_a=part.r_pad)
+            launches.append(Launch(("orange", part), order, (lo, hi)))
+            order += 1
+            shard_s[part.index] += time.perf_counter() - t0
+        if need_sketches and cached_sk is None:
+            for part in b_parts:
+                t0 = time.perf_counter()
+                with device_context(part.device):
+                    regs = hll.build_sketches(
+                        part.indptr, part.indices, m_regs=m_regs,
+                        num_rows=part.r_pad, seed=cfg.seed)
+                launches.append(Launch(("sketch", part), order, (regs,)))
+                order += 1
+                shard_s[part.index] += time.perf_counter() - t0
+        start_async_host_copies(launches)
+
+        out_lo = np.full(a.m, np.iinfo(np.int32).max, np.int32)
+        out_hi = np.full(a.m, np.iinfo(np.int32).min, np.int32)
+        sketch_parts: List[Tuple[int, int, np.ndarray]] = []
+        for it in collect_in_completion_order(launches):
+            kind, part = it.tag
+            t0 = time.perf_counter()
+            host = [np.asarray(x) for x in it.arrays]
+            n = part.rows
+            if kind == "orange":
+                np.minimum(out_lo[part.r0:part.r1], host[0][:n],
+                           out=out_lo[part.r0:part.r1])
+                np.maximum(out_hi[part.r0:part.r1], host[1][:n],
+                           out=out_hi[part.r0:part.r1])
+            else:
+                sketch_parts.append((part.r0, part.r1, host[0]))
+            shard_s[part.index] += time.perf_counter() - t0
+
+        def sketch_builder(m: int) -> jax.Array:
+            if cached_sk is not None:
+                return cached_sk
+            assert sketch_parts, \
+                "sketch stage was gated off but the host tail wants " \
+                "sketches — _needs_sketches gates must agree"
+            merged = hll.merge_register_partials(sketch_parts, num_rows=b.m,
+                                                 m_regs=m)
+            sk = jnp.asarray(merged)
+            if sketch_cache is not None:
+                sketch_cache[(m, cfg.seed)] = sk
+            return sk
+
+        return self._finish(
+            a, b, prod_row=jnp.asarray(prod_row),
+            out_lo=jnp.asarray(out_lo), out_hi=jnp.asarray(out_hi),
+            build_sketches=build_sketches, sketch_builder=sketch_builder,
+            n_shards=n_dev, shard_seconds=shard_s)
+
+    # -- shared host tail: workflow gate + sampled CR ----------------------
+
+    def _finish(self, a: CSR, b: CSR, *, prod_row, out_lo, out_hi,
+                build_sketches: bool, sketch_builder,
+                n_shards: int,
+                shard_seconds: Optional[List[float]]) -> AnalysisResult:
+        cfg = self.cfg
+        total_products = int(np.asarray(prod_row, np.int64).sum())
+        nnz_a, nnz_b = a.nnz, b.nnz
+        er = total_products / max(nnz_a, 1)
+        nproducts_avg = total_products / max(a.m, 1)
+        m_regs = cfg.m_regs(er)
+
+        if nproducts_avg < cfg.upper_bound_avg_products:
+            return AnalysisResult(
+                nnz_a=nnz_a, nnz_b=nnz_b, total_products=total_products,
+                products_row=prod_row, er=er, nproducts_avg=nproducts_avg,
+                m_regs=m_regs, b_sketches=None, sampled_cr=None,
+                cr_mean=None, cr_std=None, out_lo=out_lo, out_hi=out_hi,
+                workflow="upper_bound", cr_sigma=cfg.cr_sigma,
+                n_shards=n_shards, shard_seconds=shard_seconds)
+
+        sketches = None
+        sampled_cr = cr_mean = cr_std = None
+        sample_rows = None
+        if self._needs_sketches(er, nproducts_avg, build_sketches):
+            # Sketch construction O(nnz_B) + sampled merge (~3% of runtime).
+            sketches = sketch_builder(m_regs)
+            sample_rows = _pick_sample_rows(a.m, cfg)
+            sub = _sample_sub_csr(a, sample_rows)
+            est = hll.estimate_row_nnz(sub, sketches, b.n)
+            est = np.maximum(np.asarray(est), 1.0)
+            prods = np.asarray(prod_row)[sample_rows].astype(np.float64)
+            mask = prods > 0
+            if mask.any():
+                per_row_cr = prods[mask] / est[mask]
+                sampled_cr = float(prods[mask].sum() / est[mask].sum())
+                cr_mean = float(per_row_cr.mean())
+                cr_std = float(per_row_cr.std())
+            else:
+                sampled_cr, cr_mean, cr_std = 1.0, 1.0, 0.0
+
+        if (er >= cfg.er_threshold and sampled_cr is not None
+                and sampled_cr >= cfg.cr_threshold):
+            workflow = "estimation"
+        else:
+            workflow = "symbolic"
+
+        return AnalysisResult(
+            nnz_a=nnz_a, nnz_b=nnz_b, total_products=total_products,
+            products_row=prod_row, er=er, nproducts_avg=nproducts_avg,
+            m_regs=m_regs, b_sketches=sketches, sampled_cr=sampled_cr,
+            cr_mean=cr_mean, cr_std=cr_std, out_lo=out_lo, out_hi=out_hi,
+            workflow=workflow, sample_rows=sample_rows,
+            cr_sigma=cfg.cr_sigma, n_shards=n_shards,
+            shard_seconds=shard_seconds)
+
+
 def analyze(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(),
             build_sketches: bool = True,
-            sketch_cache: Optional[Dict] = None) -> AnalysisResult:
+            sketch_cache: Optional[Dict] = None,
+            devices: DeviceSpec = None) -> AnalysisResult:
     """The Ocean analysis step. Selects the workflow per Table 1:
 
         upper_bound  if nproducts_avg < 64
         estimation   if nproducts_avg >= 64 and ER >= 8 and sampled CR >= 8
         symbolic     otherwise
+
+    ``devices`` partitions the device stages across a device set (int,
+    device sequence, or 1-D mesh — same specs as ``ocean_spgemm``); the
+    result is bit-identical to the single-device run for every field.
     """
-    prod_row = products_per_row(a.indptr, a.indices, b.indptr, num_rows_a=a.m)
-    total_products = int(jnp.sum(prod_row))
-    nnz_a, nnz_b = a.nnz, b.nnz
-    er = total_products / max(nnz_a, 1)
-    nproducts_avg = total_products / max(a.m, 1)
-
-    b_min, b_max = row_col_ranges(b.indptr, b.indices, num_rows=b.m)
-    out_lo, out_hi = output_col_ranges(a.indptr, a.indices, b_min, b_max,
-                                       num_rows_a=a.m)
-
-    m_regs = cfg.m_regs(er)
-
-    if nproducts_avg < cfg.upper_bound_avg_products:
-        return AnalysisResult(
-            nnz_a=nnz_a, nnz_b=nnz_b, total_products=total_products,
-            products_row=prod_row, er=er, nproducts_avg=nproducts_avg,
-            m_regs=m_regs, b_sketches=None, sampled_cr=None, cr_mean=None,
-            cr_std=None, out_lo=out_lo, out_hi=out_hi, workflow="upper_bound")
-
-    sketches = None
-    sampled_cr = cr_mean = cr_std = None
-    sample_rows = None
-    if er >= cfg.er_threshold and build_sketches:
-        # Sketch construction O(nnz_B) + sampled merge (paper: ~3% of runtime).
-        sketches = sketches_for(b, m_regs, cfg.seed, sketch_cache)
-        sample_rows = _pick_sample_rows(a.m, cfg)
-        sub = _sample_sub_csr(a, sample_rows)
-        est = hll.estimate_row_nnz(sub, sketches, b.n)
-        est = np.maximum(np.asarray(est), 1.0)
-        prods = np.asarray(prod_row)[sample_rows].astype(np.float64)
-        mask = prods > 0
-        if mask.any():
-            per_row_cr = prods[mask] / est[mask]
-            sampled_cr = float(prods[mask].sum() / est[mask].sum())
-            cr_mean = float(per_row_cr.mean())
-            cr_std = float(per_row_cr.std())
-        else:
-            sampled_cr, cr_mean, cr_std = 1.0, 1.0, 0.0
-
-    if (er >= cfg.er_threshold and sampled_cr is not None
-            and sampled_cr >= cfg.cr_threshold):
-        workflow = "estimation"
-    else:
-        workflow = "symbolic"
-
-    return AnalysisResult(
-        nnz_a=nnz_a, nnz_b=nnz_b, total_products=total_products,
-        products_row=prod_row, er=er, nproducts_avg=nproducts_avg,
-        m_regs=m_regs, b_sketches=sketches, sampled_cr=sampled_cr,
-        cr_mean=cr_mean, cr_std=cr_std, out_lo=out_lo, out_hi=out_hi,
-        workflow=workflow, sample_rows=sample_rows)
+    return AnalysisPipeline(cfg).run(a, b, build_sketches=build_sketches,
+                                     sketch_cache=sketch_cache,
+                                     devices=devices)
 
 
 def _sample_sub_csr(a: CSR, rows: np.ndarray) -> CSR:

@@ -1,0 +1,108 @@
+"""Async device-launch substrate shared by every sharded stage.
+
+``core.executor`` introduced a dispatch -> collect pipeline for SpGEMM
+execution: enqueue device work without blocking, start async
+device-to-host copies, then pull results back in *completion order*
+(per-array readiness, never a global barrier). That machinery is not
+execution-specific — any stage whose per-shard outputs merge exactly on
+the host can use it. This module is the repo-wide home for it; the
+numeric executor (``core.executor``) and the sharded analysis pipeline
+(``core.analysis.AnalysisPipeline``) both dispatch through these helpers.
+
+Device-set plumbing (``resolve_devices``/``topology_key``) lives here too
+so stages below the partitioner (e.g. analysis) can normalize device
+specs without importing ``core.partition`` (which depends on the plan
+containers); ``core.partition`` re-exports them unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Iterator, List, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+DeviceSpec = Union[None, int, Sequence, "jax.sharding.Mesh"]
+
+
+def resolve_devices(devices: DeviceSpec = None) -> Tuple:
+    """Normalize a device spec to a tuple of jax devices.
+
+    Accepts ``None`` (all local devices), an int (first N local devices), a
+    1-D mesh (e.g. ``launch.mesh.make_shard_mesh()``; any mesh is flattened
+    in row-major order), or an explicit device sequence.
+    """
+    if devices is None:
+        return tuple(jax.devices())
+    if isinstance(devices, int):
+        local = jax.devices()
+        if devices < 1 or devices > len(local):
+            raise ValueError(
+                f"requested {devices} devices, have {len(local)}")
+        return tuple(local[:devices])
+    if isinstance(devices, jax.sharding.Mesh):
+        return tuple(np.asarray(devices.devices).flatten().tolist())
+    devices = tuple(devices)
+    if not devices:
+        raise ValueError("empty device set")
+    return devices
+
+
+def topology_key(devices: Sequence) -> str:
+    """Stable string identity of an ordered device set — the extra
+    component plan caches key sharded plans by."""
+    return ",".join(f"{d.platform}:{d.id}" for d in devices)
+
+
+@dataclasses.dataclass
+class Launch:
+    """One in-flight device computation awaiting collection.
+
+    ``tag`` is caller-owned identity (which shard/bin/stage produced it);
+    ``order`` is the dispatch order — the stable anchor merges sort by
+    when completion order must not leak into results.
+    """
+    tag: object
+    order: int
+    arrays: Tuple
+
+
+def device_context(device):
+    """Context manager placing jax computations on ``device`` (no-op when
+    ``device`` is None — the unsharded single-device path)."""
+    return (jax.default_device(device) if device is not None
+            else contextlib.nullcontext())
+
+
+def start_async_host_copies(launches: Sequence[Launch]) -> None:
+    """Begin async D2H copies for every launch so collection overlaps
+    transfers with still-outstanding compute."""
+    for it in launches:
+        for arr in it.arrays:
+            start = getattr(arr, "copy_to_host_async", None)
+            if start is not None:
+                start()
+
+
+def launch_ready(it: Launch) -> bool:
+    """True when every array of the launch is resident (non-blocking)."""
+    for arr in it.arrays:
+        ready = getattr(arr, "is_ready", None)
+        if ready is not None and not ready():
+            return False
+    return True
+
+
+def collect_in_completion_order(launches: Sequence[Launch]
+                                ) -> Iterator[Launch]:
+    """Yield launches as they complete (ready-first, no global barrier).
+
+    When nothing is ready yet the oldest outstanding launch is yielded —
+    the caller's materialization blocks only on that one item.
+    """
+    remaining: List[Launch] = list(launches)
+    while remaining:
+        idx = next((i for i, it in enumerate(remaining)
+                    if launch_ready(it)), 0)
+        yield remaining.pop(idx)

@@ -12,6 +12,11 @@ all device work. This module replaces both with one staged pipeline:
   device-to-host copies of each result slab;
 * **collect** — pull slabs back in *completion order* (per-slab
   ``jax.Array`` readiness, not one global barrier);
+
+The dispatch/collect primitives themselves (``Launch``, async D2H start,
+completion-order iteration) live in ``core.dispatch`` — they are the
+repo-wide substrate for any sharded stage (``core.analysis`` runs its
+device-partitioned analysis stages through the same helpers);
 * **merge** — as each slab lands, run its overflow scan and the
   incremental half of compaction on the host while later slabs are still
   being computed/copied. Only the exact-ESC overflow fallback and the
@@ -33,7 +38,6 @@ merge the pipeline moved off the post-barrier critical path.
 """
 from __future__ import annotations
 
-import contextlib
 import dataclasses
 import time
 from typing import Dict, List, Optional, Tuple
@@ -43,6 +47,8 @@ import numpy as np
 
 from repro.kernels import ops as kops
 from . import esc as esc_mod
+from .dispatch import (Launch, collect_in_completion_order, device_context,
+                       start_async_host_copies)
 from .esc import EscOverflowError
 from .formats import (CSR, PAD_COL, csr_from_arrays, csr_rows_to_ell,
                       pow2_at_least)
@@ -69,7 +75,9 @@ def _esc_to_slab(res, rows: np.ndarray, num_rows: int,
     if nnz > out_cap:
         # capacity was an upper bound; this indicates a bug, not estimation
         raise EscOverflowError(f"ESC overflow: nnz {nnz} > capacity {out_cap}")
-    counts = np.asarray(res.indptr[1:] - res.indptr[:-1])
+    # shape-bucketed ESC shards carry inert pad rows past num_rows (zero
+    # counts by construction); slice them off before slab assembly
+    counts = np.asarray(res.indptr[1:] - res.indptr[:-1])[:num_rows]
     width = int(counts.max()) if len(counts) else 1
     width = max(width, 1)
     ell_i, ell_v = csr_rows_to_ell(res.indptr, res.indices, res.values,
@@ -87,7 +95,8 @@ def _run_dense_bin(be: DenseBinExec, a_values: np.ndarray, b_cols_pad,
     the same per-row output as the full bin — the property device
     partitioning relies on for bit-identical merges. Shape-bucketed shard
     slices carry inert pad rows (``a_lens == 0``: the kernel does no work
-    for them) and pin the bin-level ``p_cap`` so every slice of one bin
+    for them) and a per-rung ``p_cap`` (``partition.rung_capacity_cap``,
+    a pure function of (bin, rung)) so every same-rung slice of one bin
     replays a single jit specialization.
     """
     a_vals = jax.numpy.asarray(
@@ -104,14 +113,18 @@ def _run_esc_bin(ex: EscExec, a_values: np.ndarray, b: CSR, *,
 
     ``b_arrays`` overrides ``(b.indptr, b.indices, b.values)`` with
     device-committed copies (the sharded path ships B to each shard's
-    device once instead of per call)."""
+    device once instead of per call). ``num_rows_a`` comes from the
+    sub-indptr length, not ``len(ex.rows)``: shape-bucketed shard slices
+    pad the sub-CSR with inert rows so slices of one bin replay a single
+    jit specialization (see ``partition._slice_esc``)."""
     b_indptr, b_indices, b_values = (
         b_arrays if b_arrays is not None else (b.indptr, b.indices,
                                                b.values))
     return esc_mod.esc_spgemm(
         ex.sub_indptr, ex.sub_indices, a_values[ex.src],
         b_indptr, b_indices, b_values, p_cap=ex.p_cap,
-        out_cap=ex.out_cap, num_rows_a=len(ex.rows), n_cols_b=b.n)
+        out_cap=ex.out_cap, num_rows_a=ex.sub_indptr.shape[0] - 1,
+        n_cols_b=b.n)
 
 
 def _compact_slabs(slabs: List[_Slab], shape: Tuple[int, int],
@@ -152,37 +165,28 @@ class _ShardWork:
     esc: Optional[EscExec]
 
 
-@dataclasses.dataclass
-class _Pending:
-    """One in-flight kernel launch awaiting collection."""
-    kind: str                  # 'dense' | 'esc'
-    order: int                 # dispatch order (stable merge anchor)
-    exec_: object              # DenseBinExec | EscExec
-    arrays: Tuple              # device arrays
-
-
 def _shards_of_plan(plan: ExecutionPlan) -> List[_ShardWork]:
     return [_ShardWork(device=None, dense=plan.dense, esc=plan.esc)]
 
 
 def _dispatch(shards: List[_ShardWork], a_values: np.ndarray,
-              b: CSR) -> List[_Pending]:
+              b: CSR) -> List[Launch]:
     """Dispatch stage: enqueue every (shard, bin) launch without blocking.
 
     B is padded once on the host and shipped to each shard's device when
     more than one shard participates. Async D2H copies are started for
     every result so the collect stage overlaps transfers with compute.
+    Each launch is tagged ``(kind, exec)`` so the merge can tell dense
+    slabs (overflow-scanned) from ESC slabs (capacities are upper bounds).
     """
-    items: List[_Pending] = []
+    items: List[Launch] = []
     order = 0
     multi = len(shards) > 1
     b_cols_host, b_vals_host = kops.pad_b_flat(b)
     for shard in shards:
         if not shard.dense and shard.esc is None:
             continue
-        ctx = (jax.default_device(shard.device)
-               if shard.device is not None else contextlib.nullcontext())
-        with ctx:
+        with device_context(shard.device):
             if multi and shard.device is not None:
                 b_cols_pad = jax.device_put(b_cols_host, shard.device)
                 b_vals_pad = jax.device_put(b_vals_host, shard.device)
@@ -190,41 +194,30 @@ def _dispatch(shards: List[_ShardWork], a_values: np.ndarray,
                 b_cols_pad, b_vals_pad = b_cols_host, b_vals_host
             for be in shard.dense:
                 arrays = _run_dense_bin(be, a_values, b_cols_pad, b_vals_pad)
-                items.append(_Pending("dense", order, be, tuple(arrays)))
+                items.append(Launch(("dense", be), order, tuple(arrays)))
                 order += 1
             if shard.esc is not None:
                 b_esc = (tuple(jax.device_put(x, shard.device)
                                for x in (b.indptr, b.indices, b.values))
                          if multi and shard.device is not None else None)
                 res = _run_esc_bin(shard.esc, a_values, b, b_arrays=b_esc)
-                items.append(_Pending("esc", order, shard.esc, tuple(res)))
+                items.append(Launch(("esc", shard.esc), order, tuple(res)))
                 order += 1
-    for it in items:
-        for arr in it.arrays:
-            start = getattr(arr, "copy_to_host_async", None)
-            if start is not None:
-                start()
+    start_async_host_copies(items)
     return items
 
 
-def _is_ready(it: _Pending) -> bool:
-    for arr in it.arrays:
-        ready = getattr(arr, "is_ready", None)
-        if ready is not None and not ready():
-            return False
-    return True
-
-
-def _materialize(it: _Pending) -> _Slab:
+def _materialize(it: Launch) -> _Slab:
     """Pull one pending launch to the host (blocks only on this item) and
     shape it as a slab, dropping any shape-bucketing pad rows."""
-    if it.kind == "dense":
-        be: DenseBinExec = it.exec_
+    kind, exec_ = it.tag
+    if kind == "dense":
+        be: DenseBinExec = exec_
         nv = be.n_valid
         cols, vals, nnz = (np.asarray(x) for x in it.arrays)
         return _Slab(be.rows, cols[:nv], vals[:nv],
                      nnz[:nv].astype(np.int64))
-    ex: EscExec = it.exec_
+    ex: EscExec = exec_
     res = esc_mod.ESCResult(*(np.asarray(x) for x in it.arrays))
     slab, _ = _esc_to_slab(res, ex.rows, len(ex.rows), ex.out_cap)
     return slab
@@ -238,8 +231,8 @@ class _MergeState:
         self.kept: List[_Slab] = []
         self.overflow: Dict[int, np.ndarray] = {}
 
-    def add(self, it: _Pending, slab: _Slab) -> None:
-        if it.kind != "dense":
+    def add(self, it: Launch, slab: _Slab) -> None:
+        if it.tag[0] != "dense":
             self.kept.append(slab)   # ESC capacities are upper bounds
             return
         over = slab.nnz > slab.cols.shape[1]
@@ -285,7 +278,7 @@ def _run_overflow_fallback(state: _MergeState, products: np.ndarray,
 # The two collect policies
 # ---------------------------------------------------------------------------
 
-def _collect_serial(items: List[_Pending], plan: ExecutionPlan, a: CSR,
+def _collect_serial(items: List[Launch], plan: ExecutionPlan, a: CSR,
                     b: CSR, a_values: np.ndarray, stage: Dict[str, float],
                     dispatch_s: float):
     """Reference semantics: one global barrier, then merge. Keeps the
@@ -305,7 +298,7 @@ def _collect_serial(items: List[_Pending], plan: ExecutionPlan, a: CSR,
     return c, total, n_overflow, 0.0, 0.0
 
 
-def _collect_pipelined(items: List[_Pending], plan: ExecutionPlan, a: CSR,
+def _collect_pipelined(items: List[Launch], plan: ExecutionPlan, a: CSR,
                        b: CSR, a_values: np.ndarray,
                        stage: Dict[str, float], dispatch_s: float):
     """Overlapped collect/merge: slabs are pulled in completion order and
@@ -313,10 +306,9 @@ def _collect_pipelined(items: List[_Pending], plan: ExecutionPlan, a: CSR,
     are still being computed or copied back."""
     state = _MergeState()
     collect_s = merge_s = overlap_s = 0.0
-    remaining = list(items)
-    while remaining:
-        idx = next((i for i, it in enumerate(remaining) if _is_ready(it)), 0)
-        it = remaining.pop(idx)
+    n_left = len(items)
+    for it in collect_in_completion_order(items):
+        n_left -= 1
         t0 = time.perf_counter()
         slab = _materialize(it)
         collect_s += time.perf_counter() - t0
@@ -324,7 +316,7 @@ def _collect_pipelined(items: List[_Pending], plan: ExecutionPlan, a: CSR,
         state.add(it, slab)
         dt = time.perf_counter() - t0
         merge_s += dt
-        if remaining:
+        if n_left:
             # merge work done before the last slab was collected — the
             # serial executor runs all of this after its global barrier;
             # on async backends the outstanding items are still computing
@@ -375,7 +367,9 @@ def _execute(plan: ExecutionPlan, shards: List[_ShardWork], a: CSR, b: CSR,
         stage_seconds=stage, bins=dict(plan.bins_describe),
         overflow_rows=n_overflow, nnz_out=total, plan_cache_hit=cache_hit,
         n_shards=n_shards, shard_imbalance=shard_imbalance,
-        executor=mode, overlap_seconds=overlap_s, merge_overlap_frac=frac)
+        executor=mode, overlap_seconds=overlap_s, merge_overlap_frac=frac,
+        analysis_shards=plan.analysis_shards,
+        analysis_shard_seconds=plan.analysis_shard_seconds)
     return c, report
 
 

@@ -15,6 +15,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .formats import CSR
 
@@ -59,7 +60,7 @@ def build_sketches(indptr, indices, *, m_regs: int, num_rows: int,
     cap = indices.shape[0]
     nnz_total = indptr[-1]
     valid = jnp.arange(cap, dtype=jnp.int32) < nnz_total
-    h = hash32(indices)
+    h = hash32(indices, seed=seed)
     reg = (h & jnp.uint32(m_regs - 1)).astype(jnp.int32)
     rho = _rho(h, p)
     row = row_ids_from_indptr(indptr, cap)
@@ -74,6 +75,25 @@ def build_sketches(indptr, indices, *, m_regs: int, num_rows: int,
 def sketch_rows(b: CSR, m_regs: int, seed: int = 0) -> jax.Array:
     return build_sketches(b.indptr, b.indices, m_regs=m_regs,
                           num_rows=b.m, seed=seed)
+
+
+def merge_register_partials(partials, *, num_rows: int,
+                            m_regs: int) -> np.ndarray:
+    """Host merge of per-shard HLL register arrays: register-wise max.
+
+    ``partials`` is ``[(r0, r1, regs), ...]`` where ``regs`` covers rows
+    ``[r0, r1)`` of the full matrix (possibly carrying shape-padding rows
+    past ``r1 - r0``, which are dropped). HLL registers are segment maxima
+    (>= 0), so folding shard partials with elementwise max over a
+    zero-initialized array reproduces the monolithic construction bit for
+    bit: row blocks are disjoint and max against the 0 identity is exact.
+    Used by the sharded analysis pipeline (``core.analysis``).
+    """
+    full = np.zeros((num_rows, m_regs), np.int32)
+    for r0, r1, regs in partials:
+        np.maximum(full[r0:r1], np.asarray(regs)[: r1 - r0],
+                   out=full[r0:r1])
+    return full
 
 
 @partial(jax.jit, static_argnames=("num_rows_a",))

@@ -22,15 +22,24 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
+# Device-set plumbing lives in core.dispatch (the shared sharded-stage
+# substrate) so modules below the partitioner — e.g. the sharded analysis
+# pipeline — can use it without importing the plan containers; re-exported
+# here unchanged for the established API.
+from .dispatch import DeviceSpec, resolve_devices, topology_key
 from .formats import flat_gather_index, pow2_at_least
 from .planner import DenseBinExec, EscExec, ExecutionPlan
 
-DeviceSpec = Union[None, int, Sequence, "jax.sharding.Mesh"]
+__all__ = [
+    "DeviceSpec", "PlanShard", "ShardedPlan", "balanced_split",
+    "bucket_shard_rows", "contiguous_split", "partition_plan",
+    "resolve_devices", "rung_capacity_cap", "topology_key",
+]
 
 # Shard row counts are rounded up this pow2 ladder (floor below, clamped to
 # the parent bin's row count) and padded with inert rows: compilations are
@@ -39,6 +48,10 @@ DeviceSpec = Union[None, int, Sequence, "jax.sharding.Mesh"]
 # specialization, and the clamp guarantees that for bins at or below a
 # rung every topology lands on the same shape.
 SHARD_ROW_FLOOR = 32
+# Floor of the ESC shard sub-CSR nnz-capacity ladder (the row ladder above
+# applies to its row count; product/output capacities start at 64 like
+# every other ESC capacity).
+ESC_SHARD_NNZ_FLOOR = 64
 
 
 def bucket_shard_rows(n_rows: int, bin_rows: int) -> int:
@@ -49,33 +62,53 @@ def bucket_shard_rows(n_rows: int, bin_rows: int) -> int:
     return min(pow2_at_least(n_rows, floor=SHARD_ROW_FLOOR), bin_rows)
 
 
-def resolve_devices(devices: DeviceSpec = None) -> Tuple:
-    """Normalize a device spec to a tuple of jax devices.
+def rung_capacity_cap(costs: np.ndarray, r_pad: int, bin_cap: int, *,
+                      floor: int = 64) -> int:
+    """Topology-independent capacity for a shard at ladder rung ``r_pad``.
 
-    Accepts ``None`` (all local devices), an int (first N local devices), a
-    1-D mesh (e.g. ``launch.mesh.make_shard_mesh()``; any mesh is flattened
-    in row-major order), or an explicit device sequence.
+    The pow2 cover of the worst case any shard of at most ``r_pad`` rows
+    sliced from this bin can need — the sum of the bin's ``r_pad`` largest
+    per-row costs — clamped to the bin-level capacity. Depending only on
+    (bin, rung), never on the particular shard or topology, every shard
+    whose row count buckets to the same rung shares one capacity (hence
+    one jit specialization), while large bins' shards stop inheriting the
+    whole bin's capacity (the per-rung ladder the XLA dense fallback and
+    the ESC pass size their static product/output slots by).
     """
-    if devices is None:
-        return tuple(jax.devices())
-    if isinstance(devices, int):
-        local = jax.devices()
-        if devices < 1 or devices > len(local):
-            raise ValueError(
-                f"requested {devices} devices, have {len(local)}")
-        return tuple(local[:devices])
-    if isinstance(devices, jax.sharding.Mesh):
-        return tuple(np.asarray(devices.devices).flatten().tolist())
-    devices = tuple(devices)
-    if not devices:
-        raise ValueError("empty device set")
-    return devices
+    costs = np.asarray(costs, np.int64)
+    k = min(int(r_pad), len(costs))
+    if k <= 0:
+        return min(pow2_at_least(1, floor=floor), max(bin_cap, 1))
+    top = np.partition(costs, len(costs) - k)[len(costs) - k:]
+    return min(pow2_at_least(int(top.sum()) + 1, floor=floor),
+               max(bin_cap, 1))
 
 
-def topology_key(devices: Sequence) -> str:
-    """Stable string identity of an ordered device set — the extra
-    component plan caches key sharded plans by."""
-    return ",".join(f"{d.platform}:{d.id}" for d in devices)
+def contiguous_split(costs: np.ndarray,
+                     n_shards: int) -> List[Tuple[int, int]]:
+    """Split rows ``0..len(costs)`` into ``n_shards`` contiguous
+    ``[start, end)`` blocks balancing the summed cost (prefix-sum
+    targets). Contiguity is what keeps sharded-*stage* merges exact
+    concatenations — row-disjoint blocks in row order — which is why the
+    sharded analysis pipeline splits with this instead of the LPT
+    row-shuffle ``balanced_split`` uses for kernel bins. Blocks may be
+    empty when rows run out (callers skip those shards); a zero-cost
+    matrix falls back to an equal row split.
+    """
+    costs = np.asarray(costs, np.int64)
+    m = len(costs)
+    if n_shards <= 1 or m == 0:
+        return [(0, m)] + [(m, m)] * (max(n_shards, 1) - 1)
+    cum = np.cumsum(costs)
+    total = int(cum[-1])
+    if total <= 0:
+        bounds = np.linspace(0, m, n_shards + 1).round().astype(np.int64)
+    else:
+        targets = total * np.arange(1, n_shards, dtype=np.float64) / n_shards
+        inner = np.searchsorted(cum, targets, side="left") + 1
+        bounds = np.concatenate([[0], inner, [m]])
+    bounds = np.maximum.accumulate(np.clip(bounds, 0, m))
+    return [(int(bounds[i]), int(bounds[i + 1])) for i in range(n_shards)]
 
 
 def balanced_split(costs: np.ndarray, n_shards: int,
@@ -107,14 +140,15 @@ def _slice_dense(be: DenseBinExec, sel: np.ndarray, device) -> DenseBinExec:
 
     The slice's kernel arrays are padded with inert rows (``a_lens == 0``,
     so the kernel does no work for them) up to :func:`bucket_shard_rows`,
-    and the bin-level ``p_cap`` is inherited, so every shard of one bin —
-    across devices and across topologies — replays a single jit
-    specialization instead of compiling per (bin, shard) shape. Any
-    topology-independent ``p_cap`` must cover the worst-case shard
-    (≈ the whole bin), so bin-level inheritance is the minimal choice;
-    the Pallas kernel never reads ``p_cap`` (its grid is per-row), but
-    the ``_dense_bin_xla`` fallback enumerates ``p_cap`` product slots,
-    so on that path each shard pays the full bin's slot count. Host-side
+    and ``p_cap`` comes from the per-rung ladder
+    (:func:`rung_capacity_cap`: pow2 cover of the bin's ``r_pad`` largest
+    per-row costs, clamped to the bin-level cap), so every shard of one
+    bin whose size lands on the same rung — across devices and across
+    topologies — replays a single jit specialization instead of compiling
+    per (bin, shard) shape. The Pallas kernel never reads ``p_cap`` (its
+    grid is per-row), but the ``_dense_bin_xla`` fallback enumerates
+    ``p_cap`` product slots, so the rung ladder is what stops XLA-path
+    shards of a large bin paying the full bin's slot count. Host-side
     metadata (``rows``/``cost``) stays unpadded; ``n_valid`` tells the
     executor where real rows end."""
     n_valid = len(sel)
@@ -138,18 +172,46 @@ def _slice_dense(be: DenseBinExec, sel: np.ndarray, device) -> DenseBinExec:
         a_rows=put(be.a_rows, -1), a_starts=put(be.a_starts, 0),
         a_lens=put(be.a_lens, 0), row_lo=put(be.row_lo, 0),
         cost=be.cost[sel], bin_id=be.bin_id, n_valid=n_valid,
-        p_cap=be.p_cap)
+        p_cap=rung_capacity_cap(be.cost, r_pad, be.p_cap))
 
 
 def _slice_esc(ex: EscExec, sel: np.ndarray) -> EscExec:
     """Row-subset of the ESC bin, reusing the frozen sub-CSR structure via
-    a flat segment gather; capacity shrinks to the shard's product sum."""
+    a flat segment gather.
+
+    Shapes are bucketed like dense-bin slices so ESC shards share jit
+    specializations across devices and topologies: the sub-CSR row count
+    pads up :func:`bucket_shard_rows` (inert empty rows — the padded
+    indptr repeats its tail, so they enumerate zero products), the nnz
+    capacity and the product/output capacities round up per-rung pow2
+    ladders (:func:`rung_capacity_cap`) clamped to the parent bin's, and
+    ``n_valid`` tells the executor where real rows end. The padded kernel
+    is bit-identical over the real rows: every ESC per-row result is
+    independent of which other rows share the pass.
+    """
     new_ptr, seg = flat_gather_index(ex.sub_indptr, sel)
     cost = ex.cost[sel]
-    p_cap = pow2_at_least(int(cost.sum()) + 1, floor=64)
-    return EscExec(rows=ex.rows[sel], sub_indptr=new_ptr.astype(np.int32),
-                   sub_indices=ex.sub_indices[seg], src=ex.src[seg],
-                   p_cap=p_cap, out_cap=p_cap, cost=cost)
+    n_valid = len(sel)
+    bin_rows = len(ex.rows)
+    r_pad = bucket_shard_rows(n_valid, bin_rows)
+    row_nnz = np.diff(ex.sub_indptr).astype(np.int64)
+    nnz = int(new_ptr[-1])
+    c_pad = rung_capacity_cap(row_nnz, r_pad, int(ex.sub_indptr[-1]),
+                              floor=ESC_SHARD_NNZ_FLOOR)
+    c_pad = max(c_pad, nnz, 1)
+    sub_ptr = np.full(r_pad + 1, nnz, np.int64)
+    sub_ptr[: n_valid + 1] = new_ptr
+
+    def padded(x):
+        x = np.asarray(x)
+        out = np.zeros(c_pad, x.dtype)
+        out[:nnz] = x[seg]
+        return out
+
+    p_cap = rung_capacity_cap(ex.cost, r_pad, ex.p_cap)
+    return EscExec(rows=ex.rows[sel], sub_indptr=sub_ptr.astype(np.int32),
+                   sub_indices=padded(ex.sub_indices), src=padded(ex.src),
+                   p_cap=p_cap, out_cap=p_cap, cost=cost, n_valid=n_valid)
 
 
 @dataclasses.dataclass

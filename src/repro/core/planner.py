@@ -65,6 +65,14 @@ class OceanReport:
     # work on async backends; pipelined executor only, serial reports 0.0)
     overlap_seconds: float = 0.0
     merge_overlap_frac: float = 0.0
+    # device shards the plan's analysis stage ran across, with per-shard
+    # host-side seconds (dispatch enqueue + collect/merge per shard — not
+    # device execution time; build-time facts of the plan: a cache hit
+    # replays the values recorded when the plan was built). stage_seconds
+    # ["analysis"] stays the stage total — shard times overlap in wall
+    # clock, so they are surfaced separately rather than summed into it.
+    analysis_shards: int = 1
+    analysis_shard_seconds: Optional[List[float]] = None
 
     @property
     def total_seconds(self) -> float:
@@ -111,21 +119,31 @@ class DenseBinExec:
                                # across sharding; shard slices keep it)
     n_valid: int               # real rows; kernel rows beyond this are
                                # inert shape-bucketing padding (a_lens == 0)
-    p_cap: int                 # bin-level product capacity — every shard
-                               # slice pins this so slices of one bin share
-                               # a single jit specialization
+    p_cap: int                 # static product capacity. The base plan's
+                               # bins carry the bin-level pow2 cover; shard
+                               # slices carry the per-rung ladder value
+                               # (partition.rung_capacity_cap) — a pure
+                               # function of (bin, rung) so same-rung
+                               # slices share one jit specialization
 
 
 @dataclasses.dataclass
 class EscExec:
-    """The ESC bin: precomputed sub-CSR structure + capacities."""
+    """The ESC bin: precomputed sub-CSR structure + capacities.
+
+    Shard slices of the bin are shape-bucketed (``partition._slice_esc``):
+    ``sub_indptr``/``sub_indices``/``src`` may carry inert padding past
+    the real rows/nnz so slices share jit specializations; ``n_valid``
+    (== ``len(rows)``) tells the executor where real rows end.
+    """
     rows: np.ndarray
-    sub_indptr: np.ndarray     # (len(rows)+1,)
+    sub_indptr: np.ndarray     # (padded_rows+1,)
     sub_indices: np.ndarray    # gathered column ids (structure-only)
     src: np.ndarray            # flat gather into A's values
     p_cap: int
     out_cap: int
     cost: np.ndarray           # per-row estimated product counts
+    n_valid: int               # real rows; indptr rows beyond are padding
 
 
 @dataclasses.dataclass
@@ -155,6 +173,10 @@ class ExecutionPlan:
     m_regs: int
     b_sketches: Optional[jax.Array]
     build_seconds: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # how the analysis stage ran when this plan was built (surfaced into
+    # OceanReport on every execution of the plan)
+    analysis_shards: int = 1
+    analysis_shard_seconds: Optional[List[float]] = None
 
     def reuse_b_sketches(self) -> Dict:
         """Seed a sketch cache from this plan for later builds against the
@@ -192,14 +214,22 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
                force_workflow: Optional[str] = None, assisted: bool = True,
                hybrid: bool = True, analysis: Optional[AnalysisResult] = None,
                sketch_cache: Optional[Dict] = None,
-               key: Optional[str] = None) -> ExecutionPlan:
-    """Run analysis -> size prediction -> binning and freeze the result."""
+               key: Optional[str] = None,
+               analysis_devices=None) -> ExecutionPlan:
+    """Run analysis -> size prediction -> binning and freeze the result.
+
+    ``analysis_devices`` partitions the analysis stage across a device set
+    (``core.analysis.AnalysisPipeline``); the stage's output — and hence
+    the plan — is bit-identical to the single-device run, which is why the
+    plan-cache key deliberately excludes it.
+    """
     stage: Dict[str, float] = {}
 
     # ---------------- analysis ----------------
     t0 = time.perf_counter()
     if analysis is None:
-        analysis = analyze(a, b, cfg, sketch_cache=sketch_cache)
+        analysis = analyze(a, b, cfg, sketch_cache=sketch_cache,
+                           devices=analysis_devices)
     wf = force_workflow or analysis.workflow
     products = np.asarray(analysis.products_row, np.int64)
     total_products = analysis.total_products
@@ -278,7 +308,8 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
         esc_exec = EscExec(rows=rows, sub_indptr=sub_ptr.astype(np.int32),
                            sub_indices=np.asarray(a.indices)[src], src=src,
                            p_cap=p_cap, out_cap=p_cap,
-                           cost=np.asarray(plan.esc_costs, np.int64))
+                           cost=np.asarray(plan.esc_costs, np.int64),
+                           n_valid=len(rows))
     stage["binning"] = time.perf_counter() - t0
 
     return ExecutionPlan(
@@ -290,7 +321,8 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
         nproducts_avg=analysis.nproducts_avg, total_products=total_products,
         m_regs=analysis.m_regs, b_sketches=sketches
         if wf == "estimation" else analysis.b_sketches,
-        build_seconds=stage)
+        build_seconds=stage, analysis_shards=analysis.n_shards,
+        analysis_shard_seconds=analysis.shard_seconds)
 
 
 # ---------------------------------------------------------------------------

@@ -56,6 +56,7 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
                  cache: Union[bool, PlanCache, None] = True,
                  sketch_cache: Optional[Dict] = None,
                  devices: DeviceSpec = None,
+                 analysis_devices: DeviceSpec = None,
                  executor: str = "pipelined",
                  ) -> Tuple[CSR, OceanReport]:
     """Estimation-based SpGEMM, C = A @ B. Returns (C, report).
@@ -75,6 +76,13 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
     with the device topology, reusing a cached base plan when present.
     Combined with an explicit ``plan=ExecutionPlan`` this re-partitions
     per call — for repeated calls pass a prebuilt ``ShardedPlan`` instead.
+    ``analysis_devices``: partition the *analysis stage* across these
+    devices too (``core.analysis.AnalysisPipeline``). Defaults to
+    ``devices`` — a multi-device call shards its analysis over the same
+    topology unless told otherwise. Analysis output is bit-identical at
+    any shard count, so this never changes results or plan-cache keys
+    (only where the O(nnz) setup work runs); per-shard timings surface as
+    ``OceanReport.analysis_shard_seconds``.
     ``executor``: ``"pipelined"`` (default) overlaps the host merge with
     device work through ``core.executor``; ``"serial"`` keeps the global
     barrier before the merge. Output is bit-identical either way.
@@ -102,6 +110,8 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
         return execute_plan(plan, a, b, executor=executor)
 
     devs = resolve_devices(devices) if devices is not None else None
+    an_devs = (resolve_devices(analysis_devices)
+               if analysis_devices is not None else devs)
     cache_obj = _resolve_cache(cache) if analysis is None else None
     if cache_obj is not None:
         t0 = time.perf_counter()
@@ -127,7 +137,8 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
         else:
             base = build_plan(a, b, cfg, force_workflow=force_workflow,
                               assisted=assisted, hybrid=hybrid,
-                              sketch_cache=sketch_cache, key=key)
+                              sketch_cache=sketch_cache, key=key,
+                              analysis_devices=an_devs)
             cache_obj.insert(key, base)
             stage = dict(base.build_seconds)
         stage["plan_lookup"] = lookup_s
@@ -141,7 +152,8 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
                                     executor=executor)
     fresh = build_plan(a, b, cfg, force_workflow=force_workflow,
                        assisted=assisted, hybrid=hybrid,
-                       analysis=analysis, sketch_cache=sketch_cache)
+                       analysis=analysis, sketch_cache=sketch_cache,
+                       analysis_devices=an_devs)
     if devs is not None:
         stage = dict(fresh.build_seconds)
         t0 = time.perf_counter()
@@ -159,6 +171,7 @@ def ocean_spgemm_many(a_list: Sequence[CSR], b: CSR,
                       assisted: bool = True, hybrid: bool = True,
                       cache: Union[bool, PlanCache, None] = True,
                       devices: DeviceSpec = None,
+                      analysis_devices: DeviceSpec = None,
                       executor: str = "pipelined",
                       ) -> List[Tuple[CSR, OceanReport]]:
     """Batched SpGEMM: ``[A_i @ B for A_i in a_list]`` against one B.
@@ -166,16 +179,22 @@ def ocean_spgemm_many(a_list: Sequence[CSR], b: CSR,
     Amortizes B-sketch construction across the stream of left-hand sides
     (the sketches depend only on B); per-call outputs are bit-identical to
     a Python loop of single ``ocean_spgemm`` calls because sketch
-    construction is deterministic. ``devices`` shards every multiply in
-    the stream across the same device set (resolved once); ``executor``
-    picks the pipelined (overlapped merge) or serial execution path.
+    construction is deterministic — including sketches built by the
+    sharded analysis pipeline, which interchange with monolithic ones in
+    the shared cache. ``devices`` shards every multiply in the stream
+    across the same device set (resolved once); ``analysis_devices``
+    shards each call's analysis stage (defaults to ``devices``);
+    ``executor`` picks the pipelined (overlapped merge) or serial
+    execution path.
     """
     sketch_cache: Dict = {}
     devs = resolve_devices(devices) if devices is not None else None
+    an_devs = (resolve_devices(analysis_devices)
+               if analysis_devices is not None else devs)
     return [ocean_spgemm(a, b, cfg, force_workflow=force_workflow,
                          assisted=assisted, hybrid=hybrid, cache=cache,
                          sketch_cache=sketch_cache, devices=devs,
-                         executor=executor)
+                         analysis_devices=an_devs, executor=executor)
             for a in a_list]
 
 

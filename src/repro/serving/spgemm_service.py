@@ -54,12 +54,17 @@ class SpGEMMService:
     ``devices`` (int, device sequence, or 1-D mesh) makes every request
     execute as a device-partitioned plan so one service instance can
     saturate a multi-device host; sharded plans live in the same LRU
-    cache, keyed by structure + device topology. Default: single-device
-    execution, as before.
+    cache, keyed by structure + device topology. ``analysis_devices``
+    shards each plan-building request's *analysis stage* across a device
+    set too (``core.analysis.AnalysisPipeline``; defaults to ``devices``)
+    — analysis output is bit-identical at any shard count, so cached
+    plans and sketches interchange regardless of where analysis ran.
+    Default: single-device execution, as before.
     """
 
     def __init__(self, cfg: OceanConfig = OceanConfig(), *,
                  plan_cache_size: int = 64, devices: DeviceSpec = None,
+                 analysis_devices: DeviceSpec = None,
                  executor: str = "pipelined"):
         self.cfg = cfg
         self.plan_cache = PlanCache(maxsize=plan_cache_size)
@@ -70,6 +75,9 @@ class SpGEMMService:
         # (and therefore hits the same cached ShardedPlan)
         self.devices = (resolve_devices(devices) if devices is not None
                         else None)
+        self.analysis_devices = (resolve_devices(analysis_devices)
+                                 if analysis_devices is not None
+                                 else self.devices)
         # sketch caches per right-hand side, keyed by B's structure hash —
         # kept small (LRU); a stream usually reuses a handful of Bs.
         self._sketch_caches: "OrderedDict[str, Dict]" = OrderedDict()
@@ -103,6 +111,7 @@ class SpGEMMService:
             a, b, self.cfg, force_workflow=force_workflow,
             assisted=assisted, hybrid=hybrid, cache=self.plan_cache,
             sketch_cache=self._sketch_cache_for(b), devices=self.devices,
+            analysis_devices=self.analysis_devices,
             executor=executor if executor is not None else self.executor)
         self.stats.requests += 1
         self.stats.plan_hits += int(report.plan_cache_hit)

@@ -1,0 +1,268 @@
+"""Sharded analysis pipeline: bit-identity with the monolithic path,
+edge cases, config plumbing, and the conservative-CR sigma fix.
+
+conftest forces a 4-device host platform, so the analysis stages run as
+real multi-device dispatch (virtual CPU devices — the same code path as a
+multi-chip host).
+"""
+import jax
+import numpy as np
+import pytest
+
+try:  # hypothesis is optional: the suite must collect and pass without it
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fixed-seed fallback, same properties
+    from _hypothesis_fallback import given, settings, st
+
+from conftest import assert_bit_identical
+from repro.core import formats, partition, planner, workflow
+from repro.core.analysis import (AnalysisPipeline, AnalysisResult,
+                                 OceanConfig, analyze)
+from repro.launch.mesh import make_shard_mesh
+from repro.serving import SpGEMMService
+
+N_DEV = len(jax.devices())
+
+GENS = [
+    ("uniform", lambda: formats.random_uniform_csr(41, 220, 220, 10.0)),
+    ("banded", lambda: formats.banded_csr(42, 180, 180, 40)),
+    ("hypersparse", lambda: formats.hypersparse_csr(43, 700, 700)),
+    ("skewed", lambda: formats.skewed_rows_csr(44, 400, 400, 5.0)),
+    ("powerlaw", lambda: formats.powerlaw_csr(45, 256, 256, 8.0)),
+]
+
+
+def assert_analysis_identical(r: AnalysisResult, r0: AnalysisResult):
+    """Every field the workflow selector / binning consume, bit for bit."""
+    assert r.workflow == r0.workflow
+    assert r.total_products == r0.total_products
+    assert r.er == r0.er and r.nproducts_avg == r0.nproducts_avg
+    assert r.m_regs == r0.m_regs
+    assert (r.sampled_cr, r.cr_mean, r.cr_std) == \
+        (r0.sampled_cr, r0.cr_mean, r0.cr_std)
+    assert r.conservative_cr == r0.conservative_cr
+    np.testing.assert_array_equal(np.asarray(r.products_row),
+                                  np.asarray(r0.products_row))
+    np.testing.assert_array_equal(np.asarray(r.out_lo),
+                                  np.asarray(r0.out_lo))
+    np.testing.assert_array_equal(np.asarray(r.out_hi),
+                                  np.asarray(r0.out_hi))
+    if r0.b_sketches is None:
+        assert r.b_sketches is None
+    else:
+        np.testing.assert_array_equal(np.asarray(r.b_sketches),
+                                      np.asarray(r0.b_sketches))
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: sharded analysis == monolithic analysis, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,gen", GENS)
+@pytest.mark.parametrize("n_dev", [1, 2, 4])
+def test_sharded_analysis_equals_monolithic(name, gen, n_dev):
+    a = gen()
+    r0 = analyze(a, a)
+    r = analyze(a, a, devices=n_dev)
+    assert_analysis_identical(r, r0)
+    assert r.n_shards == (n_dev if n_dev > 1 else 1)
+    if n_dev > 1:
+        assert r.shard_seconds is not None and len(r.shard_seconds) == n_dev
+        assert all(s >= 0.0 for s in r.shard_seconds)
+    else:
+        assert r.shard_seconds is None
+
+
+@pytest.mark.parametrize("n_dev", [1, 2, 4])
+def test_sharded_analysis_empty_matrix_edge(n_dev):
+    z = formats.csr_from_dense(np.zeros((24, 24), np.float32))
+    r0 = analyze(z, z)
+    r = analyze(z, z, devices=n_dev)
+    assert_analysis_identical(r, r0)
+    assert r.workflow == "upper_bound" and r.total_products == 0
+
+
+@pytest.mark.parametrize("n_dev", [2, 4])
+def test_sharded_analysis_build_sketches_false_edge(n_dev):
+    # estimation-grade structure, but sketching disabled: the sketch stage
+    # must be skipped identically (workflow falls back to symbolic)
+    a = formats.banded_csr(42, 180, 180, 40)
+    r0 = analyze(a, a, build_sketches=False)
+    r = analyze(a, a, build_sketches=False, devices=n_dev)
+    assert r0.b_sketches is None and r0.sampled_cr is None
+    assert_analysis_identical(r, r0)
+
+
+def test_sharded_analysis_rectangular_and_device_specs():
+    a = formats.random_uniform_csr(7, 128, 512, 12.0)
+    at = formats.csr_from_dense(np.asarray(a.to_dense()).T)
+    r0 = analyze(a, at)
+    assert_analysis_identical(analyze(a, at, devices=N_DEV), r0)
+    assert_analysis_identical(analyze(a, at, devices=make_shard_mesh(2)), r0)
+    assert_analysis_identical(
+        analyze(a, at, devices=jax.devices()[:3]), r0)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+def test_property_sharded_analysis_exact_on_random_pairs(seed, n_dev):
+    rng = np.random.default_rng(seed)
+    m, k = (int(rng.integers(2, 80)) for _ in range(2))
+    am = ((rng.random((m, k)) < 0.2) *
+          rng.integers(-3, 4, (m, k))).astype(np.float32)
+    bm = ((rng.random((k, m)) < 0.2) *
+          rng.integers(-3, 4, (k, m))).astype(np.float32)
+    a, b = formats.csr_from_dense(am), formats.csr_from_dense(bm)
+    assert_analysis_identical(analyze(a, b, devices=n_dev), analyze(a, b))
+
+
+def test_contiguous_split_covers_and_balances():
+    rng = np.random.default_rng(5)
+    costs = rng.integers(1, 100, 500)
+    blocks = partition.contiguous_split(costs, 4)
+    assert blocks[0][0] == 0 and blocks[-1][1] == len(costs)
+    for (a0, a1), (b0, b1) in zip(blocks, blocks[1:]):
+        assert a1 == b0 and a0 <= a1  # contiguous, ordered, disjoint
+    loads = [int(costs[r0:r1].sum()) for r0, r1 in blocks]
+    assert max(loads) <= 2 * (sum(loads) / len(loads))
+    # zero-cost fallback: equal row split, still a cover
+    blocks = partition.contiguous_split(np.zeros(10, np.int64), 3)
+    assert blocks[0][0] == 0 and blocks[-1][1] == 10
+    # more shards than rows: tail blocks empty, never out of range
+    blocks = partition.contiguous_split(np.ones(2, np.int64), 4)
+    assert blocks[0][0] == 0 and blocks[-1][1] == 2
+    assert all(0 <= r0 <= r1 <= 2 for r0, r1 in blocks)
+
+
+# ---------------------------------------------------------------------------
+# Sketch-cache interchange: sharded and monolithic sketches share one key
+# ---------------------------------------------------------------------------
+
+def test_sketch_cache_interchanges_between_sharded_and_monolithic():
+    a = formats.banded_csr(42, 180, 180, 40)
+    cache_s: dict = {}
+    r_s = analyze(a, a, sketch_cache=cache_s, devices=4)
+    assert r_s.workflow == "estimation" and len(cache_s) == 1
+    # monolithic run against the sharded-built cache: reuses the entry
+    r_m = analyze(a, a, sketch_cache=cache_s)
+    assert r_m.b_sketches is cache_s[next(iter(cache_s))]
+    assert_analysis_identical(r_m, r_s)
+    # and the reverse: sharded run reuses a monolithic-built entry
+    cache_m: dict = {}
+    r0 = analyze(a, a, sketch_cache=cache_m)
+    r1 = analyze(a, a, sketch_cache=cache_m, devices=4)
+    assert r1.b_sketches is r0.b_sketches
+    assert_analysis_identical(r1, r0)
+
+
+# ---------------------------------------------------------------------------
+# Satellite bugfix: conservative_cr must honour OceanConfig.cr_sigma
+# ---------------------------------------------------------------------------
+
+def test_conservative_cr_uses_cr_sigma():
+    base = dict(
+        nnz_a=1, nnz_b=1, total_products=1, products_row=np.ones(1),
+        er=1.0, nproducts_avg=1.0, m_regs=32, b_sketches=None,
+        sampled_cr=9.0, cr_mean=10.0, cr_std=2.0,
+        out_lo=np.zeros(1), out_hi=np.zeros(1), workflow="upper_bound")
+    assert AnalysisResult(**base, cr_sigma=1.0).conservative_cr == 8.0
+    assert AnalysisResult(**base, cr_sigma=2.0).conservative_cr == 6.0
+    assert AnalysisResult(**base, cr_sigma=0.5).conservative_cr == 9.0
+    # still clipped to >= 1
+    assert AnalysisResult(**base, cr_sigma=100.0).conservative_cr == 1.0
+    # threaded from the config by analyze()
+    a = formats.banded_csr(42, 180, 180, 40)
+    r1 = analyze(a, a, OceanConfig(cr_sigma=1.0))
+    r2 = analyze(a, a, OceanConfig(cr_sigma=2.0))
+    assert r1.cr_mean is not None and r1.cr_std > 0.0
+    assert r1.conservative_cr == max(1.0, r1.cr_mean - r1.cr_std)
+    assert r2.conservative_cr == max(1.0, r2.cr_mean - 2.0 * r2.cr_std)
+    assert r2.conservative_cr < r1.conservative_cr
+
+
+# ---------------------------------------------------------------------------
+# Threading: planner / workflow / serving
+# ---------------------------------------------------------------------------
+
+def test_build_plan_with_analysis_devices_is_bit_identical():
+    for name, gen in GENS:
+        a = gen()
+        p0 = planner.build_plan(a, a)
+        p1 = planner.build_plan(a, a, analysis_devices=N_DEV)
+        assert p1.analysis_shards == N_DEV and p0.analysis_shards == 1
+        assert p1.workflow == p0.workflow
+        np.testing.assert_array_equal(p1.products, p0.products)
+        assert p1.bins_describe == p0.bins_describe
+        c0, _ = planner.execute_plan(p0, a, a)
+        c1, rep = planner.execute_plan(p1, a, a)
+        assert_bit_identical(c0, c1)
+        assert rep.analysis_shards == N_DEV
+        assert len(rep.analysis_shard_seconds) == N_DEV
+
+
+def test_workflow_analysis_devices_defaults_to_devices():
+    a = formats.random_uniform_csr(99, 300, 300, 9.0)
+    c0, rep0 = workflow.ocean_spgemm(a, a, cache=False)
+    assert rep0.analysis_shards == 1
+    # devices= alone shards the analysis over the same topology
+    c1, rep1 = workflow.ocean_spgemm(a, a, cache=False, devices=2)
+    assert rep1.analysis_shards == 2 and rep1.n_shards == 2
+    # explicit analysis_devices= overrides independently of devices=
+    c2, rep2 = workflow.ocean_spgemm(a, a, cache=False,
+                                     analysis_devices=4)
+    assert rep2.analysis_shards == 4 and rep2.n_shards == 1
+    c3, rep3 = workflow.ocean_spgemm(a, a, cache=False, devices=2,
+                                     analysis_devices=4)
+    assert rep3.analysis_shards == 4 and rep3.n_shards == 2
+    for c in (c1, c2, c3):
+        assert_bit_identical(c0, c)
+
+
+def test_sharded_analysis_plans_interchange_in_cache():
+    """analysis_devices is deliberately absent from the plan-cache key:
+    a plan built with sharded analysis serves monolithic requests and
+    vice versa (the outputs are bit-identical)."""
+    a = formats.random_uniform_csr(99, 300, 300, 9.0)
+    cache = planner.PlanCache()
+    c1, rep1 = workflow.ocean_spgemm(a, a, cache=cache, analysis_devices=4)
+    assert not rep1.plan_cache_hit and rep1.analysis_shards == 4
+    c2, rep2 = workflow.ocean_spgemm(a, a, cache=cache)
+    assert rep2.plan_cache_hit  # same key, no re-analysis
+    assert_bit_identical(c1, c2)
+
+
+def test_workflow_many_with_analysis_devices_bit_exact():
+    b = formats.random_uniform_csr(52, 180, 180, 12.0)
+    a_list = [formats.random_uniform_csr(53 + i, 140, 180, 8.0)
+              for i in range(3)]
+    many = workflow.ocean_spgemm_many(a_list, b, cache=planner.PlanCache(),
+                                      analysis_devices=N_DEV)
+    loop = [workflow.ocean_spgemm(a, b, cache=False) for a in a_list]
+    for (cm, rm), (cl, _) in zip(many, loop):
+        assert rm.analysis_shards == N_DEV
+        assert_bit_identical(cm, cl)
+
+
+def test_service_analysis_devices_threaded_and_exact():
+    a = formats.random_uniform_csr(60, 250, 250, 10.0)
+    svc = SpGEMMService(devices=2, analysis_devices=N_DEV)
+    c1, rep1 = svc.multiply(a, a)
+    assert rep1.analysis_shards == N_DEV and rep1.n_shards == 2
+    c2, rep2 = svc.multiply(a, a)  # cache hit replays build-time facts
+    assert rep2.plan_cache_hit and rep2.analysis_shards == N_DEV
+    assert_bit_identical(c1, c2)
+    ref, _ = workflow.ocean_spgemm(a, a, cache=False)
+    assert_bit_identical(c1, ref)
+    # default: analysis follows the service's execution devices
+    svc2 = SpGEMMService(devices=2)
+    _, rep3 = svc2.multiply(a, a)
+    assert rep3.analysis_shards == 2
+
+
+def test_pipeline_class_direct_use():
+    a = formats.banded_csr(50, 150, 150, 25)
+    pipe = AnalysisPipeline(OceanConfig())
+    r0 = pipe.run(a, a)
+    r1 = pipe.run(a, a, devices=N_DEV)
+    assert_analysis_identical(r1, r0)
+    assert r1.n_shards == N_DEV

@@ -225,10 +225,93 @@ def test_shard_shapes_bucketed_and_inert():
                                                    len(parent.rows))
                 assert be.a_rows.shape[0] == want
                 assert len(be.rows) == be.n_valid  # host metadata unpadded
-                assert be.p_cap == parent.p_cap   # bin-level, not per-shard
+                # per-rung capacity: a pure function of (bin, rung),
+                # never of the particular shard or topology
+                assert be.p_cap == partition.rung_capacity_cap(
+                    parent.cost, want, parent.p_cap)
+                assert be.p_cap <= parent.p_cap
                 # pad rows are inert: no A entries, zero-length B rows
                 lens = np.asarray(be.a_lens)[be.n_valid:]
                 assert (lens == 0).all()
+
+
+def test_dense_rung_p_cap_shrinks_large_bin_shards():
+    """Satellite: XLA-path shards of a large bin size their static product
+    slots by the per-rung ladder instead of inheriting the whole bin's
+    p_cap — and stay bit-identical."""
+    a = formats.banded_csr(7, 1200, 1200, 60)
+    plan = planner.build_plan(a, a)
+    big = max(plan.dense, key=lambda be: len(be.rows))
+    assert len(big.rows) > 4 * partition.SHARD_ROW_FLOOR
+    splan = partition.partition_plan(plan, 4)
+    shard_pcaps = [be.p_cap for sh in splan.shards for be in sh.dense
+                   if be.bin_id == big.bin_id]
+    assert shard_pcaps and all(p <= big.p_cap for p in shard_pcaps)
+    assert any(p < big.p_cap for p in shard_pcaps)
+    c1, _ = planner.execute_plan(plan, a, a)
+    c2, _ = planner.execute_sharded_plan(splan, a, a)
+    assert_bit_identical(c1, c2)
+
+
+def test_esc_shard_shapes_bucketed_and_inert():
+    """Satellite: ESC shard sub-CSRs are shape-bucketed like dense bins —
+    rows up the bucket_shard_rows ladder (inert empty tail rows), nnz and
+    product capacities up per-rung pow2 ladders clamped to the bin's."""
+    h = formats.hypersparse_csr(43, 700, 700)
+    plan = planner.build_plan(h, h)
+    assert plan.esc is not None, "structure must produce an ESC bin"
+    assert plan.esc.n_valid == len(plan.esc.rows)
+    for n_dev in (2, 4):
+        splan = partition.partition_plan(plan, n_dev)
+        for sh in splan.shards:
+            ex = sh.esc
+            if ex is None:
+                continue
+            r_pad = partition.bucket_shard_rows(ex.n_valid,
+                                                len(plan.esc.rows))
+            assert ex.sub_indptr.shape[0] == r_pad + 1
+            assert len(ex.rows) == ex.n_valid  # host metadata unpadded
+            # pad rows are inert: the padded indptr tail repeats, so they
+            # hold zero nnz and enumerate zero products
+            tail = np.asarray(ex.sub_indptr)[ex.n_valid:]
+            assert (tail == ex.sub_indptr[ex.n_valid]).all()
+            assert ex.p_cap == ex.out_cap <= plan.esc.p_cap
+            assert ex.sub_indices.shape == ex.src.shape
+            assert ex.sub_indices.shape[0] >= int(ex.sub_indptr[-1])
+
+
+def test_esc_shards_share_jit_specializations_across_topologies():
+    """ESC shards of one bin hit the same esc_spgemm specialization across
+    devices and topologies (small bins clamp to one shape, like dense)."""
+    fn = esc.esc_spgemm
+    if not hasattr(fn, "_cache_size"):
+        pytest.skip("jit cache-size probe unavailable on this jax")
+    # small ESC bin (<= SHARD_ROW_FLOOR rows): the ladder clamp lands every
+    # topology's shards on one shape, mirroring the dense 60-row probe
+    h = formats.hypersparse_csr(61, 50, 50)
+    plan = planner.build_plan(h, h)
+    assert plan.esc is not None
+    assert len(plan.esc.rows) <= partition.SHARD_ROW_FLOOR
+    splan2 = partition.partition_plan(plan, 2)
+    splan4 = partition.partition_plan(plan, 4)
+    # one bucketed shape per bin, whatever the topology
+    shapes = {(ex.sub_indptr.shape, ex.sub_indices.shape, ex.p_cap)
+              for sp in (splan2, splan4)
+              for sh in sp.shards if (ex := sh.esc) is not None}
+    assert len(shapes) == 1, shapes
+    size0 = fn._cache_size()
+    planner.execute_sharded_plan(splan2, h, h)
+    size2 = fn._cache_size()
+    planner.execute_sharded_plan(splan4, h, h)
+    size4 = fn._cache_size()
+    # compilations bounded per (bin, rung, device), never per shard
+    assert size2 - size0 <= 2
+    assert size4 - size2 <= 2
+    planner.execute_sharded_plan(partition.partition_plan(plan, 4), h, h)
+    assert fn._cache_size() == size4
+    c1, _ = planner.execute_plan(plan, h, h)
+    c2, _ = planner.execute_sharded_plan(splan4, h, h)
+    assert_bit_identical(c1, c2)
 
 
 def test_shards_share_jit_specializations_across_topologies():
