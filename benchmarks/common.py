@@ -54,6 +54,40 @@ def suite(scale: int = 1) -> List[Tuple[str, formats.CSR]]:
     return full
 
 
+# ---------------------------------------------------------------------------
+# Synthetic graph generators (seeded/deterministic; implementations live in
+# repro.graph.generators — re-exported here so benchmark modules and ad-hoc
+# scripts get them from one place alongside the matrix suite).
+# ---------------------------------------------------------------------------
+
+def rmat_csr(key: int, scale: int, edge_factor: int = 8, **kw):
+    """R-MAT adjacency (2**scale vertices, power-law degrees)."""
+    from repro.graph.generators import rmat_csr as _rmat
+    return _rmat(key, scale, edge_factor, **kw)
+
+
+def erdos_renyi_csr(key: int, n: int, avg_degree: float, **kw):
+    """Erdős–Rényi adjacency (uniform degrees)."""
+    from repro.graph.generators import erdos_renyi_csr as _er
+    return _er(key, n, avg_degree, **kw)
+
+
+def graph_suite(scale: int = 1) -> List[Tuple[str, formats.CSR]]:
+    """Named graphs for the chain/analytics benchmarks. SMOKE keeps them
+    tiny so the CI canary (triangle count + 3-iteration MCL on a small
+    R-MAT) finishes in seconds."""
+    if SMOKE:
+        return [("rmat_s6", rmat_csr(101, 6, 4)),
+                ("er_small", erdos_renyi_csr(102, 96, 3.0))]
+    # chain benchmarks iterate A^k: degree and scale are kept moderate so
+    # the k-th power's product count stays within the ESC expansion's
+    # memory envelope on a CPU host
+    s = max(scale, 1)
+    return [("rmat_s8", rmat_csr(101, 8, 6)),
+            ("rmat_s9", rmat_csr(103, 9, 4)),
+            ("er_mid", erdos_renyi_csr(102, 512 * s, 3.0))]
+
+
 def geomean(xs) -> float:
     xs = np.asarray([x for x in xs if x > 0], np.float64)
     return float(np.exp(np.log(xs).mean())) if len(xs) else 0.0

@@ -1,0 +1,149 @@
+"""Graph-analytics benchmarks: chained SpGEMM reuse tiers, triangle
+counting, k-hop frontiers, and Markov clustering on seeded R-MAT /
+Erdős–Rényi graphs.
+
+The chain rows time the three reuse tiers of ``repro.graph.chain``:
+
+* ``chain_cold``  — nothing warm: every iteration plans with full
+  estimation/symbolic prediction;
+* ``chain_feed``  — fresh plan cache but a warm ``SizeFeed``: every fresh
+  build enters the planner with exact feed-forward ``known_sizes``
+  (workflow ``"known"`` — HLL estimation and the symbolic sort skipped);
+* ``chain_plans`` — warm runner: every iteration hits the plan cache
+  outright.
+
+Every row doubles as a correctness canary: chain outputs across all
+tiers are asserted bit-identical, triangle counts are asserted against a
+pure ``spgemm_reference`` oracle, and MCL matrices against a host
+expand/inflate/prune oracle loop, before any timing row is emitted — the
+uploaded ``BENCH_smoke.json`` carries the evidence (``parity=ok``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import workflow
+from repro.graph import algorithms, ops
+from repro.graph.chain import ChainRunner, SizeFeed
+
+from . import common
+from .common import timeit
+
+CHAIN_ITERS = 3
+MCL_ITERS = 3
+
+
+def _assert_same(c1, c2, tag):
+    for x, y in ((c1.indptr, c2.indptr), (c1.indices, c2.indices),
+                 (c1.values, c2.values)):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), tag
+
+
+def _triangle_oracle(adj) -> int:
+    """Pure spgemm_reference + host mask: sum(L .* (L @ L))."""
+    low = algorithms.lower_triangle(adj)
+    ref = workflow.spgemm_reference(low, low)
+    ptr = np.asarray(ref.indptr, np.int64)
+    idx = np.asarray(ref.indices)[: ref.nnz].astype(np.int64)
+    vals = np.asarray(ref.values)[: ref.nnz]
+    rows = np.repeat(np.arange(ref.m, dtype=np.int64), np.diff(ptr))
+    lptr = np.asarray(low.indptr, np.int64)
+    lidx = np.asarray(low.indices)[: low.nnz].astype(np.int64)
+    lrows = np.repeat(np.arange(low.m, dtype=np.int64), np.diff(lptr))
+    mask_keys = np.sort(lrows * low.n + lidx)
+    keys = rows * ref.n + idx
+    pos = np.searchsorted(mask_keys, keys)
+    member = np.zeros(len(keys), bool)
+    in_rng = pos < len(mask_keys)
+    member[in_rng] = mask_keys[pos[in_rng]] == keys[in_rng]
+    return int(round(float(vals[member].sum())))
+
+
+def _mcl_oracle(adj, iterations, inflation=2.0, threshold=1e-4):
+    """Host expand/inflate/prune loop on spgemm_reference."""
+    m = ops.normalize_columns(algorithms._with_self_loops(adj))
+    for _ in range(iterations):
+        m = ops.inflate(workflow.spgemm_reference(m, m), inflation,
+                        threshold)
+    return m
+
+
+def run(rows: list, scale: int = 1):
+    for name, adj in common.graph_suite(scale):
+        # ---- triangle counting (masked multiply fused into the merge) --
+        tri, _ = algorithms.triangle_count(adj, cache=False,
+                                           executor=common.EXECUTOR)
+        assert tri == _triangle_oracle(adj), name
+        t_tri = timeit(lambda: algorithms.triangle_count(
+            adj, cache=False, executor=common.EXECUTOR))
+        rows.append((f"graph/{name}/triangle_count", t_tri * 1e6,
+                     f"triangles={tri} parity=ok"))
+
+        # ---- chain reuse tiers: cold -> feed-forward -> plan hits ------
+        feed = SizeFeed()
+        cold = ChainRunner(adj, size_feed=feed, executor=common.EXECUTOR)
+        res_cold = cold.run(adj, CHAIN_ITERS)    # estimates + fills feed
+        warm_feed = ChainRunner(adj, size_feed=feed,
+                                executor=common.EXECUTOR)
+        res_feed = warm_feed.run(adj, CHAIN_ITERS)   # known_sizes builds
+        res_plans = warm_feed.run(adj, CHAIN_ITERS)  # plan-cache hits
+        _assert_same(res_cold.final, res_feed.final, name)
+        _assert_same(res_cold.final, res_plans.final, name)
+        # every feed-tier build was feed-forward sized (a converging
+        # pattern may turn later iterations into plan hits instead)
+        assert res_feed.stats.feed_forward_skips >= 1, \
+            (name, res_feed.stats)
+        assert res_feed.stats.estimated_builds == 0, (name, res_feed.stats)
+        assert res_plans.stats.plan_hits == CHAIN_ITERS, \
+            (name, res_plans.stats)
+
+        t_cold = timeit(lambda: ChainRunner(
+            adj, executor=common.EXECUTOR).run(adj, CHAIN_ITERS))
+        t_feed = timeit(lambda: ChainRunner(
+            adj, size_feed=feed,
+            executor=common.EXECUTOR).run(adj, CHAIN_ITERS))
+        t_plans = timeit(lambda: warm_feed.run(adj, CHAIN_ITERS))
+        rows.append((f"graph/{name}/chain_cold", t_cold * 1e6,
+                     f"iters={CHAIN_ITERS} "
+                     f"plan_hits={res_cold.stats.plan_hits} "
+                     f"ff_skips={res_cold.stats.feed_forward_skips} "
+                     f"parity=ok"))
+        rows.append((f"graph/{name}/chain_feed", t_feed * 1e6,
+                     f"iters={CHAIN_ITERS} "
+                     f"plan_hits={res_feed.stats.plan_hits} "
+                     f"ff_skips={res_feed.stats.feed_forward_skips} "
+                     f"speedup=x{t_cold / max(t_feed, 1e-12):.2f} "
+                     f"parity=ok"))
+        rows.append((f"graph/{name}/chain_plans", t_plans * 1e6,
+                     f"iters={CHAIN_ITERS} "
+                     f"plan_hits={res_plans.stats.plan_hits} "
+                     f"ff_skips={res_plans.stats.feed_forward_skips} "
+                     f"speedup=x{t_cold / max(t_plans, 1e-12):.2f} "
+                     f"parity=ok"))
+
+        # ---- k-hop frontier (boolean semiring chain) --------------------
+        seeds = [0, adj.n // 2]
+        fronts, _ = algorithms.k_hop_frontier(adj, seeds, CHAIN_ITERS)
+        t_hop = timeit(lambda: algorithms.k_hop_frontier(
+            adj, seeds, CHAIN_ITERS, executor=common.EXECUTOR))
+        rows.append((f"graph/{name}/k_hop", t_hop * 1e6,
+                     f"hops={CHAIN_ITERS} "
+                     f"frontier={len(fronts[-1]) if fronts else 0}"))
+
+        # ---- MCL: expand with fused inflate+prune ----------------------
+        mcl = algorithms.markov_cluster(adj, iterations=MCL_ITERS,
+                                        executor=common.EXECUTOR)
+        oracle = _mcl_oracle(adj, mcl.result.stats.iterations)
+        assert np.array_equal(np.asarray(mcl.matrix.indptr),
+                              np.asarray(oracle.indptr)), name
+        assert np.allclose(np.asarray(mcl.matrix.values)[: mcl.matrix.nnz],
+                           np.asarray(oracle.values)[: oracle.nnz],
+                           atol=1e-5), name
+        t_mcl = timeit(lambda: algorithms.markov_cluster(
+            adj, iterations=MCL_ITERS, executor=common.EXECUTOR))
+        rows.append((f"graph/{name}/mcl", t_mcl * 1e6,
+                     f"iters={mcl.result.stats.iterations} "
+                     f"clusters={len(np.unique(mcl.labels))} "
+                     f"plan_hits={mcl.result.stats.plan_hits} "
+                     f"ff_skips={mcl.result.stats.feed_forward_skips} "
+                     f"parity=ok"))

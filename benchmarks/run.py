@@ -44,7 +44,7 @@ def main() -> None:
 
     # deferred so --devices takes effect before jax initializes
     from . import (ablation, common, cr_sampling, estimation_precision,
-                   estimator_vs_cohen, moe_dispatch, overall,
+                   estimator_vs_cohen, graph, moe_dispatch, overall,
                    selection_validation, sharding)
 
     modules = {
@@ -56,6 +56,7 @@ def main() -> None:
         "selection_validation": selection_validation,  # §5.4
         "moe_dispatch": moe_dispatch,              # beyond-paper
         "sharding": sharding,                      # device-partitioned exec
+        "graph": graph,                            # chained SpGEMM analytics
     }
     all_modules = modules
     common.EXECUTOR = args.executor
@@ -63,7 +64,7 @@ def main() -> None:
     if args.smoke:
         common.SMOKE = True
         modules = {k: modules[k] for k in ("overall", "moe_dispatch",
-                                           "sharding")}
+                                           "sharding", "graph")}
     if args.only:
         modules = {args.only: all_modules[args.only]}
 
@@ -88,11 +89,19 @@ def main() -> None:
     overlap_fracs = {}
     analysis_rows = {}
     analysis_shards_used = None
+    chain_iterations = chain_plan_hits = chain_ff_skips = 0
+    chain_rows = {}
+    chain_parity_rows = 0
     for name, us, derived in rows:
         if name == "overall/plan_setup/total":
             setup_us = us
         if name.endswith("/analysis_sharded"):
             analysis_rows[name] = us
+        is_graph = name.startswith("graph/")
+        if is_graph:
+            chain_rows[name] = us
+            if "parity=ok" in derived:
+                chain_parity_rows += 1
         for part in derived.split():
             if name == "overall/plan_setup/total" and \
                     part.startswith("cached_us="):
@@ -102,6 +111,12 @@ def main() -> None:
             if name.endswith("/analysis_sharded") and \
                     part.startswith("shards="):
                 analysis_shards_used = int(part.split("=", 1)[1])
+            if is_graph and part.startswith("iters="):
+                chain_iterations += int(part.split("=", 1)[1])
+            if is_graph and part.startswith("plan_hits="):
+                chain_plan_hits += int(part.split("=", 1)[1])
+            if is_graph and part.startswith("ff_skips="):
+                chain_ff_skips += int(part.split("=", 1)[1])
     wall_s = sum(module_seconds.values())
     summary = {"plan_setup_fresh_us": setup_us,
                "plan_setup_cached_us": cached_us,
@@ -126,7 +141,18 @@ def main() -> None:
                # before emitting these rows, so their presence doubles as
                # the sharded-analysis correctness canary)
                "analysis_shards": analysis_shards_used,
-               "analysis_sharded_us_by_row": analysis_rows}
+               "analysis_sharded_us_by_row": analysis_rows,
+               # graph-chain canary: benchmarks/graph.py asserts chain
+               # outputs bit-identical across reuse tiers, triangle counts
+               # against the spgemm_reference oracle, and MCL against a
+               # host loop before emitting rows — the chain_* fields (and
+               # their parity=ok rows) are CI's evidence the chained
+               # plan-reuse + feed-forward sizing paths work end to end
+               "chain_iterations": chain_iterations,
+               "chain_plan_hits": chain_plan_hits,
+               "chain_feed_forward_skips": chain_ff_skips,
+               "chain_parity_rows": chain_parity_rows,
+               "chain_us_by_row": chain_rows}
     if setup_us is not None:
         print(f"# BENCH summary: setup_us={setup_us:.1f} "
               f"cached_setup_us={cached_us:.1f} wall_s={wall_s:.1f}",

@@ -140,8 +140,13 @@ class AnalysisResult:
     cr_std: Optional[float]          # per-row CR sample std
     out_lo: jax.Array                # (m,) per-row output col-range bounds
     out_hi: jax.Array
-    workflow: str                    # 'upper_bound' | 'estimation' | 'symbolic'
+    workflow: str                    # 'upper_bound'|'estimation'|'symbolic'|'known'
     sample_rows: Optional[np.ndarray] = None
+    # exact per-row output nnz fed forward by the caller (graph chains: the
+    # previous numeric pass measured them). When set, workflow == 'known',
+    # sketching/sampling were skipped, and the planner enters binning with
+    # these as symbolic-grade row statistics.
+    known_sizes: Optional[np.ndarray] = None
     cr_sigma: float = 1.0            # OceanConfig.cr_sigma at analysis time
     n_shards: int = 1                # device shards the analysis ran across
     # per-shard host-side seconds: dispatch enqueue + block commit + the
@@ -273,18 +278,31 @@ class AnalysisPipeline:
 
     def run(self, a: CSR, b: CSR, *, build_sketches: bool = True,
             sketch_cache: Optional[Dict] = None,
-            devices: DeviceSpec = None) -> AnalysisResult:
+            devices: DeviceSpec = None,
+            known_sizes: Optional[np.ndarray] = None) -> AnalysisResult:
+        if known_sizes is not None:
+            known_sizes = np.asarray(known_sizes, np.int64)
+            if known_sizes.shape != (a.m,):
+                raise ValueError(
+                    f"known_sizes shape {known_sizes.shape} != ({a.m},)")
+            # exact sizes make every estimation artifact dead weight: skip
+            # sketch construction (and, below, sampling + selection)
+            build_sketches = False
         devs = resolve_devices(devices) if devices is not None else None
         if devs is not None and (len(devs) <= 1 or a.m == 0 or b.m == 0):
             devs = None
         if devs is None:
-            return self._run_monolithic(a, b, build_sketches, sketch_cache)
-        return self._run_sharded(a, b, devs, build_sketches, sketch_cache)
+            return self._run_monolithic(a, b, build_sketches, sketch_cache,
+                                        known_sizes)
+        return self._run_sharded(a, b, devs, build_sketches, sketch_cache,
+                                 known_sizes)
 
     # -- single-device path (the legacy monolithic analyze) ----------------
 
     def _run_monolithic(self, a: CSR, b: CSR, build_sketches: bool,
-                        sketch_cache: Optional[Dict]) -> AnalysisResult:
+                        sketch_cache: Optional[Dict],
+                        known_sizes: Optional[np.ndarray] = None
+                        ) -> AnalysisResult:
         cfg = self.cfg
         prod_row = products_per_row(a.indptr, a.indices, b.indptr,
                                     num_rows_a=a.m)
@@ -296,13 +314,15 @@ class AnalysisPipeline:
             build_sketches=build_sketches,
             sketch_builder=lambda m: sketches_for(b, m, cfg.seed,
                                                   sketch_cache),
-            n_shards=1, shard_seconds=None)
+            n_shards=1, shard_seconds=None, known_sizes=known_sizes)
 
     # -- device-partitioned path -------------------------------------------
 
     def _run_sharded(self, a: CSR, b: CSR, devs: Tuple,
                      build_sketches: bool,
-                     sketch_cache: Optional[Dict]) -> AnalysisResult:
+                     sketch_cache: Optional[Dict],
+                     known_sizes: Optional[np.ndarray] = None
+                     ) -> AnalysisResult:
         # partition is imported lazily: it depends on the plan containers
         # (planner), which import this module.
         from .partition import contiguous_split
@@ -447,20 +467,36 @@ class AnalysisPipeline:
             a, b, prod_row=jnp.asarray(prod_row),
             out_lo=jnp.asarray(out_lo), out_hi=jnp.asarray(out_hi),
             build_sketches=build_sketches, sketch_builder=sketch_builder,
-            n_shards=n_dev, shard_seconds=shard_s)
+            n_shards=n_dev, shard_seconds=shard_s, known_sizes=known_sizes)
 
     # -- shared host tail: workflow gate + sampled CR ----------------------
 
     def _finish(self, a: CSR, b: CSR, *, prod_row, out_lo, out_hi,
                 build_sketches: bool, sketch_builder,
                 n_shards: int,
-                shard_seconds: Optional[List[float]]) -> AnalysisResult:
+                shard_seconds: Optional[List[float]],
+                known_sizes: Optional[np.ndarray] = None) -> AnalysisResult:
         cfg = self.cfg
         total_products = int(np.asarray(prod_row, np.int64).sum())
         nnz_a, nnz_b = a.nnz, b.nnz
         er = total_products / max(nnz_a, 1)
         nproducts_avg = total_products / max(a.m, 1)
         m_regs = cfg.m_regs(er)
+
+        if known_sizes is not None:
+            # Feed-forward path (graph chains): the caller measured the
+            # exact output row nnz of this very pattern pair in a prior
+            # numeric pass. Exact sizes trump Table-1 selection — no
+            # sketches, no sampling, no symbolic sort; the planner bins
+            # these like symbolic results (no expansion slack).
+            return AnalysisResult(
+                nnz_a=nnz_a, nnz_b=nnz_b, total_products=total_products,
+                products_row=prod_row, er=er, nproducts_avg=nproducts_avg,
+                m_regs=m_regs, b_sketches=None, sampled_cr=None,
+                cr_mean=None, cr_std=None, out_lo=out_lo, out_hi=out_hi,
+                workflow="known", cr_sigma=cfg.cr_sigma,
+                n_shards=n_shards, shard_seconds=shard_seconds,
+                known_sizes=known_sizes)
 
         if nproducts_avg < cfg.upper_bound_avg_products:
             return AnalysisResult(
@@ -510,7 +546,8 @@ class AnalysisPipeline:
 def analyze(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(),
             build_sketches: bool = True,
             sketch_cache: Optional[Dict] = None,
-            devices: DeviceSpec = None) -> AnalysisResult:
+            devices: DeviceSpec = None,
+            known_sizes: Optional[np.ndarray] = None) -> AnalysisResult:
     """The Ocean analysis step. Selects the workflow per Table 1:
 
         upper_bound  if nproducts_avg < 64
@@ -520,10 +557,75 @@ def analyze(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(),
     ``devices`` partitions the device stages across a device set (int,
     device sequence, or 1-D mesh — same specs as ``ocean_spgemm``); the
     result is bit-identical to the single-device run for every field.
+    ``known_sizes`` (per-row exact output nnz, fed forward from a prior
+    numeric pass over the same pattern pair — see ``repro.graph.chain``)
+    short-circuits selection to the ``"known"`` workflow: sketching,
+    sampling, and CR estimation are skipped entirely.
     """
     return AnalysisPipeline(cfg).run(a, b, build_sketches=build_sketches,
                                      sketch_cache=sketch_cache,
-                                     devices=devices)
+                                     devices=devices,
+                                     known_sizes=known_sizes)
+
+
+def sharded_merge_estimate(a: CSR, sketches_with_sentinel,
+                           *, clip_max: Optional[int] = None,
+                           devices: DeviceSpec = None) -> np.ndarray:
+    """Device-partitioned ``kernels.ops.merge_estimate_op`` (prediction
+    stage): per-row HLL output-size estimates for C = A @ B.
+
+    A's rows split into contiguous nnz-balanced blocks
+    (``partition.contiguous_split`` — the merge is O(nnz_A) and
+    row-partitionable); each device merges the B sketches over its block's
+    rows and the host concatenates the disjoint per-row estimates. Each
+    row's merged registers depend only on that row's indices (padding maps
+    to the all-zero sentinel sketch), so the sharded result is
+    bit-identical to the monolithic one at any shard count. Block shapes
+    ride the same pow2 ladders as the sharded analysis stages, bounding
+    jit specializations across splits and topologies.
+    """
+    from repro.kernels import ops as kops
+    devs = resolve_devices(devices) if devices is not None else None
+    if devs is not None and (len(devs) <= 1 or a.m == 0):
+        devs = None
+    if devs is None:
+        _, est = kops.merge_estimate_op(a, sketches_with_sentinel,
+                                        clip_max=clip_max)
+        return np.asarray(est)
+    a_ptr, a_idx = np.asarray(a.indptr), np.asarray(a.indices)
+    blocks = contiguous_split_rows(a_ptr, len(devs))
+    sk_host = np.asarray(sketches_with_sentinel)
+    launches: List[Launch] = []
+    order = 0
+    for i, (r0, r1) in enumerate(blocks):
+        if r1 <= r0:
+            continue
+        sp, si, r_pad = _block_arrays(a_ptr, a_idx, r0, r1,
+                                      num_rows=a.m, nnz_total=a.nnz)
+        dev = devs[i]
+        with device_context(dev):
+            sub = CSR(jax.device_put(sp, dev), jax.device_put(si, dev),
+                      jnp.zeros((si.shape[0],), jnp.float32),
+                      (r_pad, a.n), int(sp[-1]))
+            sk_d = jax.device_put(sk_host, dev)
+            _, est = kops.merge_estimate_op(sub, sk_d, clip_max=clip_max)
+        launches.append(Launch((r0, r1), order, (est,)))
+        order += 1
+    start_async_host_copies(launches)
+    out = np.zeros(a.m, np.float32)
+    for it in collect_in_completion_order(launches):
+        r0, r1 = it.tag
+        out[r0:r1] = np.asarray(it.arrays[0])[: r1 - r0]
+    return out
+
+
+def contiguous_split_rows(indptr: np.ndarray,
+                          n_shards: int) -> List[Tuple[int, int]]:
+    """Contiguous nnz-balanced row blocks of a CSR's rows (the standard
+    weight for O(nnz) row-partitionable stages)."""
+    from .partition import contiguous_split
+    nnz_row = (indptr[1:] - indptr[:-1]).astype(np.int64)
+    return contiguous_split(nnz_row, n_shards)
 
 
 def _sample_sub_csr(a: CSR, rows: np.ndarray) -> CSR:

@@ -103,7 +103,11 @@ def plan_bins(pred_nnz: np.ndarray, products: np.ndarray,
     range_*:    per-row output column-range bounds from the analysis step
     a_row_nnz:  nnz of each A row (sizes the ELL blocks)
     expansion:  hash-expansion analogue applied to estimates (1.5x / 2.0x)
-    workflow:   'upper_bound' | 'estimation' | 'symbolic'
+    workflow:   'upper_bound' | 'estimation' | 'symbolic' | 'known'
+                ('known' = exact sizes fed forward from a prior numeric
+                pass — binned like symbolic: no expansion slack; a stale
+                feed is absorbed by the overflow fallback like any other
+                undersized bin)
     assisted_cr: §4.1 — divide upper-bound capacities by a conservative CR.
     """
     m = len(pred_nnz)
@@ -117,7 +121,7 @@ def plan_bins(pred_nnz: np.ndarray, products: np.ndarray,
         if assisted_cr is not None and assisted_cr > 1.0:
             # assisted sizing, still clamped to a hard upper bound's safety
             alloc = np.maximum(np.ceil(pred / assisted_cr), 1.0)
-    else:  # symbolic: exact sizes, no slack needed
+    else:  # symbolic / known: exact sizes, no slack needed
         alloc = pred.copy()
     # capacity can never usefully exceed the range width or the product count
     width = np.maximum(range_hi - range_lo + 1, 0)

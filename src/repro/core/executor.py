@@ -40,7 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -66,6 +66,109 @@ class _Slab:
     def __init__(self, rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
                  nnz: np.ndarray):
         self.rows, self.cols, self.vals, self.nnz = rows, cols, vals, nnz
+
+
+# ---------------------------------------------------------------------------
+# Fused merge post-processing (graph workloads: mask / inflate / prune)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MergePostOps:
+    """Post-processing fused into the executor's merge/compaction.
+
+    Applied to each result slab as it lands on the host — in the pipelined
+    executor this overlaps still-outstanding device work — replacing
+    separate host passes over an assembled CSR (``repro.graph.ops`` builds
+    these for masked multiply, boolean semirings, and MCL inflation):
+
+    * ``mask_indptr``/``mask_indices``: keep only entries whose (row, col)
+      is present in the mask pattern — ``mask .* (A @ B)`` without ever
+      materializing the unmasked product on the host.
+    * ``transform``: elementwise value map (Hadamard power for MCL
+      inflation, ``sign`` for boolean semirings). Sound per slab because
+      each (row, col) entry is fully accumulated within exactly one slab.
+    * ``col_normalize``: divide every entry by its column's total of
+      post-transform values. Column sums need the whole slab set, so each
+      slab contributes a partial as it lands and the partials fold in
+      dispatch order at compaction time — completion order can never
+      change a byte of the output.
+    * ``threshold``: drop entries with ``|value| < threshold`` (applied
+      after normalization when ``col_normalize`` is set, else per slab).
+
+    Stage order: mask -> transform -> [colsum partial] -> prune/normalize.
+    Overflow scanning always runs on the *unfiltered* per-row counts, so
+    fused post-ops never change which rows take the exact-ESC fallback.
+    """
+    n_cols: int
+    mask_indptr: Optional[np.ndarray] = None
+    mask_indices: Optional[np.ndarray] = None
+    transform: Optional[Callable[[np.ndarray], np.ndarray]] = None
+    threshold: float = 0.0
+    col_normalize: bool = False
+
+    def __post_init__(self):
+        self._mask_keys = None
+        if self.mask_indptr is not None:
+            ptr = np.asarray(self.mask_indptr, np.int64)
+            nnz = int(ptr[-1])
+            idx = np.asarray(self.mask_indices, np.int64)[:nnz]
+            rows = np.repeat(np.arange(len(ptr) - 1, dtype=np.int64),
+                             np.diff(ptr))
+            # rows ascend and columns ascend within a CSR row, so the keys
+            # arrive sorted; sort defensively for caller-built masks
+            self._mask_keys = np.sort(rows * np.int64(self.n_cols) + idx)
+
+def _compact_rows(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                  keep: np.ndarray) -> _Slab:
+    """Shift kept entries left into a fresh fixed-width slab (order — and
+    hence intra-row column sorting — preserved)."""
+    new_nnz = keep.sum(axis=1).astype(np.int64)
+    w2 = max(int(new_nnz.max()) if len(new_nnz) else 0, 1)
+    out_cols = np.full((keep.shape[0], w2), PAD_COL, np.int32)
+    out_vals = np.zeros((keep.shape[0], w2), vals.dtype)
+    ri, ci = np.nonzero(keep)
+    dest = (np.cumsum(keep, axis=1) - 1)[ri, ci]
+    out_cols[ri, dest] = cols[ri, ci]
+    out_vals[ri, dest] = vals[ri, ci]
+    return _Slab(rows, out_cols, out_vals, new_nnz)
+
+
+def _filter_slab(slab: _Slab, post: MergePostOps
+                 ) -> Tuple[_Slab, Optional[np.ndarray]]:
+    """Apply the per-slab half of the post-ops (mask, transform, eager
+    prune) and return the filtered slab plus its column-sum partial."""
+    r, w = slab.cols.shape
+    if r == 0:
+        return slab, (np.zeros(post.n_cols, np.float64)
+                      if post.col_normalize else None)
+    slot = np.arange(w, dtype=np.int64)[None, :]
+    keep = (slot < slab.nnz[:, None]) & (slab.cols != PAD_COL)
+    vals = slab.vals
+    if post._mask_keys is not None:
+        keys = (slab.rows[:, None].astype(np.int64) * np.int64(post.n_cols)
+                + slab.cols.astype(np.int64))
+        pos = np.searchsorted(post._mask_keys, keys)
+        member = np.zeros(keys.shape, bool)
+        in_rng = pos < len(post._mask_keys)
+        member[in_rng] = post._mask_keys[pos[in_rng]] == keys[in_rng]
+        keep &= member
+    if post.transform is not None:
+        # zero out dropped slots first so transforms need not map 0 -> 0
+        vals = np.where(keep, post.transform(np.where(keep, vals, 0)), 0)
+        vals = vals.astype(slab.vals.dtype, copy=False)
+    eager_prune = post.threshold > 0.0 and not post.col_normalize
+    if eager_prune:
+        keep &= np.abs(vals) >= post.threshold
+    colsum = None
+    if post.col_normalize:
+        colsum = np.zeros(post.n_cols, np.float64)
+        np.add.at(colsum, slab.cols[keep].astype(np.int64),
+                  vals[keep].astype(np.float64))
+    if post._mask_keys is None and not eager_prune:
+        # values-only post (bool/inflate transforms): no entry can drop
+        # here, so skip the row re-compaction in the merge hot path
+        return _Slab(slab.rows, slab.cols, vals, slab.nnz), colsum
+    return _compact_rows(slab.rows, slab.cols, vals, keep), colsum
 
 
 def _esc_to_slab(res, rows: np.ndarray, num_rows: int,
@@ -223,26 +326,52 @@ def _materialize(it: Launch) -> _Slab:
     return slab
 
 
-class _MergeState:
-    """Incremental host merge: overflow scanning + the counting half of
-    compaction, fed one slab at a time."""
+# the overflow-fallback slab's position in the deterministic merge order:
+# always after every dispatched launch
+_FALLBACK_ORDER = 1 << 31
 
-    def __init__(self):
-        self.kept: List[_Slab] = []
+
+class _MergeState:
+    """Incremental host merge: overflow scanning, fused post-ops, and the
+    counting half of compaction, fed one slab at a time."""
+
+    def __init__(self, m_rows: int, post: Optional[MergePostOps] = None):
+        self.kept: List[Tuple[int, _Slab]] = []
         self.overflow: Dict[int, np.ndarray] = {}
+        self.post = post
+        self.colsum_parts: List[Tuple[int, np.ndarray]] = []
+        # exact per-row nnz of the *raw* (pre-mask/pre-prune) product —
+        # the feed-forward sizes graph chains record (see OceanReport)
+        self.raw_counts = (np.zeros(m_rows, np.int64)
+                           if post is not None else None)
+
+    def _admit(self, order: int, slab: _Slab) -> None:
+        if self.post is not None:
+            slab, colsum = _filter_slab(slab, self.post)
+            if colsum is not None:
+                self.colsum_parts.append((order, colsum))
+        self.kept.append((order, slab))
 
     def add(self, it: Launch, slab: _Slab) -> None:
-        if it.tag[0] != "dense":
-            self.kept.append(slab)   # ESC capacities are upper bounds
-            return
-        over = slab.nnz > slab.cols.shape[1]
-        if over.any():
-            self.overflow[it.order] = slab.rows[over]
-            keep = ~over
-            self.kept.append(_Slab(slab.rows[keep], slab.cols[keep],
-                                   slab.vals[keep], slab.nnz[keep]))
-        else:
-            self.kept.append(slab)
+        if self.raw_counts is not None:
+            # dense-bin nnz counts are exact even past the slab capacity
+            # (presence comes from the full accumulator window), so raw
+            # sizes are right here; overflowed rows get re-written with
+            # the identical values when the fallback slab lands
+            self.raw_counts[slab.rows] = slab.nnz
+        if it.tag[0] == "dense":   # ESC capacities are upper bounds
+            over = slab.nnz > slab.cols.shape[1]
+            if over.any():
+                self.overflow[it.order] = slab.rows[over]
+                keep = ~over
+                slab = _Slab(slab.rows[keep], slab.cols[keep],
+                             slab.vals[keep], slab.nnz[keep])
+        self._admit(it.order, slab)
+
+    def add_fallback(self, slab: _Slab) -> None:
+        if self.raw_counts is not None:
+            self.raw_counts[slab.rows] = slab.nnz
+        self._admit(_FALLBACK_ORDER, slab)
 
     def fallback_rows(self) -> Optional[np.ndarray]:
         """Overflowed rows in dispatch order — deterministic regardless of
@@ -251,6 +380,38 @@ class _MergeState:
             return None
         return np.concatenate(
             [self.overflow[k] for k in sorted(self.overflow)])
+
+    def finalize(self) -> List[_Slab]:
+        """Deferred half of the post-ops: fold column-sum partials in
+        dispatch order and apply normalization (+ post-normalization
+        pruning). A no-op without ``col_normalize``."""
+        kept = [s for _, s in sorted(self.kept, key=lambda t: t[0])]
+        post = self.post
+        if post is None or not post.col_normalize:
+            return kept
+        colsum = np.zeros(post.n_cols, np.float64)
+        for _, part in sorted(self.colsum_parts, key=lambda t: t[0]):
+            colsum += part
+        out: List[_Slab] = []
+        for s in kept:
+            if not len(s.rows):
+                out.append(s)
+                continue
+            slot = np.arange(s.cols.shape[1], dtype=np.int64)[None, :]
+            valid = slot < s.nnz[:, None]
+            denom = colsum[np.clip(s.cols, 0, post.n_cols - 1)
+                           .astype(np.int64)]
+            # a zero column sum implies every value in the column is zero
+            vals = s.vals.astype(np.float64) / np.where(denom == 0.0, 1.0,
+                                                        denom)
+            vals = np.where(valid, vals, 0.0).astype(s.vals.dtype)
+            if post.threshold > 0.0:
+                out.append(_compact_rows(
+                    s.rows, s.cols, vals,
+                    valid & (np.abs(vals) >= post.threshold)))
+            else:
+                out.append(_Slab(s.rows, s.cols, vals, s.nnz))
+        return out
 
 
 def _run_overflow_fallback(state: _MergeState, products: np.ndarray,
@@ -270,7 +431,7 @@ def _run_overflow_fallback(state: _MergeState, products: np.ndarray,
         b.values, p_cap=p_cap, out_cap=p_cap, num_rows_a=sub.m,
         n_cols_b=b.n)
     slab, _ = _esc_to_slab(res, rows, sub.m, p_cap)
-    state.kept.append(slab)
+    state.add_fallback(slab)
     return len(rows)
 
 
@@ -280,11 +441,11 @@ def _run_overflow_fallback(state: _MergeState, products: np.ndarray,
 
 def _collect_serial(items: List[Launch], plan: ExecutionPlan, a: CSR,
                     b: CSR, a_values: np.ndarray, stage: Dict[str, float],
-                    dispatch_s: float):
+                    dispatch_s: float, post: Optional[MergePostOps]):
     """Reference semantics: one global barrier, then merge. Keeps the
     legacy stage keys (numeric/overflow/postprocess)."""
     t0 = time.perf_counter()
-    state = _MergeState()
+    state = _MergeState(a.m, post)
     slabs = [(it, _materialize(it)) for it in items]
     stage["numeric"] = dispatch_s + (time.perf_counter() - t0)
     t0 = time.perf_counter()
@@ -293,18 +454,19 @@ def _collect_serial(items: List[Launch], plan: ExecutionPlan, a: CSR,
     n_overflow = _run_overflow_fallback(state, plan.products, a, b)
     stage["overflow"] = time.perf_counter() - t0
     t0 = time.perf_counter()
-    c, total = _compact_slabs(state.kept, (a.m, b.n), a_values.dtype)
+    c, total = _compact_slabs(state.finalize(), (a.m, b.n), a_values.dtype)
     stage["postprocess"] = time.perf_counter() - t0
-    return c, total, n_overflow, 0.0, 0.0
+    return c, total, n_overflow, 0.0, 0.0, state.raw_counts
 
 
 def _collect_pipelined(items: List[Launch], plan: ExecutionPlan, a: CSR,
                        b: CSR, a_values: np.ndarray,
-                       stage: Dict[str, float], dispatch_s: float):
+                       stage: Dict[str, float], dispatch_s: float,
+                       post: Optional[MergePostOps]):
     """Overlapped collect/merge: slabs are pulled in completion order and
-    each one's overflow scan + count accumulation runs while later slabs
-    are still being computed or copied back."""
-    state = _MergeState()
+    each one's overflow scan + fused post-ops + count accumulation runs
+    while later slabs are still being computed or copied back."""
+    state = _MergeState(a.m, post)
     collect_s = merge_s = overlap_s = 0.0
     n_left = len(items)
     for it in collect_in_completion_order(items):
@@ -324,13 +486,13 @@ def _collect_pipelined(items: List[Launch], plan: ExecutionPlan, a: CSR,
             overlap_s += dt
     t0 = time.perf_counter()
     n_overflow = _run_overflow_fallback(state, plan.products, a, b)
-    c, total = _compact_slabs(state.kept, (a.m, b.n), a_values.dtype)
+    c, total = _compact_slabs(state.finalize(), (a.m, b.n), a_values.dtype)
     merge_s += time.perf_counter() - t0
     stage["dispatch"] = dispatch_s
     stage["collect"] = collect_s
     stage["merge"] = merge_s
     frac = overlap_s / merge_s if merge_s > 0.0 else 0.0
-    return c, total, n_overflow, overlap_s, frac
+    return c, total, n_overflow, overlap_s, frac, state.raw_counts
 
 
 # ---------------------------------------------------------------------------
@@ -340,6 +502,7 @@ def _collect_pipelined(items: List[Launch], plan: ExecutionPlan, a: CSR,
 def _execute(plan: ExecutionPlan, shards: List[_ShardWork], a: CSR, b: CSR,
              *, stage: Optional[Dict[str, float]], cache_hit: bool,
              mode: str, n_shards: int, shard_imbalance: float,
+             post: Optional[MergePostOps] = None,
              ) -> Tuple[CSR, OceanReport]:
     if mode not in EXECUTORS:
         raise ValueError(f"unknown executor {mode!r}; expected one of "
@@ -348,6 +511,9 @@ def _execute(plan: ExecutionPlan, shards: List[_ShardWork], a: CSR, b: CSR,
         raise ValueError(
             f"plan built for {plan.shape_a} @ {plan.shape_b}, "
             f"got {a.shape} @ {b.shape}")
+    if post is not None and post.n_cols != b.n:
+        raise ValueError(f"post-ops built for {post.n_cols} columns, "
+                         f"product has {b.n}")
     stage = dict(stage) if stage else {"analysis": 0.0, "prediction": 0.0,
                                        "binning": 0.0}
     a_values = np.asarray(a.values)
@@ -357,8 +523,8 @@ def _execute(plan: ExecutionPlan, shards: List[_ShardWork], a: CSR, b: CSR,
     dispatch_s = time.perf_counter() - t0
 
     collect = _collect_pipelined if mode == PIPELINED else _collect_serial
-    c, total, n_overflow, overlap_s, frac = collect(
-        items, plan, a, b, a_values, stage, dispatch_s)
+    c, total, n_overflow, overlap_s, frac, raw_counts = collect(
+        items, plan, a, b, a_values, stage, dispatch_s, post)
 
     report = OceanReport(
         workflow=plan.workflow, er=plan.er, sampled_cr=plan.sampled_cr,
@@ -366,35 +532,46 @@ def _execute(plan: ExecutionPlan, shards: List[_ShardWork], a: CSR, b: CSR,
         total_products=plan.total_products, m_regs=plan.m_regs,
         stage_seconds=stage, bins=dict(plan.bins_describe),
         overflow_rows=n_overflow, nnz_out=total, plan_cache_hit=cache_hit,
+        feed_forward=plan.feed_forward,
         n_shards=n_shards, shard_imbalance=shard_imbalance,
         executor=mode, overlap_seconds=overlap_s, merge_overlap_frac=frac,
         analysis_shards=plan.analysis_shards,
-        analysis_shard_seconds=plan.analysis_shard_seconds)
+        analysis_shard_seconds=plan.analysis_shard_seconds,
+        raw_row_nnz=raw_counts)
     return c, report
 
 
 def execute_plan(plan: ExecutionPlan, a: CSR, b: CSR, *,
                  stage: Optional[Dict[str, float]] = None,
                  cache_hit: bool = False,
-                 executor: str = PIPELINED) -> Tuple[CSR, OceanReport]:
-    """Run a frozen plan against (possibly new) values of A and B."""
+                 executor: str = PIPELINED,
+                 post: Optional[MergePostOps] = None,
+                 ) -> Tuple[CSR, OceanReport]:
+    """Run a frozen plan against (possibly new) values of A and B.
+
+    ``post`` fuses mask/transform/prune/normalize stages into the merge
+    (see :class:`MergePostOps`); the plan itself is post-independent, so
+    one cached plan serves masked and unmasked traffic alike.
+    """
     return _execute(plan, _shards_of_plan(plan), a, b, stage=stage,
                     cache_hit=cache_hit, mode=executor, n_shards=1,
-                    shard_imbalance=1.0)
+                    shard_imbalance=1.0, post=post)
 
 
 def execute_sharded_plan(splan, a: CSR, b: CSR, *,
                          stage: Optional[Dict[str, float]] = None,
                          cache_hit: bool = False,
                          executor: str = PIPELINED,
+                         post: Optional[MergePostOps] = None,
                          ) -> Tuple[CSR, OceanReport]:
     """Run a :class:`~repro.core.partition.ShardedPlan` across its devices.
 
     Each shard's bins are dispatched onto that shard's device; slabs are
-    merged through the same pipeline as :func:`execute_plan`. Because every
-    bin's per-row results are independent of which other rows share the
-    kernel launch, the merged CSR is bit-identical to single-device
-    execution.
+    merged through the same pipeline as :func:`execute_plan` (including
+    any fused ``post`` stages, which run on the host merge and are
+    therefore topology-independent). Because every bin's per-row results
+    are independent of which other rows share the kernel launch, the
+    merged CSR is bit-identical to single-device execution.
     """
     if stage is None:
         stage = {"analysis": 0.0, "prediction": 0.0, "binning": 0.0,
@@ -404,4 +581,4 @@ def execute_sharded_plan(splan, a: CSR, b: CSR, *,
     return _execute(splan.plan, shards, a, b, stage=stage,
                     cache_hit=cache_hit, mode=executor,
                     n_shards=len(splan.shards),
-                    shard_imbalance=splan.imbalance)
+                    shard_imbalance=splan.imbalance, post=post)

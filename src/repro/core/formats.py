@@ -8,14 +8,37 @@ padding only affects the tail of ``indices``/``values``.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from functools import partial
-from typing import Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 PAD_COL = np.int32(2**31 - 1)  # sorts after every real column index
+
+
+def structure_hash(c: "CSR") -> str:
+    """Hash of one matrix's sparsity pattern (values excluded) — the key
+    per-RHS caches bucket by (sketch caches, size feeds)."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.ascontiguousarray(np.asarray(c.indptr)).tobytes())
+    h.update(np.ascontiguousarray(np.asarray(c.indices)[: c.nnz]).tobytes())
+    h.update(repr(c.shape).encode())
+    return h.hexdigest()
+
+
+def lru_bucket(store, key: str, factory: Callable, maxsize: int = 8):
+    """Fetch/create ``store[key]`` in an OrderedDict used as a small LRU
+    of per-key buckets (the shared idiom behind per-RHS sketch caches and
+    size feeds)."""
+    if key not in store:
+        store[key] = factory()
+    store.move_to_end(key)
+    while len(store) > maxsize:
+        store.popitem(last=False)
+    return store[key]
 
 
 def pow2_at_least(x: int, *, floor: int) -> int:

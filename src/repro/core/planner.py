@@ -39,7 +39,8 @@ import numpy as np
 
 from repro.kernels import ops as kops
 from . import esc as esc_mod
-from .analysis import (AnalysisResult, OceanConfig, analyze, sketches_for)
+from .analysis import (AnalysisResult, OceanConfig, analyze,
+                       sharded_merge_estimate, sketches_for)
 from .binning import BinPlan, plan_bins
 from .formats import CSR, csr_from_arrays, flat_gather_index, pow2_at_least
 
@@ -57,6 +58,9 @@ class OceanReport:
     overflow_rows: int
     nnz_out: int
     plan_cache_hit: bool = False
+    # the plan entered binning with exact feed-forward sizes (workflow
+    # 'known'): HLL estimation / the symbolic sort were skipped entirely
+    feed_forward: bool = False
     n_shards: int = 1
     shard_imbalance: float = 1.0
     executor: str = "serial"
@@ -73,6 +77,11 @@ class OceanReport:
     # clock, so they are surfaced separately rather than summed into it.
     analysis_shards: int = 1
     analysis_shard_seconds: Optional[List[float]] = None
+    # exact per-row nnz of the raw (pre-mask/pre-prune) product — only
+    # tracked when fused merge post-ops ran (None otherwise: the output's
+    # own indptr already is the exact raw sizing). Graph chains feed these
+    # forward as ``known_sizes`` for the next plan on the same pattern.
+    raw_row_nnz: Optional[np.ndarray] = None
 
     @property
     def total_seconds(self) -> float:
@@ -177,6 +186,9 @@ class ExecutionPlan:
     # OceanReport on every execution of the plan)
     analysis_shards: int = 1
     analysis_shard_seconds: Optional[List[float]] = None
+    # built from exact feed-forward sizes (workflow 'known'): estimation
+    # and the symbolic pass were skipped when this plan was planned
+    feed_forward: bool = False
 
     def reuse_b_sketches(self) -> Dict:
         """Seed a sketch cache from this plan for later builds against the
@@ -193,12 +205,16 @@ class ExecutionPlan:
 
 def structure_key(a: CSR, b: CSR, cfg: OceanConfig,
                   force_workflow: Optional[str], assisted: bool,
-                  hybrid: bool) -> str:
+                  hybrid: bool,
+                  known_sizes: Optional[np.ndarray] = None) -> str:
     """Cache key: hash of both sparsity patterns + every planning knob.
 
     O(nnz) hashing — orders of magnitude cheaper than re-running analysis,
     prediction, and binning. Values are deliberately excluded: plans are
-    structure-only.
+    structure-only. ``known_sizes`` (feed-forward exact sizing) is hashed
+    in when present: the sizes are a pure function of the structure pair
+    when trusted, but a caller-supplied array of unknown provenance must
+    not alias the clean key.
     """
     h = hashlib.blake2b(digest_size=16)
     for m in (a, b):
@@ -207,6 +223,10 @@ def structure_key(a: CSR, b: CSR, cfg: OceanConfig,
             np.asarray(m.indices)[: m.nnz]).tobytes())
         h.update(repr(m.shape).encode())
     h.update(repr((cfg, force_workflow, assisted, hybrid)).encode())
+    if known_sizes is not None:
+        h.update(b"|known|")
+        h.update(np.ascontiguousarray(
+            np.asarray(known_sizes, np.int64)).tobytes())
     return h.hexdigest()
 
 
@@ -215,13 +235,24 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
                hybrid: bool = True, analysis: Optional[AnalysisResult] = None,
                sketch_cache: Optional[Dict] = None,
                key: Optional[str] = None,
-               analysis_devices=None) -> ExecutionPlan:
+               analysis_devices=None,
+               known_sizes: Optional[np.ndarray] = None) -> ExecutionPlan:
     """Run analysis -> size prediction -> binning and freeze the result.
 
     ``analysis_devices`` partitions the analysis stage across a device set
-    (``core.analysis.AnalysisPipeline``); the stage's output — and hence
+    (``core.analysis.AnalysisPipeline``) and, on the estimation workflow,
+    the prediction stage's sketch merge too
+    (``analysis.sharded_merge_estimate``); both stages' output — and hence
     the plan — is bit-identical to the single-device run, which is why the
     plan-cache key deliberately excludes it.
+
+    ``known_sizes`` (per-row exact output nnz, fed forward from a prior
+    numeric pass over the same pattern pair) selects the ``"known"``
+    workflow: analysis skips sketching/sampling, the prediction stage is
+    free (the sizes *are* the prediction), and binning treats them as
+    symbolic-grade exact statistics. A stale feed never corrupts results —
+    undersized bins fall back to the exact ESC pass like any other
+    overflow.
     """
     stage: Dict[str, float] = {}
 
@@ -229,8 +260,14 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
     t0 = time.perf_counter()
     if analysis is None:
         analysis = analyze(a, b, cfg, sketch_cache=sketch_cache,
-                           devices=analysis_devices)
-    wf = force_workflow or analysis.workflow
+                           devices=analysis_devices,
+                           known_sizes=known_sizes)
+    if known_sizes is None and analysis.known_sizes is not None:
+        known_sizes = analysis.known_sizes
+    # exact feed-forward sizes trump both Table-1 selection and ablation
+    # forcing: there is nothing left to estimate
+    wf = ("known" if known_sizes is not None
+          else (force_workflow or analysis.workflow))
     products = np.asarray(analysis.products_row, np.int64)
     total_products = analysis.total_products
     out_lo = np.asarray(analysis.out_lo)
@@ -241,13 +278,19 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
     # ---------------- size prediction ----------------
     t0 = time.perf_counter()
     sketches = analysis.b_sketches
-    if wf == "estimation":
+    if wf == "known":
+        # feed-forward: the exact sizes are the prediction, at zero cost
+        pred = np.asarray(known_sizes, np.float64)
+        pred = np.where(products > 0, np.maximum(pred, 0.0), 0.0)
+        pred = np.minimum(pred, products)
+    elif wf == "estimation":
         if sketches is None:
             sketches = sketches_for(b, analysis.m_regs, cfg.seed,
                                     sketch_cache)
         sk = jnp.concatenate(
             [sketches, jnp.zeros((1, sketches.shape[1]), jnp.int32)], axis=0)
-        _, est = kops.merge_estimate_op(a, sk, clip_max=b.n)
+        est = sharded_merge_estimate(a, sk, clip_max=b.n,
+                                     devices=analysis_devices)
         pred = np.maximum(np.asarray(est, np.float64), 1.0)
         pred = np.where(products > 0, pred, 0.0)
         pred = np.minimum(pred, products)  # distinct count <= products
@@ -322,7 +365,8 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
         m_regs=analysis.m_regs, b_sketches=sketches
         if wf == "estimation" else analysis.b_sketches,
         build_seconds=stage, analysis_shards=analysis.n_shards,
-        analysis_shard_seconds=analysis.shard_seconds)
+        analysis_shard_seconds=analysis.shard_seconds,
+        feed_forward=(wf == "known"))
 
 
 # ---------------------------------------------------------------------------
@@ -337,23 +381,27 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
 def execute_plan(plan: ExecutionPlan, a: CSR, b: CSR, *,
                  stage: Optional[Dict[str, float]] = None,
                  cache_hit: bool = False,
-                 executor: str = "pipelined") -> Tuple[CSR, OceanReport]:
-    """Run a frozen plan against (possibly new) values of A and B."""
+                 executor: str = "pipelined",
+                 post=None) -> Tuple[CSR, OceanReport]:
+    """Run a frozen plan against (possibly new) values of A and B.
+
+    ``post`` (a :class:`~repro.core.executor.MergePostOps`) fuses
+    mask/transform/prune/normalize stages into the executor's merge."""
     from .executor import execute_plan as _execute
     return _execute(plan, a, b, stage=stage, cache_hit=cache_hit,
-                    executor=executor)
+                    executor=executor, post=post)
 
 
 def execute_sharded_plan(splan, a: CSR, b: CSR, *,
                          stage: Optional[Dict[str, float]] = None,
                          cache_hit: bool = False,
                          executor: str = "pipelined",
-                         ) -> Tuple[CSR, OceanReport]:
+                         post=None) -> Tuple[CSR, OceanReport]:
     """Run a :class:`~repro.core.partition.ShardedPlan` across its devices
     through the unified executor pipeline."""
     from .executor import execute_sharded_plan as _execute
     return _execute(splan, a, b, stage=stage, cache_hit=cache_hit,
-                    executor=executor)
+                    executor=executor, post=post)
 
 
 # ---------------------------------------------------------------------------

@@ -58,6 +58,8 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
                  devices: DeviceSpec = None,
                  analysis_devices: DeviceSpec = None,
                  executor: str = "pipelined",
+                 known_sizes=None,
+                 post=None,
                  ) -> Tuple[CSR, OceanReport]:
     """Estimation-based SpGEMM, C = A @ B. Returns (C, report).
 
@@ -86,6 +88,16 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
     ``executor``: ``"pipelined"`` (default) overlaps the host merge with
     device work through ``core.executor``; ``"serial"`` keeps the global
     barrier before the merge. Output is bit-identical either way.
+    ``known_sizes``: exact per-row output nnz fed forward from a prior
+    numeric pass over the same pattern pair (graph chains —
+    ``repro.graph.chain``); planning skips estimation entirely and bins
+    with symbolic-grade exact sizes (workflow ``"known"``). Hashed into
+    the plan-cache key: feed-forward plans never alias clean ones.
+    ``post``: fused merge post-ops (``core.executor.MergePostOps``) — mask
+    filter, value transform, prune, column-normalize applied inside the
+    executor's merge instead of separate host passes over the output
+    (``repro.graph.ops`` builds these). Plans are post-independent, so a
+    cached plan serves masked and unmasked traffic alike.
     """
     if plan is not None:
         if isinstance(plan, ShardedPlan):
@@ -96,7 +108,8 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
                         f"plan was partitioned for [{plan.topology}], "
                         f"devices= requests [{topo}]; re-partition the "
                         "base plan with partition_plan(plan.plan, devices)")
-            return execute_sharded_plan(plan, a, b, executor=executor)
+            return execute_sharded_plan(plan, a, b, executor=executor,
+                                        post=post)
         if devices is not None:
             # convenience path: partitions on every call. For repeated
             # values-only updates partition once (partition_plan) and pass
@@ -106,8 +119,8 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
             stage = {"analysis": 0.0, "prediction": 0.0, "binning": 0.0,
                      "partition": time.perf_counter() - t0}
             return execute_sharded_plan(splan, a, b, stage=stage,
-                                        executor=executor)
-        return execute_plan(plan, a, b, executor=executor)
+                                        executor=executor, post=post)
+        return execute_plan(plan, a, b, executor=executor, post=post)
 
     devs = resolve_devices(devices) if devices is not None else None
     an_devs = (resolve_devices(analysis_devices)
@@ -115,7 +128,8 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
     cache_obj = _resolve_cache(cache) if analysis is None else None
     if cache_obj is not None:
         t0 = time.perf_counter()
-        key = structure_key(a, b, cfg, force_workflow, assisted, hybrid)
+        key = structure_key(a, b, cfg, force_workflow, assisted, hybrid,
+                            known_sizes=known_sizes)
         lkey = key if devs is None else key + "|" + topology_key(devs)
         cached = cache_obj.lookup(lkey)
         lookup_s = time.perf_counter() - t0
@@ -126,9 +140,11 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
                      "prediction": 0.0, "binning": 0.0}
             if devs is None:
                 return execute_plan(cached, a, b, stage=stage,
-                                    cache_hit=True, executor=executor)
+                                    cache_hit=True, executor=executor,
+                                    post=post)
             return execute_sharded_plan(cached, a, b, stage=stage,
-                                        cache_hit=True, executor=executor)
+                                        cache_hit=True, executor=executor,
+                                        post=post)
         # sharded miss: reuse a cached base plan for this structure if one
         # exists (peek — the request-level stats already counted the miss)
         base = cache_obj.peek(key) if devs is not None else None
@@ -138,31 +154,33 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
             base = build_plan(a, b, cfg, force_workflow=force_workflow,
                               assisted=assisted, hybrid=hybrid,
                               sketch_cache=sketch_cache, key=key,
-                              analysis_devices=an_devs)
+                              analysis_devices=an_devs,
+                              known_sizes=known_sizes)
             cache_obj.insert(key, base)
             stage = dict(base.build_seconds)
         stage["plan_lookup"] = lookup_s
         if devs is None:
-            return execute_plan(base, a, b, stage=stage, executor=executor)
+            return execute_plan(base, a, b, stage=stage, executor=executor,
+                                post=post)
         t0 = time.perf_counter()
         splan = partition_plan(base, devs)
         stage["partition"] = time.perf_counter() - t0
         cache_obj.insert(lkey, splan)
         return execute_sharded_plan(splan, a, b, stage=stage,
-                                    executor=executor)
+                                    executor=executor, post=post)
     fresh = build_plan(a, b, cfg, force_workflow=force_workflow,
                        assisted=assisted, hybrid=hybrid,
                        analysis=analysis, sketch_cache=sketch_cache,
-                       analysis_devices=an_devs)
+                       analysis_devices=an_devs, known_sizes=known_sizes)
     if devs is not None:
         stage = dict(fresh.build_seconds)
         t0 = time.perf_counter()
         splan = partition_plan(fresh, devs)
         stage["partition"] = time.perf_counter() - t0
         return execute_sharded_plan(splan, a, b, stage=stage,
-                                    executor=executor)
+                                    executor=executor, post=post)
     return execute_plan(fresh, a, b, stage=fresh.build_seconds,
-                        executor=executor)
+                        executor=executor, post=post)
 
 
 def ocean_spgemm_many(a_list: Sequence[CSR], b: CSR,

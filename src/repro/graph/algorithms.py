@@ -1,0 +1,196 @@
+"""Graph algorithms on chained/masked SpGEMM: triangles, k-hop, MCL.
+
+Each algorithm is a thin composition of the chain runner
+(``repro.graph.chain``) and fused merge post-ops (``repro.graph.ops``) —
+they are the subsystem's end-to-end consumers, exercising plan reuse,
+feed-forward sizing, masked multiply, and fused inflation under the
+iterative access patterns real SpGEMM deployments run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.analysis import OceanConfig
+from repro.core.formats import CSR, csr_from_arrays
+from repro.core.planner import OceanReport
+
+from . import ops
+from .chain import ChainResult, ChainRunner, ChainStats
+
+__all__ = ["k_hop_frontier", "lower_triangle", "markov_cluster",
+           "MCLResult", "seeds_to_frontier", "triangle_count"]
+
+
+def lower_triangle(adj: CSR) -> CSR:
+    """Strictly-lower-triangular binary split of an adjacency matrix."""
+    ptr = np.asarray(adj.indptr, np.int64)
+    idx = np.asarray(adj.indices)[: adj.nnz]
+    rows = np.repeat(np.arange(adj.m, dtype=np.int64), np.diff(ptr))
+    keep = idx < rows
+    new_ptr = np.zeros(adj.m + 1, np.int64)
+    np.add.at(new_ptr, rows[keep] + 1, 1)
+    vals = np.ones(int(keep.sum()), np.asarray(adj.values).dtype)
+    return csr_from_arrays(np.cumsum(new_ptr), idx[keep], vals, adj.shape)
+
+
+def triangle_count(adj: CSR, cfg: OceanConfig = OceanConfig(), **kw
+                   ) -> Tuple[int, OceanReport]:
+    """Exact triangle count of an undirected graph.
+
+    Masked SpGEMM formulation: with ``L`` the strictly-lower-triangular
+    binary split, ``sum(L .* (L @ L))`` counts every triangle exactly once
+    (the paths ``i > k > j`` closed by the masked edge ``i > j`` — the
+    ``A .* (A @ A) / 6`` identity restricted to one ordering). The mask is
+    fused into the executor merge, so the unmasked wedge matrix is never
+    materialized on the host. ``kw`` forwards to the multiply
+    (``devices=``, ``cache=``, ``executor=``, ...).
+    """
+    low = lower_triangle(adj)
+    c, rep = ops.masked_spgemm(low, low, low, cfg, **kw)
+    return int(round(float(np.asarray(c.values)[: c.nnz].sum()))), rep
+
+
+def seeds_to_frontier(seeds: Sequence[int], n: int,
+                      dtype=np.float32) -> CSR:
+    """A (1, n) frontier CSR with unit weight on each seed vertex."""
+    cols = np.unique(np.asarray(list(seeds), np.int64))
+    if len(cols) and (cols[0] < 0 or cols[-1] >= n):
+        raise ValueError(f"seed out of range for n={n}")
+    indptr = np.asarray([0, len(cols)], np.int64)
+    return csr_from_arrays(indptr, cols, np.ones(len(cols), dtype), (1, n))
+
+
+def k_hop_frontier(adj: CSR, seeds: Sequence[int], hops: int,
+                   cfg: OceanConfig = OceanConfig(), *,
+                   runner: Optional[ChainRunner] = None,
+                   stop_on_fixed_pattern: bool = False,
+                   **runner_kw) -> Tuple[List[np.ndarray], ChainResult]:
+    """Vertices reachable in exactly 1..``hops`` steps from ``seeds``.
+
+    Boolean-semiring chain ``F_{k+1} = sign(F_k @ A)`` with the collapse
+    fused into each multiply's merge. Returns the per-hop vertex sets and
+    the chain result (reports + chain stats: plan hits once the frontier
+    pattern closes, feed-forward skips on warm runners). Pass ``runner=``
+    to reuse a warm :class:`ChainRunner` (shared plans/sketches/feeds);
+    ``runner_kw`` constructs a fresh one otherwise.
+    """
+    if runner is None:
+        runner = ChainRunner(adj, cfg, **runner_kw)
+    post = ops.bool_post(adj.n)
+    stats = ChainStats()
+    reports = []
+    frontiers: List[np.ndarray] = []
+    f = seeds_to_frontier(seeds, adj.n, np.asarray(adj.values).dtype)
+    prev: Optional[np.ndarray] = None
+    for hop in range(hops):
+        f, rep = runner.step(f, post=post, stats=stats)
+        reports.append(rep)
+        cur = np.asarray(f.indices)[: f.nnz].copy()
+        frontiers.append(cur)
+        if stop_on_fixed_pattern and prev is not None \
+                and np.array_equal(cur, prev):
+            stats.converged_at = hop + 1
+            break
+        prev = cur
+    return frontiers, ChainResult(final=f, reports=reports, stats=stats)
+
+
+@dataclasses.dataclass
+class MCLResult:
+    labels: np.ndarray            # (n,) cluster label per vertex
+    matrix: CSR                   # converged (or last) MCL iterate
+    result: ChainResult           # per-iteration reports + chain stats
+
+
+def markov_cluster(adj: CSR, cfg: OceanConfig = OceanConfig(), *,
+                   inflation: float = 2.0, iterations: int = 12,
+                   prune_threshold: float = 1e-4,
+                   runner: Optional[ChainRunner] = None,
+                   **runner_kw) -> MCLResult:
+    """Markov clustering (expand -> inflate -> prune loop).
+
+    Each iteration is ONE fused multiply: expansion ``M @ M`` with
+    inflation's Hadamard power, column normalization, and pruning folded
+    into the executor's merge (``ops.inflate_post``) — no separate host
+    passes. Stops early once the iterate stops changing (pattern equal
+    and values within 1e-7). Cluster labels: vertex ``j`` joins the
+    cluster of the attractor row carrying its column's maximum.
+    """
+    m0 = ops.normalize_columns(_with_self_loops(adj))
+    if runner is None:
+        runner = ChainRunner(None, cfg, **runner_kw)
+    post = ops.inflate_post(adj.n, inflation, prune_threshold)
+    stats = ChainStats()
+    reports = []
+    m = m0
+    for it in range(iterations):
+        m_next, rep = runner.step(m, rhs=m, post=post, stats=stats)
+        reports.append(rep)
+        if _same_csr(m, m_next):
+            stats.converged_at = it + 1
+            m = m_next
+            break
+        m = m_next
+    labels = _attractor_labels(m)
+    return MCLResult(labels=labels, matrix=m,
+                     result=ChainResult(final=m, reports=reports,
+                                        stats=stats))
+
+
+def _with_self_loops(adj: CSR) -> CSR:
+    """adj + I (MCL's standard self-loop regularization), binarized."""
+    ptr = np.asarray(adj.indptr, np.int64)
+    idx = np.asarray(adj.indices)[: adj.nnz].astype(np.int64)
+    rows = np.repeat(np.arange(adj.m, dtype=np.int64), np.diff(ptr))
+    keys = np.unique(np.concatenate(
+        [rows * adj.n + idx,
+         np.arange(adj.m, dtype=np.int64) * adj.n + np.arange(adj.m)]))
+    r, c = keys // adj.n, keys % adj.n
+    new_ptr = np.zeros(adj.m + 1, np.int64)
+    np.add.at(new_ptr, r + 1, 1)
+    vals = np.ones(len(keys), np.asarray(adj.values).dtype)
+    return csr_from_arrays(np.cumsum(new_ptr), c, vals, adj.shape)
+
+
+def _same_csr(x: CSR, y: CSR, tol: float = 1e-7) -> bool:
+    if x.nnz != y.nnz:
+        return False
+    if not np.array_equal(np.asarray(x.indptr), np.asarray(y.indptr)):
+        return False
+    if not np.array_equal(np.asarray(x.indices)[: x.nnz],
+                          np.asarray(y.indices)[: y.nnz]):
+        return False
+    return bool(np.all(np.abs(np.asarray(x.values)[: x.nnz]
+                              - np.asarray(y.values)[: y.nnz]) <= tol))
+
+
+def _attractor_labels(m: CSR) -> np.ndarray:
+    """Cluster labels from a converged MCL matrix: vertex j labels by the
+    row holding its column's maximum; attractor rows then collapse labels
+    so every attractor of one cluster shares one id."""
+    ptr = np.asarray(m.indptr, np.int64)
+    idx = np.asarray(m.indices)[: m.nnz].astype(np.int64)
+    vals = np.asarray(m.values)[: m.nnz].astype(np.float64)
+    rows = np.repeat(np.arange(m.m, dtype=np.int64), np.diff(ptr))
+    label = np.arange(m.n, dtype=np.int64)
+    if len(idx):
+        # per column: the row of the maximum value, lowest row id on ties
+        # (vectorized: sort by (col, val, -row), take each group's last)
+        order = np.lexsort((-rows, vals, idx))
+        cols_sorted = idx[order]
+        is_last = np.ones(len(order), bool)
+        is_last[:-1] = cols_sorted[1:] != cols_sorted[:-1]
+        label[cols_sorted[is_last]] = rows[order][is_last]
+    # collapse label chains to their attractor fixpoint: pointer jumping
+    # halves chain depth per pass, so ceil(log2 n) passes flatten any
+    # acyclic chain; the bound also guarantees termination on the label
+    # cycles a non-converged matrix can contain (which have no fixpoint)
+    for _ in range(int(np.ceil(np.log2(max(m.n, 2)))) + 1):
+        nxt = label[label]
+        if np.array_equal(nxt, label):
+            break
+        label = nxt
+    return label

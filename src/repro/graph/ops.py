@@ -1,0 +1,131 @@
+"""Graph-flavoured SpGEMM operations: masked multiply, prune, inflate.
+
+The heavy lifting lives in ``core.executor.MergePostOps`` — mask filters,
+value transforms, pruning, and column normalization are *fused into the
+executor's merge/compaction* (applied per result slab as it lands on the
+host, overlapping outstanding device work in the pipelined executor)
+instead of running as separate host passes over an assembled CSR. This
+module builds those post-ops for the graph algorithms and provides the
+standalone host-side equivalents (used as oracles and for values-only
+steps between multiplies).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.analysis import OceanConfig
+from repro.core.executor import MergePostOps
+from repro.core.formats import CSR, csr_from_arrays
+from repro.core.planner import OceanReport
+from repro.core.workflow import ocean_spgemm
+
+__all__ = ["bool_post", "inflate", "inflate_post", "mask_post",
+           "masked_spgemm", "normalize_columns", "prune", "spgemm_mask"]
+
+
+# ---------------------------------------------------------------------------
+# MergePostOps builders
+# ---------------------------------------------------------------------------
+
+def mask_post(mask: CSR, *, threshold: float = 0.0) -> MergePostOps:
+    """Keep only entries of the product present in ``mask``'s pattern
+    (``mask .* (A @ B)``), optionally dropping small values too."""
+    return MergePostOps(n_cols=mask.n,
+                        mask_indptr=np.asarray(mask.indptr),
+                        mask_indices=np.asarray(mask.indices)[: mask.nnz],
+                        threshold=threshold)
+
+
+def bool_post(n_cols: int) -> MergePostOps:
+    """Boolean-semiring collapse: every accumulated value becomes 1.0
+    (k-hop frontier chains care about the pattern, not the counts)."""
+    return MergePostOps(n_cols=n_cols,
+                        transform=lambda v: (v != 0).astype(v.dtype))
+
+
+def inflate_post(n_cols: int, power: float,
+                 threshold: float = 0.0) -> MergePostOps:
+    """MCL inflation fused into the expansion's merge: Hadamard power,
+    column normalization (partial column sums accumulate as slabs land),
+    and post-normalization pruning — one fused multiply per MCL iteration
+    instead of expand -> host inflate -> host prune."""
+    return MergePostOps(n_cols=n_cols,
+                        transform=lambda v: np.power(np.abs(v), power),
+                        col_normalize=True, threshold=threshold)
+
+
+# ---------------------------------------------------------------------------
+# Masked multiply
+# ---------------------------------------------------------------------------
+
+def masked_spgemm(a: CSR, b: CSR, mask: CSR,
+                  cfg: OceanConfig = OceanConfig(), *,
+                  threshold: float = 0.0,
+                  **kw) -> Tuple[CSR, OceanReport]:
+    """``mask .* (A @ B)`` with the mask fused into the executor merge.
+
+    The plan is structure-only and post-independent, so it is shared with
+    unmasked traffic on the same pattern pair (same plan-cache key). With
+    a mask covering the whole product pattern this degenerates exactly —
+    bit for bit — to plain ``ocean_spgemm`` (pinned by the regression
+    tests against ``spgemm_reference``). ``kw`` forwards to
+    ``ocean_spgemm`` (``cache=``, ``devices=``, ``executor=``,
+    ``known_sizes=``, ...).
+    """
+    if mask.shape != (a.m, b.n):
+        raise ValueError(f"mask shape {mask.shape} != product shape "
+                         f"{(a.m, b.n)}")
+    return ocean_spgemm(a, b, cfg, post=mask_post(mask,
+                                                  threshold=threshold), **kw)
+
+
+# established alias mirroring the GraphBLAS spelling C<M> = A @ B
+spgemm_mask = masked_spgemm
+
+
+# ---------------------------------------------------------------------------
+# Host-side standalone equivalents (values-only steps and test oracles)
+# ---------------------------------------------------------------------------
+
+def _rebuild(c: CSR, keep: np.ndarray,
+             vals: Optional[np.ndarray] = None) -> CSR:
+    """Host rebuild of a CSR keeping a boolean subset of its nnz."""
+    ptr = np.asarray(c.indptr, np.int64)
+    idx = np.asarray(c.indices)[: c.nnz]
+    v = np.asarray(c.values)[: c.nnz] if vals is None else vals
+    rows = np.repeat(np.arange(c.m, dtype=np.int64), np.diff(ptr))
+    new_ptr = np.zeros(c.m + 1, np.int64)
+    np.add.at(new_ptr, rows[keep] + 1, 1)
+    return csr_from_arrays(np.cumsum(new_ptr), idx[keep], v[keep], c.shape)
+
+
+def prune(c: CSR, threshold: float) -> CSR:
+    """Drop entries with ``|value| < threshold`` (host pass). The fused
+    variant is ``MergePostOps(threshold=...)`` — prefer it when the prune
+    immediately follows a multiply."""
+    vals = np.asarray(c.values)[: c.nnz]
+    return _rebuild(c, np.abs(vals) >= threshold)
+
+
+def normalize_columns(c: CSR) -> CSR:
+    """Make ``c`` column-stochastic (columns with zero sum stay zero)."""
+    idx = np.asarray(c.indices)[: c.nnz]
+    vals = np.asarray(c.values)[: c.nnz].astype(np.float64)
+    colsum = np.zeros(c.n, np.float64)
+    np.add.at(colsum, idx, vals)
+    denom = np.where(colsum[idx] == 0.0, 1.0, colsum[idx])
+    out = (vals / denom).astype(np.asarray(c.values).dtype)
+    return _rebuild(c, np.ones(len(idx), bool), vals=out)
+
+
+def inflate(c: CSR, power: float, threshold: float = 0.0) -> CSR:
+    """Standalone MCL inflation: Hadamard power + column normalization
+    (+ optional prune). The fused variant is :func:`inflate_post`."""
+    vals = np.power(np.abs(np.asarray(c.values)[: c.nnz]).astype(np.float64),
+                    power)
+    powered = _rebuild(c, np.ones(c.nnz, bool),
+                       vals=vals.astype(np.asarray(c.values).dtype))
+    out = normalize_columns(powered)
+    return prune(out, threshold) if threshold > 0.0 else out

@@ -11,15 +11,12 @@ serving tier on the ROADMAP.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
-
 from repro.core.analysis import OceanConfig
-from repro.core.formats import CSR
+from repro.core.formats import CSR, lru_bucket, structure_hash
 from repro.core.partition import DeviceSpec, resolve_devices
 from repro.core.planner import OceanReport, PlanCache
 from repro.core.workflow import ocean_spgemm
@@ -37,6 +34,14 @@ class ServiceStats:
     # the total merge work it is a fraction of
     overlap_seconds: float = 0.0
     merge_seconds: float = 0.0
+    # chain traffic (run_chain): iterations across all chains, how many
+    # reused a cached plan outright, and how many fresh builds were sized
+    # from a feed-forward SizeFeed (estimation skipped, workflow 'known')
+    chains: int = 0
+    chain_iterations: int = 0
+    chain_plan_hits: int = 0
+    chain_feed_forward_skips: int = 0
+    chain_estimated_builds: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -46,6 +51,13 @@ class ServiceStats:
     def merge_overlap_frac(self) -> float:
         return self.overlap_seconds / self.merge_seconds \
             if self.merge_seconds > 0.0 else 0.0
+
+    @property
+    def chain_reuse_rate(self) -> float:
+        """Fraction of chain iterations that skipped estimation entirely
+        (plan reuse or feed-forward sizing)."""
+        done = self.chain_plan_hits + self.chain_feed_forward_skips
+        return done / max(self.chain_iterations, 1)
 
 
 class SpGEMMService:
@@ -81,20 +93,14 @@ class SpGEMMService:
         # sketch caches per right-hand side, keyed by B's structure hash —
         # kept small (LRU); a stream usually reuses a handful of Bs.
         self._sketch_caches: "OrderedDict[str, Dict]" = OrderedDict()
+        # feed-forward size feeds per right-hand side (graph chains):
+        # O(m)-int entries, so they persist across chains far beyond any
+        # plan's LRU lifetime — a warm service re-plans a seen pattern
+        # pair without ever re-estimating.
+        self._size_feeds: "OrderedDict[str, object]" = OrderedDict()
 
     def _sketch_cache_for(self, b: CSR) -> Dict:
-        h = hashlib.blake2b(digest_size=16)
-        h.update(np.ascontiguousarray(np.asarray(b.indptr)).tobytes())
-        h.update(np.ascontiguousarray(np.asarray(b.indices)[: b.nnz])
-                 .tobytes())
-        h.update(repr(b.shape).encode())
-        key = h.hexdigest()
-        if key not in self._sketch_caches:
-            self._sketch_caches[key] = {}
-        self._sketch_caches.move_to_end(key)
-        while len(self._sketch_caches) > 8:
-            self._sketch_caches.popitem(last=False)
-        return self._sketch_caches[key]
+        return lru_bucket(self._sketch_caches, structure_hash(b), dict)
 
     def multiply(self, a: CSR, b: CSR, *,
                  force_workflow: Optional[str] = None,
@@ -127,3 +133,45 @@ class SpGEMMService:
         """Serve a stream of left-hand sides against one B (shared
         sketches, shared plan cache)."""
         return [self.multiply(a, b, **kw) for a in a_list]
+
+    def _size_feed_for(self, b: CSR):
+        from repro.graph.chain import SizeFeed
+        return lru_bucket(self._size_feeds, structure_hash(b), SizeFeed)
+
+    def run_chain(self, c0: CSR, a: CSR, iterations: int, *,
+                  post=None, square: bool = False,
+                  stop_on_fixed_pattern: bool = False,
+                  executor: Optional[str] = None):
+        """Serve a chained multiply ``C_{k+1} = C_k @ A`` (the graph-
+        iteration access pattern: k-hop, label propagation, MCL with
+        ``square=True``).
+
+        Plans live in a per-chain cache (heavyweight, device-resident —
+        iteration-to-iteration reuse is where they pay off), while the
+        feed-forward :class:`~repro.graph.chain.SizeFeed` persists on the
+        service per right-hand side: a warm service re-plans previously
+        seen pattern pairs with exact ``known_sizes`` and never
+        re-estimates (``ServiceStats.chain_feed_forward_skips``).
+        Returns the :class:`~repro.graph.chain.ChainResult` (final CSR,
+        per-iteration reports, chain stats).
+        """
+        from repro.graph.chain import ChainRunner
+        t0 = time.perf_counter()
+        runner = ChainRunner(
+            a, self.cfg, size_feed=self._size_feed_for(a),
+            devices=self.devices, analysis_devices=self.analysis_devices,
+            executor=executor if executor is not None else self.executor)
+        res = runner.run(c0, iterations, post=post, square=square,
+                         stop_on_fixed_pattern=stop_on_fixed_pattern)
+        st = res.stats
+        self.stats.chains += 1
+        self.stats.chain_iterations += st.iterations
+        self.stats.chain_plan_hits += st.plan_hits
+        self.stats.chain_feed_forward_skips += st.feed_forward_skips
+        self.stats.chain_estimated_builds += st.estimated_builds
+        self.stats.total_seconds += time.perf_counter() - t0
+        self.stats.setup_seconds += st.setup_seconds
+        for rep in res.reports:
+            self.stats.overlap_seconds += rep.overlap_seconds
+            self.stats.merge_seconds += rep.stage_seconds.get("merge", 0.0)
+        return res

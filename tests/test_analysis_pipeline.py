@@ -266,3 +266,54 @@ def test_pipeline_class_direct_use():
     r1 = pipe.run(a, a, devices=N_DEV)
     assert_analysis_identical(r1, r0)
     assert r1.n_shards == N_DEV
+
+
+# ---------------------------------------------------------------------------
+# Sharded prediction stage (merge_estimate_op across analysis_devices)
+# ---------------------------------------------------------------------------
+
+def test_sharded_merge_estimate_parity():
+    """The prediction stage's HLL sketch merge is row-partitionable:
+    sharded estimates must equal the monolithic ones bit for bit at any
+    shard count."""
+    import jax.numpy as jnp
+    from repro.core.analysis import sharded_merge_estimate, sketches_for
+    b = formats.banded_csr(61, 220, 220, 50)
+    sk = sketches_for(b, 64, 0)
+    sks = jnp.concatenate([sk, jnp.zeros((1, sk.shape[1]), jnp.int32)],
+                          axis=0)
+    mono = sharded_merge_estimate(b, sks, clip_max=b.n)
+    for n_dev in (1, 2, N_DEV):
+        shard = sharded_merge_estimate(b, sks, clip_max=b.n,
+                                       devices=n_dev)
+        np.testing.assert_array_equal(mono, shard)
+
+
+def test_build_plan_sharded_prediction_identical_plans():
+    """build_plan(analysis_devices=N) shards the estimation-workflow
+    prediction stage; bins and outputs must match the monolithic build."""
+    b = formats.banded_csr(62, 220, 220, 50)
+    p0 = planner.build_plan(b, b, force_workflow="estimation")
+    pN = planner.build_plan(b, b, force_workflow="estimation",
+                            analysis_devices=N_DEV)
+    assert p0.bins_describe == pN.bins_describe
+    c0, _ = planner.execute_plan(p0, b, b)
+    cN, _ = planner.execute_plan(pN, b, b)
+    assert_bit_identical(c0, cN)
+
+
+def test_analyze_known_sizes_short_circuits_selection():
+    """known_sizes= produces workflow 'known' with no sketches/sampling,
+    monolithic and sharded alike."""
+    a = formats.banded_csr(63, 180, 180, 40)
+    sizes = np.diff(np.asarray(workflow.spgemm_reference(a, a).indptr))
+    r0 = analyze(a, a, known_sizes=sizes)
+    assert r0.workflow == "known"
+    assert r0.b_sketches is None and r0.sampled_cr is None
+    np.testing.assert_array_equal(r0.known_sizes, sizes)
+    rN = analyze(a, a, known_sizes=sizes, devices=N_DEV)
+    assert rN.workflow == "known" and rN.n_shards == N_DEV
+    np.testing.assert_array_equal(np.asarray(rN.products_row),
+                                  np.asarray(r0.products_row))
+    with pytest.raises(ValueError):
+        analyze(a, a, known_sizes=sizes[:-1])

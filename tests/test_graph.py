@@ -1,0 +1,435 @@
+"""Graph analytics subsystem: chained SpGEMM, feed-forward sizing, masked
+multiply / prune fusion, and the three algorithms against pure
+``spgemm_reference`` oracles on seeded R-MAT / Erdős–Rényi graphs.
+
+conftest forces a 4-device host platform, so the sharded-execution and
+sharded-prediction paths run for real.
+"""
+import numpy as np
+import pytest
+
+try:  # hypothesis is optional: the suite must collect and pass without it
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fixed-seed fallback, same properties
+    from _hypothesis_fallback import given, settings, st
+
+from conftest import assert_bit_identical
+from repro.core import formats, planner, workflow
+from repro.graph import (ChainRunner, SizeFeed, bool_post, erdos_renyi_csr,
+                         inflate, k_hop_frontier, lower_triangle,
+                         markov_cluster, masked_spgemm, normalize_columns,
+                         prune, rmat_csr, seeds_to_frontier, spgemm_chain,
+                         triangle_count)
+from repro.graph.algorithms import _with_self_loops
+from repro.serving import SpGEMMService
+
+
+# ---------------------------------------------------------------------------
+# Oracles (pure spgemm_reference + host numpy)
+# ---------------------------------------------------------------------------
+
+def mask_oracle(a, b, mask):
+    """mask .* (A @ B) via the exact reference and a host key filter."""
+    ref = workflow.spgemm_reference(a, b)
+    ptr = np.asarray(ref.indptr, np.int64)
+    idx = np.asarray(ref.indices)[: ref.nnz].astype(np.int64)
+    vals = np.asarray(ref.values)[: ref.nnz]
+    rows = np.repeat(np.arange(ref.m, dtype=np.int64), np.diff(ptr))
+    mptr = np.asarray(mask.indptr, np.int64)
+    midx = np.asarray(mask.indices)[: mask.nnz].astype(np.int64)
+    mrows = np.repeat(np.arange(mask.m, dtype=np.int64), np.diff(mptr))
+    mask_keys = np.sort(mrows * mask.n + midx)
+    keys = rows * ref.n + idx
+    pos = np.searchsorted(mask_keys, keys)
+    member = np.zeros(len(keys), bool)
+    rng = pos < len(mask_keys)
+    member[rng] = mask_keys[pos[rng]] == keys[rng]
+    new_ptr = np.zeros(ref.m + 1, np.int64)
+    np.add.at(new_ptr, rows[member] + 1, 1)
+    return formats.csr_from_arrays(np.cumsum(new_ptr), idx[member],
+                                   vals[member], ref.shape)
+
+
+def assert_struct_equal_vals_close(c, ref, tol=1e-4):
+    np.testing.assert_array_equal(np.asarray(c.indptr),
+                                  np.asarray(ref.indptr))
+    np.testing.assert_array_equal(np.asarray(c.indices)[: c.nnz],
+                                  np.asarray(ref.indices)[: ref.nnz])
+    np.testing.assert_allclose(np.asarray(c.values)[: c.nnz],
+                               np.asarray(ref.values)[: ref.nnz], atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# Generators
+# ---------------------------------------------------------------------------
+
+def test_generators_deterministic_symmetric_loopfree():
+    for gen in (lambda: rmat_csr(5, 6, 6), lambda: erdos_renyi_csr(5, 80, 4.0)):
+        g1, g2 = gen(), gen()
+        assert_bit_identical(g1, g2)
+        d = np.asarray(g1.to_dense())
+        assert np.array_equal(d, d.T)
+        assert np.all(np.diag(d) == 0)
+        assert g1.nnz > 0
+
+
+def test_generator_options():
+    g = rmat_csr(9, 5, 4, symmetric=False, self_loops=True,
+                 weights="random")
+    assert g.shape == (32, 32)
+    vals = np.asarray(g.values)[: g.nnz]
+    assert np.all(vals > 0) and not np.all(vals == 1.0)
+    with pytest.raises(ValueError):
+        rmat_csr(0, 4, 2, a=0.9, b=0.2, c=0.2)
+    with pytest.raises(ValueError):
+        erdos_renyi_csr(0, 10, 1.0, weights="bogus")
+
+
+# ---------------------------------------------------------------------------
+# known_sizes / feed-forward planner path
+# ---------------------------------------------------------------------------
+
+def test_known_sizes_selects_known_workflow_and_matches():
+    a = formats.random_uniform_csr(41, 180, 180, 9.0)
+    ref = workflow.spgemm_reference(a, a)
+    sizes = np.diff(np.asarray(ref.indptr)).astype(np.int64)
+    c0, rep0 = workflow.ocean_spgemm(a, a, cache=False)
+    c1, rep1 = workflow.ocean_spgemm(a, a, cache=False, known_sizes=sizes)
+    assert rep1.workflow == "known" and rep1.feed_forward
+    assert not rep0.feed_forward
+    assert_bit_identical(c0, c1)
+    # exact sizes -> no overflow fallback
+    assert rep1.overflow_rows == 0
+
+
+def test_stale_known_sizes_absorbed_by_overflow_fallback():
+    a = formats.random_uniform_csr(42, 150, 150, 10.0)
+    c0, _ = workflow.ocean_spgemm(a, a, cache=False)
+    # deliberately wrong (undersized) feed: results must still be exact
+    ones = np.ones(a.m, np.int64)
+    c1, rep = workflow.ocean_spgemm(a, a, cache=False, known_sizes=ones)
+    assert rep.workflow == "known"
+    assert rep.overflow_rows > 0
+    assert_bit_identical(c0, c1)
+
+
+def test_known_sizes_hash_into_plan_cache_key():
+    cache = planner.PlanCache(maxsize=8)
+    a = formats.random_uniform_csr(43, 120, 120, 6.0)
+    c0, _ = workflow.ocean_spgemm(a, a, cache=cache)
+    sizes = np.diff(np.asarray(c0.indptr)).astype(np.int64)
+    _, rep = workflow.ocean_spgemm(a, a, cache=cache, known_sizes=sizes)
+    # a feed-forward request must not alias the clean cached plan
+    assert not rep.plan_cache_hit
+    assert rep.workflow == "known"
+    assert cache.stats()["misses"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Masked multiply + prune (fused post-ops)
+# ---------------------------------------------------------------------------
+
+def test_masked_spgemm_matches_reference_oracle():
+    a = formats.random_uniform_csr(44, 160, 160, 8.0)
+    mask = formats.random_uniform_csr(45, 160, 160, 4.0)
+    c, rep = masked_spgemm(a, a, mask, cache=False)
+    assert_struct_equal_vals_close(c, mask_oracle(a, a, mask))
+    assert rep.raw_row_nnz is not None
+    ref = workflow.spgemm_reference(a, a)
+    np.testing.assert_array_equal(rep.raw_row_nnz,
+                                  np.diff(np.asarray(ref.indptr)))
+
+
+def test_masked_spgemm_dense_mask_degenerates_to_plain():
+    """Regression pin: a mask covering the whole product pattern must
+    reproduce plain ocean_spgemm bit for bit, and both must match
+    spgemm_reference."""
+    a = formats.random_uniform_csr(46, 140, 140, 7.0)
+    ref = workflow.spgemm_reference(a, a)
+    plain, _ = workflow.ocean_spgemm(a, a, cache=False)
+    # mask = the product's own pattern (covers everything computed)
+    full_mask = formats.csr_from_arrays(
+        np.asarray(ref.indptr), np.asarray(ref.indices)[: ref.nnz],
+        np.ones(ref.nnz, np.float32), ref.shape)
+    masked, _ = masked_spgemm(a, a, full_mask, cache=False)
+    assert_bit_identical(plain, masked)
+    assert_struct_equal_vals_close(masked, ref)
+    # a truly dense all-ones mask degenerates identically
+    dense_mask = formats.csr_from_dense(np.ones((a.m, a.n), np.float32))
+    masked2, _ = masked_spgemm(a, a, dense_mask, cache=False)
+    assert_bit_identical(plain, masked2)
+
+
+def test_masked_spgemm_parity_across_executors_and_shards():
+    a = formats.powerlaw_csr(47, 200, 200, 10.0)
+    mask = formats.random_uniform_csr(48, 200, 200, 5.0)
+    c1, _ = masked_spgemm(a, a, mask, cache=False, executor="pipelined")
+    c2, _ = masked_spgemm(a, a, mask, cache=False, executor="serial")
+    c3, _ = masked_spgemm(a, a, mask, cache=False, devices=4)
+    assert_bit_identical(c1, c2)
+    assert_bit_identical(c1, c3)
+
+
+def test_masked_spgemm_with_stale_feed_overflow_is_exact():
+    """Fused mask + overflow fallback: the fallback slab must pass
+    through the same post filter."""
+    a = formats.random_uniform_csr(49, 150, 150, 10.0)
+    mask = formats.random_uniform_csr(50, 150, 150, 5.0)
+    c, rep = masked_spgemm(a, a, mask, cache=False,
+                           known_sizes=np.ones(a.m, np.int64))
+    assert rep.overflow_rows > 0
+    assert_struct_equal_vals_close(c, mask_oracle(a, a, mask))
+
+
+def test_masked_spgemm_shape_mismatch_rejected():
+    a = formats.random_uniform_csr(51, 100, 100, 5.0)
+    mask = formats.random_uniform_csr(52, 90, 90, 5.0)
+    with pytest.raises(ValueError):
+        masked_spgemm(a, a, mask)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.0, 2.0))
+def test_prune_property(seed, threshold):
+    c = formats.random_uniform_csr(seed + 1, 60, 60, 4.0)
+    p = prune(c, threshold)
+    vals = np.asarray(p.values)[: p.nnz]
+    assert np.all(np.abs(vals) >= threshold)
+    # idempotent, and exactly the survivors of the dense filter
+    assert_bit_identical(p, prune(p, threshold))
+    d = np.asarray(c.to_dense())
+    expect = np.where(np.abs(d) >= threshold, d, 0.0)
+    np.testing.assert_allclose(np.asarray(p.to_dense()), expect, atol=0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_masked_multiply_property(seed):
+    a = formats.random_uniform_csr(seed + 3, 70, 70, 5.0)
+    mask = formats.random_uniform_csr(seed + 7, 70, 70, 3.0)
+    c, _ = masked_spgemm(a, a, mask, cache=False)
+    assert_struct_equal_vals_close(c, mask_oracle(a, a, mask))
+
+
+def test_fused_prune_threshold_matches_host_prune():
+    a = formats.random_uniform_csr(53, 120, 120, 6.0)
+    from repro.core.executor import MergePostOps
+    c_fused, _ = workflow.ocean_spgemm(
+        a, a, cache=False, post=MergePostOps(n_cols=a.n, threshold=0.5))
+    c_host, _ = workflow.ocean_spgemm(a, a, cache=False)
+    assert_bit_identical(c_fused, prune(c_host, 0.5))
+
+
+# ---------------------------------------------------------------------------
+# Chains
+# ---------------------------------------------------------------------------
+
+def test_chain_bit_identical_to_ocean_loop_and_matches_reference():
+    adj = erdos_renyi_csr(60, 90, 3.0)
+    c0 = erdos_renyi_csr(61, 90, 2.0)
+    res = spgemm_chain(c0, adj, 3)
+    # bit-identical to a host loop of single multiplies
+    c = c0
+    refs = []
+    for _ in range(3):
+        c, _ = workflow.ocean_spgemm(c, adj, cache=False)
+        refs.append(c)
+    assert_bit_identical(res.final, c)
+    # structure-exact / values-close to the iterated pure reference
+    r = c0
+    for _ in range(3):
+        r = workflow.spgemm_reference(r, adj)
+    assert_struct_equal_vals_close(res.final, r)
+    assert res.stats.iterations == 3
+    assert res.stats.nnz_trajectory == [x.nnz for x in refs]
+
+
+def test_chain_plan_cache_hits_across_iterations():
+    """A fixed-point chain (identity RHS) repeats its pattern pair, so
+    iterations 2..k must hit the per-chain plan cache."""
+    eye = formats.csr_from_dense(np.eye(64, dtype=np.float32))
+    c0 = erdos_renyi_csr(62, 64, 3.0)
+    res = spgemm_chain(c0, eye, 3)
+    assert res.stats.plan_hits == 2
+    assert res.stats.estimated_builds == 1
+    assert [r.plan_cache_hit for r in res.reports] == [False, True, True]
+    assert_bit_identical(res.final, c0)
+
+
+def test_chain_feed_forward_skips_on_warm_feed():
+    adj = rmat_csr(63, 6, 4)
+    c0 = erdos_renyi_csr(64, adj.n, 2.0)
+    feed = SizeFeed()
+    cold = ChainRunner(adj, size_feed=feed)
+    r1 = cold.run(c0, 3)
+    assert r1.stats.feed_forward_skips == 0
+    # fresh plan cache + warm feed: every fresh build is feed-forward
+    warm = ChainRunner(adj, size_feed=feed)
+    r2 = warm.run(c0, 3)
+    assert r2.stats.estimated_builds == 0
+    assert r2.stats.feed_forward_skips + r2.stats.plan_hits == 3
+    assert r2.stats.feed_forward_skips >= 1
+    assert any(rep.feed_forward for rep in r2.reports)
+    assert all(rep.workflow in ("known",) or rep.plan_cache_hit
+               for rep in r2.reports)
+    assert_bit_identical(r1.final, r2.final)
+    # feed-forward plans never overflow: the sizes are exact
+    assert all(rep.overflow_rows == 0 for rep in r2.reports)
+
+
+def test_chain_acceptance_one_run_shows_hit_and_skip():
+    """Acceptance: one chained run with >=1 feed-forward estimation skip
+    AND >=1 plan-cache hit, reported via OceanReport/ServiceStats."""
+    eye = formats.csr_from_dense(np.eye(48, dtype=np.float32))
+    c0 = erdos_renyi_csr(65, 48, 3.0)
+    svc = SpGEMMService()
+    svc.run_chain(c0, eye, 3)
+    res = svc.run_chain(c0, eye, 3)   # warm service, fresh per-chain plans
+    assert res.stats.feed_forward_skips >= 1
+    assert res.stats.plan_hits >= 1
+    assert res.reports[0].feed_forward
+    assert res.reports[1].plan_cache_hit
+    st_ = svc.stats
+    assert st_.chains == 2
+    assert st_.chain_iterations == 6
+    assert st_.chain_feed_forward_skips >= 1
+    assert st_.chain_plan_hits >= 2
+    assert 0.0 < st_.chain_reuse_rate <= 1.0
+
+
+def test_chain_single_iteration_and_empty_rhs_cases():
+    adj = erdos_renyi_csr(66, 50, 2.0)
+    c0 = erdos_renyi_csr(67, 50, 2.0)
+    res = spgemm_chain(c0, adj, 1)
+    one, _ = workflow.ocean_spgemm(c0, adj, cache=False)
+    assert_bit_identical(res.final, one)
+    assert res.stats.iterations == 1
+    with pytest.raises(ValueError):
+        ChainRunner(None).step(c0)   # no RHS anywhere
+
+
+def test_chain_sharded_matches_single_device():
+    adj = erdos_renyi_csr(68, 80, 3.0)
+    c0 = erdos_renyi_csr(69, 80, 2.0)
+    r1 = spgemm_chain(c0, adj, 2)
+    r4 = spgemm_chain(c0, adj, 2, devices=4)
+    assert_bit_identical(r1.final, r4.final)
+    assert all(rep.n_shards == 4 for rep in r4.reports)
+
+
+def test_chain_stop_on_fixed_pattern():
+    eye = formats.csr_from_dense(np.eye(32, dtype=np.float32))
+    c0 = erdos_renyi_csr(70, 32, 2.0)
+    res = spgemm_chain(c0, eye, 10, stop_on_fixed_pattern=True)
+    assert res.stats.converged_at == 1     # C @ I fixes the pattern at once
+    assert res.stats.iterations == 1
+
+
+# ---------------------------------------------------------------------------
+# Algorithms vs pure-reference oracles (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gen", [
+    lambda: rmat_csr(71, 6, 5),
+    lambda: erdos_renyi_csr(72, 100, 4.0),
+])
+def test_triangle_count_matches_dense_oracle(gen):
+    adj = gen()
+    d = np.asarray(adj.to_dense())
+    oracle = int(round(np.trace(d @ d @ d) / 6))
+    tri, rep = triangle_count(adj, cache=False)
+    assert tri == oracle
+    assert rep.raw_row_nnz is not None    # mask ran fused, not as a pass
+
+
+def test_lower_triangle_split():
+    adj = rmat_csr(73, 5, 4)
+    low = lower_triangle(adj)
+    d = np.asarray(low.to_dense())
+    assert np.array_equal(d != 0, np.tril(np.asarray(adj.to_dense()) != 0,
+                                          k=-1))
+
+
+@pytest.mark.parametrize("gen,seeds", [
+    (lambda: rmat_csr(74, 6, 5), [0, 3]),
+    (lambda: erdos_renyi_csr(75, 90, 3.0), [1]),
+])
+def test_k_hop_frontier_matches_bfs_oracle(gen, seeds):
+    adj = gen()
+    fronts, res = k_hop_frontier(adj, seeds, 4)
+    d = np.asarray(adj.to_dense()) != 0
+    cur = np.zeros(adj.n, bool)
+    cur[seeds] = True
+    for hop in range(len(fronts)):
+        cur = (cur @ d) != 0
+        np.testing.assert_array_equal(fronts[hop], np.nonzero(cur)[0])
+    assert all(w in ("upper_bound", "estimation", "symbolic", "known")
+               for w in res.stats.workflows)
+
+
+def test_k_hop_empty_frontier_and_closure():
+    # an empty seed set stays empty through the chain's empty-plan path
+    adj = erdos_renyi_csr(76, 40, 2.0)
+    fronts, res = k_hop_frontier(adj, [], 2)
+    assert all(len(f) == 0 for f in fronts)
+    assert res.final.nnz == 0
+    # with self-loops the frontier grows monotonically to its closure:
+    # the early-stop fires, and running past closure reuses the plan
+    adjl = _with_self_loops(adj)
+    _, res_stop = k_hop_frontier(adjl, [0], 30, stop_on_fixed_pattern=True)
+    assert res_stop.stats.converged_at is not None
+    _, res_past = k_hop_frontier(adjl, [0], res_stop.stats.converged_at + 3)
+    assert res_past.stats.plan_hits >= 1  # closed pattern reuses its plan
+
+
+@pytest.mark.parametrize("gen", [
+    lambda: rmat_csr(77, 6, 4),
+    lambda: erdos_renyi_csr(78, 64, 3.0),
+])
+def test_markov_cluster_matches_host_oracle(gen):
+    adj = gen()
+    mcl = markov_cluster(adj, iterations=6)
+    # oracle: the same loop on spgemm_reference + host inflate/prune
+    m = normalize_columns(_with_self_loops(adj))
+    for _ in range(mcl.result.stats.iterations):
+        m = inflate(workflow.spgemm_reference(m, m), 2.0, 1e-4)
+    np.testing.assert_array_equal(np.asarray(mcl.matrix.indptr),
+                                  np.asarray(m.indptr))
+    np.testing.assert_array_equal(np.asarray(mcl.matrix.indices)
+                                  [: mcl.matrix.nnz],
+                                  np.asarray(m.indices)[: m.nnz])
+    np.testing.assert_allclose(np.asarray(mcl.matrix.values)
+                               [: mcl.matrix.nnz],
+                               np.asarray(m.values)[: m.nnz], atol=1e-5)
+    # labels are a partition over all vertices
+    assert mcl.labels.shape == (adj.n,)
+    assert len(np.unique(mcl.labels)) >= 1
+
+
+def test_markov_cluster_converges_with_plan_hits():
+    adj = erdos_renyi_csr(79, 48, 2.5)
+    mcl = markov_cluster(adj, iterations=25)
+    assert mcl.result.stats.converged_at is not None
+    # converged pattern pairs repeat -> the chain reuses their plans
+    assert mcl.result.stats.plan_hits >= 1
+
+
+# ---------------------------------------------------------------------------
+# Frontier container edge cases
+# ---------------------------------------------------------------------------
+
+def test_seeds_to_frontier_validation():
+    f = seeds_to_frontier([3, 1, 3], 10)
+    assert f.shape == (1, 10) and f.nnz == 2
+    np.testing.assert_array_equal(np.asarray(f.indices)[: f.nnz], [1, 3])
+    with pytest.raises(ValueError):
+        seeds_to_frontier([10], 10)
+
+
+def test_bool_post_collapses_counts():
+    adj = erdos_renyi_csr(80, 60, 3.0)
+    f = seeds_to_frontier([0, 1, 2], adj.n)
+    c, _ = workflow.ocean_spgemm(f, adj, cache=False,
+                                 post=bool_post(adj.n))
+    vals = np.asarray(c.values)[: c.nnz]
+    assert np.all(vals == 1.0)
