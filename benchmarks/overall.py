@@ -71,6 +71,15 @@ def run(rows: list, scale: int = 1):
         rows.append((f"overall/plan_setup/{name}", rep_fresh.setup_seconds * 1e6,
                      f"cached_us={rep_hit.setup_seconds * 1e6:.1f}"))
 
+        # per-rung accumulator occupancy: how Ocean's hybrid binning split
+        # this matrix across the dense-window / hash-table / ESC rungs
+        # (hash_rows feeds the CI canary asserting the hash rung engages)
+        bins = rep_fresh.bins
+        hash_rows = sum(v for k, v in bins.items() if k.startswith("hash_t"))
+        occ = " ".join(f"{k}={v}" for k, v in bins.items() if v)
+        rows.append((f"overall/{name}/rungs", 0.0,
+                     f"{occ} hash_rows={hash_rows}".strip()))
+
     for mname, gs in per_method.items():
         rows.append((f"overall/geomean/{mname}", 0.0,
                      f"gflops_geomean={geomean(gs):.3f}"))

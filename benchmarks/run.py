@@ -92,6 +92,8 @@ def main() -> None:
     chain_iterations = chain_plan_hits = chain_ff_skips = 0
     chain_rows = {}
     chain_parity_rows = 0
+    hash_bin_rows = 0
+    hash_rows_by_matrix = {}
     for name, us, derived in rows:
         if name == "overall/plan_setup/total":
             setup_us = us
@@ -117,6 +119,10 @@ def main() -> None:
                 chain_plan_hits += int(part.split("=", 1)[1])
             if is_graph and part.startswith("ff_skips="):
                 chain_ff_skips += int(part.split("=", 1)[1])
+            if name.endswith("/rungs") and part.startswith("hash_rows="):
+                n_rows = int(part.split("=", 1)[1])
+                hash_bin_rows += n_rows
+                hash_rows_by_matrix[name] = n_rows
     wall_s = sum(module_seconds.values())
     summary = {"plan_setup_fresh_us": setup_us,
                "plan_setup_cached_us": cached_us,
@@ -152,7 +158,13 @@ def main() -> None:
                "chain_plan_hits": chain_plan_hits,
                "chain_feed_forward_skips": chain_ff_skips,
                "chain_parity_rows": chain_parity_rows,
-               "chain_us_by_row": chain_rows}
+               "chain_us_by_row": chain_rows,
+               # hash-rung canary: rows the hybrid binner routed to the
+               # hash-accumulator family across the overall suite (CI
+               # asserts this is nonzero so the rung cannot silently
+               # regress to dense/ESC-only selection)
+               "hash_bin_rows": hash_bin_rows,
+               "hash_bin_rows_by_matrix": hash_rows_by_matrix}
     if setup_us is not None:
         print(f"# BENCH summary: setup_us={setup_us:.1f} "
               f"cached_setup_us={cached_us:.1f} wall_s={wall_s:.1f}",

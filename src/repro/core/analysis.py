@@ -60,6 +60,10 @@ class OceanConfig:
     # Dense-accumulator bitmap-query threshold (§4.1) — GPU-latency-specific,
     # kept for the cost model/ablation bookkeeping.
     bitmap_query_cr: float = 2.0
+    # Hash-accumulator rung (§3.3/§4.1): select per-row open-addressing
+    # tables for mid-density scattered rows. Rides the hybrid switch —
+    # ``hybrid=False`` ablations disable it regardless of this knob.
+    hash_rung: bool = True
     seed: int = 0
 
     def m_regs(self, er: float) -> int:

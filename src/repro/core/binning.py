@@ -6,11 +6,13 @@ Rows are assigned to accumulator configurations by two attributes:
   exactly the paper's binning-absorbs-estimation-error mechanism), and
 * output column-range width (bounds the dense VMEM window).
 
-TPU note: GPU Ocean bins hash kernels by nnz and dense kernels by range;
-here hash kernels do not exist (no atomics), so the ladder is dense windows
-by range with per-row capacities by predicted nnz, an ESC bin for short rows
-(upper-bound workflow only, as in the paper), and the column-tiled long-row
-kernel when the range exceeds the widest VMEM window.
+TPU note: GPU Ocean bins hash kernels by nnz and dense kernels by range.
+The ladder here mirrors the paper's hybrid accumulator: an ESC bin for
+short rows (upper-bound workflow only, as in the paper), hash bins — the
+atomics-free probe-insert kernel in ``kernels.spgemm_hash`` — for
+mid-density rows whose output columns scatter far wider than their nnz,
+dense windows by range for the rest, and the column-tiled long-row kernel
+when a non-hash row's range exceeds the widest VMEM window.
 """
 from __future__ import annotations
 
@@ -31,6 +33,17 @@ CAP_LADDER = (32, 64, 128, 256, 512, 1024, 2048, 4096)
 LONGROW_TILE = 2048
 # Paper: smallest block size / ESC threshold.
 ESC_THRESHOLD = 64
+# Hash-accumulator rung (paper §3.3/§4.1): largest primary-table size the
+# per-row VMEM budget admits, the smallest table the ladder allocates, and
+# the window-to-table advantage ratio required before a row leaves the
+# dense ladder — a hash table only wins when the dense window it replaces
+# would be substantially wider than the table (scattered output columns).
+HASH_MAX_TABLE = 2048
+HASH_MIN_TABLE = 32
+HASH_ADVANTAGE = 4
+# Default primary-table load factor; ``core.tuning`` measures and
+# overrides this per rung when the autotuner is consulted.
+HASH_LOAD_FACTOR = 0.75
 
 
 def round_up_ladder(x: int, ladder=CAP_LADDER) -> int:
@@ -68,11 +81,33 @@ class DenseBin:
 
 
 @dataclasses.dataclass
+class HashBin:
+    """One hash-accumulator bin: rows sharing a primary-table size.
+
+    ``spill`` is a pure function of ``table`` (never of the rows that
+    happen to share a launch), so every shard slice of the bin replays
+    the same kernel shapes — the invariant bit-identical sharding needs.
+    """
+    table: int                # pow2 primary-table slots per row
+    spill: int                # pow2 spill-table slots per row
+    rows: np.ndarray          # row ids (original matrix row indices)
+    ell_width: int            # padded A-row nnz width for this bin
+    cost: np.ndarray          # per-row estimated product counts
+
+
+def hash_spill_of(table: int) -> int:
+    """Spill-table size for a primary table: half the primary, floor 16 —
+    the shared/global split ratio (§4.1) scaled to per-row tables."""
+    return max(table // 2, 16)
+
+
+@dataclasses.dataclass
 class BinPlan:
     dense_bins: List[DenseBin]
     esc_rows: np.ndarray      # rows handled by the ESC accumulator
     esc_caps: np.ndarray      # per-row capacity for ESC rows
     empty_rows: np.ndarray    # rows with zero products
+    hash_bins: List[HashBin] = dataclasses.field(default_factory=list)
 
     @property
     def esc_costs(self) -> np.ndarray:
@@ -85,6 +120,8 @@ class BinPlan:
     def describe(self) -> Dict[str, int]:
         d = {f"dense_w{b.window}x{b.col_tiles}": len(b.rows)
              for b in self.dense_bins}
+        for b in self.hash_bins:
+            d[f"hash_t{b.table}"] = len(b.rows)
         d["esc"] = len(self.esc_rows)
         d["empty"] = len(self.empty_rows)
         return d
@@ -95,7 +132,9 @@ def plan_bins(pred_nnz: np.ndarray, products: np.ndarray,
               a_row_nnz: np.ndarray, n_cols: int, *,
               expansion: float, workflow: str,
               esc_enabled: bool = True,
-              assisted_cr: float | None = None) -> BinPlan:
+              assisted_cr: float | None = None,
+              hash_enabled: bool = True,
+              load_factor: float = HASH_LOAD_FACTOR) -> BinPlan:
     """Assign every output row to an accumulator configuration.
 
     pred_nnz:   per-row predicted output nnz (estimate / exact / upper bound)
@@ -109,6 +148,13 @@ def plan_bins(pred_nnz: np.ndarray, products: np.ndarray,
                 feed is absorbed by the overflow fallback like any other
                 undersized bin)
     assisted_cr: §4.1 — divide upper-bound capacities by a conservative CR.
+    hash_enabled: select the hash-accumulator rung for mid-density rows
+                whose output columns are scattered across a window much
+                wider than their predicted nnz (compression ratio between
+                the ESC and dense thresholds). Disabled in the V1/V2
+                ablations alongside ESC.
+    load_factor: primary hash tables are sized ``pow2(alloc/load_factor)``
+                (``core.tuning`` supplies the measured value per rung).
     """
     m = len(pred_nnz)
     products = np.asarray(products)
@@ -136,6 +182,23 @@ def plan_bins(pred_nnz: np.ndarray, products: np.ndarray,
 
     dense_mask = (~empty) & (~esc_mask)
     caps = round_up_ladder_vec(alloc)
+
+    # Hash rung (paper §3.3): rows whose predicted nnz fits a VMEM-sized
+    # table but whose output columns scatter across a window at least
+    # HASH_ADVANTAGE times wider than that table. Dense accumulation would
+    # pay for the whole window; the hash table pays only for the nnz.
+    # Sufficiently sparse long rows (width > the widest dense window) are
+    # absorbed here too instead of the column-tiled re-streaming kernel.
+    hash_mask = np.zeros(m, bool)
+    table_of = np.zeros(m, np.int64)
+    if hash_enabled:
+        want = np.ceil(np.maximum(alloc, 1.0) / max(load_factor, 1e-3))
+        exp2 = 2 ** np.ceil(np.log2(np.maximum(want, 1.0)))
+        table_of = np.maximum(exp2.astype(np.int64), HASH_MIN_TABLE)
+        hash_mask = (dense_mask & (table_of <= HASH_MAX_TABLE)
+                     & (np.asarray(width, np.int64)
+                        >= HASH_ADVANTAGE * table_of))
+        dense_mask &= ~hash_mask
 
     idx = np.nonzero(dense_mask)[0]
     max_w = WINDOW_LADDER[-1]
@@ -165,7 +228,19 @@ def plan_bins(pred_nnz: np.ndarray, products: np.ndarray,
                                    ell_width=ell,
                                    cost=products[rows_arr].astype(np.int64)))
 
+    hash_bins = []
+    hidx = np.nonzero(hash_mask)[0]
+    if len(hidx):
+        tkeys = table_of[hidx]
+        for t in np.unique(tkeys):
+            rows_arr = hidx[tkeys == t]
+            ell = pow2_at_least(int(a_row_nnz[rows_arr].max()), floor=8)
+            hash_bins.append(HashBin(
+                table=int(t), spill=hash_spill_of(int(t)), rows=rows_arr,
+                ell_width=ell, cost=products[rows_arr].astype(np.int64)))
+
     esc_rows = np.nonzero(esc_mask)[0]
     esc_caps = products[esc_rows].astype(np.int64)
     return BinPlan(dense_bins=dense_bins, esc_rows=esc_rows,
-                   esc_caps=esc_caps, empty_rows=np.nonzero(empty)[0])
+                   esc_caps=esc_caps, empty_rows=np.nonzero(empty)[0],
+                   hash_bins=hash_bins)

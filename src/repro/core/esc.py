@@ -167,9 +167,22 @@ def symbolic_exact(a_indptr, a_indices, b_indptr, b_indices,
     return counts
 
 
+def ensure_esc_capacity(nnz: int, out_cap: int, *, where: str = "ESC") -> int:
+    """Single overflow gate for every ESC materialization point.
+
+    ESC capacities are upper bounds (products are exact), so tripping this
+    indicates a sizing bug — one raise site keeps the message and the
+    trigger condition (strictly greater, capacity == nnz is fine)
+    identical between the serial path and the sharded/pipelined merge.
+    """
+    nnz = int(nnz)
+    if nnz > out_cap:
+        raise EscOverflowError(
+            f"{where} overflow: nnz {nnz} > capacity {out_cap}")
+    return nnz
+
+
 def esc_to_csr(res: ESCResult, shape, out_cap: int) -> CSR:
     """Host-side wrapper: materialize an ESCResult as a CSR (nnz <= out_cap)."""
-    nnz = int(res.nnz)
-    if nnz > out_cap:
-        raise EscOverflowError(f"ESC overflow: nnz {nnz} > capacity {out_cap}")
+    nnz = ensure_esc_capacity(res.nnz, out_cap)
     return CSR(res.indptr, res.indices, res.values, tuple(shape), nnz)

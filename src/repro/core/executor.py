@@ -52,8 +52,8 @@ from .dispatch import (Launch, collect_in_completion_order, device_context,
 from .esc import EscOverflowError
 from .formats import (CSR, PAD_COL, csr_from_arrays, csr_rows_to_ell,
                       pow2_at_least)
-from .planner import (DenseBinExec, EscExec, ExecutionPlan, OceanReport,
-                      gather_rows)
+from .planner import (DenseBinExec, EscExec, ExecutionPlan, HashBinExec,
+                      OceanReport, gather_rows)
 
 SERIAL = "serial"
 PIPELINED = "pipelined"
@@ -174,10 +174,7 @@ def _filter_slab(slab: _Slab, post: MergePostOps
 def _esc_to_slab(res, rows: np.ndarray, num_rows: int,
                  out_cap: int) -> Tuple[_Slab, int]:
     """Convert an ESCResult over a row subset into a slab."""
-    nnz = int(res.nnz)
-    if nnz > out_cap:
-        # capacity was an upper bound; this indicates a bug, not estimation
-        raise EscOverflowError(f"ESC overflow: nnz {nnz} > capacity {out_cap}")
+    nnz = esc_mod.ensure_esc_capacity(res.nnz, out_cap, where="ESC shard")
     # shape-bucketed ESC shards carry inert pad rows past num_rows (zero
     # counts by construction); slice them off before slab assembly
     counts = np.asarray(res.indptr[1:] - res.indptr[:-1])[:num_rows]
@@ -208,6 +205,24 @@ def _run_dense_bin(be: DenseBinExec, a_values: np.ndarray, b_cols_pad,
         be.a_rows, a_vals, be.a_starts, be.a_lens, be.row_lo,
         b_cols_pad, b_vals_pad, window=be.window,
         col_tiles=be.col_tiles, cap=be.cap, p_cap=be.p_cap)
+
+
+def _run_hash_bin(hb: HashBinExec, a_values: np.ndarray, b_cols_pad,
+                  b_vals_pad, n_cols: int):
+    """Dispatch one hash bin; returns device arrays (cols, vals, nnz).
+
+    Same per-row-independence contract as dense bins: each row owns its
+    tables, table/spill/f_chunk come from the bin (never the shard), and
+    shard slices carry inert pad rows plus the per-rung ``p_cap`` for the
+    XLA path — so any row subset replays one jit specialization and
+    produces the full bin's per-row output bit for bit.
+    """
+    a_vals = jax.numpy.asarray(
+        kops.gather_bin_values(a_values, hb.pos, hb.valid))
+    return kops.hash_bin_op(
+        hb.a_rows, a_vals, hb.a_starts, hb.a_lens, b_cols_pad, b_vals_pad,
+        table=hb.table, spill=hb.spill, n_cols=n_cols, p_cap=hb.p_cap,
+        f_chunk=hb.f_chunk)
 
 
 def _run_esc_bin(ex: EscExec, a_values: np.ndarray, b: CSR, *,
@@ -266,10 +281,12 @@ class _ShardWork:
     device: Optional[object]
     dense: List[DenseBinExec]
     esc: Optional[EscExec]
+    hash: List[HashBinExec] = dataclasses.field(default_factory=list)
 
 
 def _shards_of_plan(plan: ExecutionPlan) -> List[_ShardWork]:
-    return [_ShardWork(device=None, dense=plan.dense, esc=plan.esc)]
+    return [_ShardWork(device=None, dense=plan.dense, esc=plan.esc,
+                       hash=plan.hash)]
 
 
 def _dispatch(shards: List[_ShardWork], a_values: np.ndarray,
@@ -287,7 +304,7 @@ def _dispatch(shards: List[_ShardWork], a_values: np.ndarray,
     multi = len(shards) > 1
     b_cols_host, b_vals_host = kops.pad_b_flat(b)
     for shard in shards:
-        if not shard.dense and shard.esc is None:
+        if not shard.dense and not shard.hash and shard.esc is None:
             continue
         with device_context(shard.device):
             if multi and shard.device is not None:
@@ -298,6 +315,11 @@ def _dispatch(shards: List[_ShardWork], a_values: np.ndarray,
             for be in shard.dense:
                 arrays = _run_dense_bin(be, a_values, b_cols_pad, b_vals_pad)
                 items.append(Launch(("dense", be), order, tuple(arrays)))
+                order += 1
+            for hb in shard.hash:
+                arrays = _run_hash_bin(hb, a_values, b_cols_pad, b_vals_pad,
+                                       b.n)
+                items.append(Launch(("hash", hb), order, tuple(arrays)))
                 order += 1
             if shard.esc is not None:
                 b_esc = (tuple(jax.device_put(x, shard.device)
@@ -314,8 +336,8 @@ def _materialize(it: Launch) -> _Slab:
     """Pull one pending launch to the host (blocks only on this item) and
     shape it as a slab, dropping any shape-bucketing pad rows."""
     kind, exec_ = it.tag
-    if kind == "dense":
-        be: DenseBinExec = exec_
+    if kind in ("dense", "hash"):
+        be = exec_
         nv = be.n_valid
         cols, vals, nnz = (np.asarray(x) for x in it.arrays)
         return _Slab(be.rows, cols[:nv], vals[:nv],
@@ -356,10 +378,13 @@ class _MergeState:
         if self.raw_counts is not None:
             # dense-bin nnz counts are exact even past the slab capacity
             # (presence comes from the full accumulator window), so raw
-            # sizes are right here; overflowed rows get re-written with
-            # the identical values when the fallback slab lands
+            # sizes are right here. Hash-bin counts for *overflowed* rows
+            # are occupied+failed-inserts (an overcount of distinct) —
+            # but every overflowed row's count is re-written with the
+            # exact value when the fallback slab lands, before finalize,
+            # so the fed-forward sizes are exact on every path.
             self.raw_counts[slab.rows] = slab.nnz
-        if it.tag[0] == "dense":   # ESC capacities are upper bounds
+        if it.tag[0] in ("dense", "hash"):  # ESC caps are upper bounds
             over = slab.nnz > slab.cols.shape[1]
             if over.any():
                 self.overflow[it.order] = slab.rows[over]
@@ -425,7 +450,7 @@ def _run_overflow_fallback(state: _MergeState, products: np.ndarray,
     if rows is None:
         return 0
     sub = gather_rows(a, rows)
-    p_cap = pow2_at_least(int(products[rows].sum()) + 1, floor=64)
+    p_cap = pow2_at_least(int(products[rows].sum()), floor=64)
     res = esc_mod.esc_spgemm(
         sub.indptr, sub.indices, sub.values, b.indptr, b.indices,
         b.values, p_cap=p_cap, out_cap=p_cap, num_rows_a=sub.m,
@@ -576,7 +601,8 @@ def execute_sharded_plan(splan, a: CSR, b: CSR, *,
     if stage is None:
         stage = {"analysis": 0.0, "prediction": 0.0, "binning": 0.0,
                  "partition": 0.0}
-    shards = [_ShardWork(device=sh.device, dense=sh.dense, esc=sh.esc)
+    shards = [_ShardWork(device=sh.device, dense=sh.dense, esc=sh.esc,
+                         hash=sh.hash)
               for sh in splan.shards]
     return _execute(splan.plan, shards, a, b, stage=stage,
                     cache_hit=cache_hit, mode=executor,

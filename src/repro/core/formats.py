@@ -50,6 +50,8 @@ def pow2_at_least(x: int, *, floor: int) -> int:
     ``floor`` is explicit because call sites deliberately differ (ELL
     widths start at 8, product capacities at 64).
     """
+    if floor <= 0:
+        raise ValueError(f"pow2_at_least floor must be positive, got {floor}")
     v = floor
     while v < x:
         v *= 2

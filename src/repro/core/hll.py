@@ -120,7 +120,11 @@ def estimate_cardinality(sketches: jax.Array, clip_max: int | None = None) -> ja
     e_raw = _alpha(m) * m * m / inv_sum
     v = jnp.sum(sketches == 0, axis=-1).astype(jnp.float32)
     e_small = m * jnp.log(jnp.where(v > 0, m / jnp.maximum(v, 1e-9), 1.0))
-    e = jnp.where((e_raw <= 2.5 * m) & (v > 0), e_small, e_raw)
+    # Small-range gate on the *linear-counting* estimate (HLL++ refinement):
+    # gating on e_raw is discontinuous at the 2.5m cutoff — a sketch whose
+    # raw estimate sits just above it but still has zero registers would
+    # skip the correction while a near-identical one takes it.
+    e = jnp.where((e_small <= 2.5 * m) & (v > 0), e_small, e_raw)
     if clip_max is not None:
         e = jnp.clip(e, 0.0, float(clip_max))
     return e

@@ -33,7 +33,7 @@ import numpy as np
 # here unchanged for the established API.
 from .dispatch import DeviceSpec, resolve_devices, topology_key
 from .formats import flat_gather_index, pow2_at_least
-from .planner import DenseBinExec, EscExec, ExecutionPlan
+from .planner import DenseBinExec, EscExec, ExecutionPlan, HashBinExec
 
 __all__ = [
     "DeviceSpec", "PlanShard", "ShardedPlan", "balanced_split",
@@ -80,7 +80,10 @@ def rung_capacity_cap(costs: np.ndarray, r_pad: int, bin_cap: int, *,
     if k <= 0:
         return min(pow2_at_least(1, floor=floor), max(bin_cap, 1))
     top = np.partition(costs, len(costs) - k)[len(costs) - k:]
-    return min(pow2_at_least(int(top.sum()) + 1, floor=floor),
+    # exact cover: a capacity equal to the worst-case sum suffices (the
+    # ESC expansion accepts position == capacity - 1), so an exact power
+    # of two must not round up to the next rung
+    return min(pow2_at_least(int(top.sum()), floor=floor),
                max(bin_cap, 1))
 
 
@@ -175,6 +178,41 @@ def _slice_dense(be: DenseBinExec, sel: np.ndarray, device) -> DenseBinExec:
         p_cap=rung_capacity_cap(be.cost, r_pad, be.p_cap))
 
 
+def _slice_hash(hb: HashBinExec, sel: np.ndarray, device) -> HashBinExec:
+    """Row-subset view of a hash bin: same table/spill/ell width, sliced
+    gather maps, device-committed ELL blocks.
+
+    Bucketed exactly like dense-bin slices (:func:`bucket_shard_rows` row
+    padding with inert ``a_lens == 0`` rows, per-rung ``p_cap`` for the
+    XLA fallback's product enumeration). ``table``/``spill``/``f_chunk``
+    come from the bin, never the shard, so every same-rung slice of one
+    bin — across devices and topologies — replays a single jit
+    specialization, and per-row table contents are independent of which
+    rows share the launch (the bit-identical-merge invariant)."""
+    n_valid = len(sel)
+    r_pad = bucket_shard_rows(n_valid, len(hb.rows))
+    pad = r_pad - n_valid
+
+    def sliced(x, fill):
+        x = np.asarray(x)
+        x = x[sel]
+        if pad:
+            x = np.concatenate(
+                [x, np.full((pad,) + x.shape[1:], fill, x.dtype)])
+        return x
+
+    def put(x, fill):
+        return jax.device_put(sliced(x, fill), device)
+    return HashBinExec(
+        table=hb.table, spill=hb.spill, rows=hb.rows[sel],
+        ell_width=hb.ell_width, pos=sliced(hb.pos, 0),
+        valid=sliced(hb.valid, False), a_rows=put(hb.a_rows, -1),
+        a_starts=put(hb.a_starts, 0), a_lens=put(hb.a_lens, 0),
+        cost=hb.cost[sel], bin_id=hb.bin_id, n_valid=n_valid,
+        p_cap=rung_capacity_cap(hb.cost, r_pad, hb.p_cap),
+        f_chunk=hb.f_chunk)
+
+
 def _slice_esc(ex: EscExec, sel: np.ndarray) -> EscExec:
     """Row-subset of the ESC bin, reusing the frozen sub-CSR structure via
     a flat segment gather.
@@ -222,6 +260,7 @@ class PlanShard:
     dense: List[DenseBinExec]
     esc: Optional[EscExec]
     cost: int                       # summed estimated products assigned
+    hash: List[HashBinExec] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -274,10 +313,11 @@ def partition_plan(plan: ExecutionPlan,
     topo = topology_key(devs)
     if len(devs) == 1:
         cost = int(sum(int(be.cost.sum()) for be in plan.dense)
+                   + sum(int(hb.cost.sum()) for hb in plan.hash)
                    + (int(plan.esc.cost.sum()) if plan.esc is not None
                       else 0))
         shard = PlanShard(index=0, device=devs[0], dense=list(plan.dense),
-                          esc=plan.esc, cost=cost)
+                          esc=plan.esc, cost=cost, hash=list(plan.hash))
         return ShardedPlan(plan=plan, devices=devs, shards=[shard],
                            topology=topo,
                            shard_costs=np.asarray([cost], np.int64))
@@ -286,11 +326,16 @@ def partition_plan(plan: ExecutionPlan,
     heap = [(0, i) for i in range(d)]
     heapq.heapify(heap)
     dense_by_shard: List[List[DenseBinExec]] = [[] for _ in range(d)]
+    hash_by_shard: List[List[HashBinExec]] = [[] for _ in range(d)]
     esc_by_shard: List[Optional[EscExec]] = [None] * d
     for be in plan.dense:
         for i, sel in enumerate(balanced_split(be.cost, d, heap)):
             if len(sel):
                 dense_by_shard[i].append(_slice_dense(be, sel, devs[i]))
+    for hb in plan.hash:
+        for i, sel in enumerate(balanced_split(hb.cost, d, heap)):
+            if len(sel):
+                hash_by_shard[i].append(_slice_hash(hb, sel, devs[i]))
     if plan.esc is not None:
         for i, sel in enumerate(balanced_split(plan.esc.cost, d, heap)):
             if len(sel):
@@ -299,7 +344,8 @@ def partition_plan(plan: ExecutionPlan,
     for load, i in heap:
         loads[i] = load
     shards = [PlanShard(index=i, device=devs[i], dense=dense_by_shard[i],
-                        esc=esc_by_shard[i], cost=int(loads[i]))
+                        esc=esc_by_shard[i], cost=int(loads[i]),
+                        hash=hash_by_shard[i])
               for i in range(d)]
     return ShardedPlan(plan=plan, devices=devs, shards=shards, topology=topo,
                        shard_costs=loads)

@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.kernels import ops as kops
 from . import esc as esc_mod
+from . import tuning as tuning_mod
 from .analysis import (AnalysisResult, OceanConfig, analyze,
                        sharded_merge_estimate, sketches_for)
 from .binning import BinPlan, plan_bins
@@ -137,6 +138,34 @@ class DenseBinExec:
 
 
 @dataclasses.dataclass
+class HashBinExec:
+    """One hash-accumulator bin with its structure-only kernel inputs.
+
+    ``table``/``spill`` are pure functions of the bin (``binning.HashBin``
+    invariant), never of a shard slice, so every slice replays the same
+    kernel specialization. ``f_chunk`` is the autotuned DMA tile for the
+    Pallas path (``core.tuning``), frozen at plan-build time so cached
+    plans replay their measured choice.
+    """
+    table: int
+    spill: int
+    rows: np.ndarray
+    ell_width: int
+    pos: np.ndarray            # (R, ell) flat gather into A's nnz arrays
+    valid: np.ndarray          # (R, ell) bool
+    a_rows: jax.Array          # (R, ell) int32 — B-row ids
+    a_starts: jax.Array        # (R, ell) int32
+    a_lens: jax.Array          # (R, ell) int32
+    cost: np.ndarray           # (R,) int64 per-row estimated product counts
+    bin_id: int
+    n_valid: int               # real rows; kernel rows beyond are inert
+    p_cap: int                 # static product capacity for the XLA path
+                               # (bin-level pow2 cover; shard slices carry
+                               # the per-rung ladder value)
+    f_chunk: int = 128
+
+
+@dataclasses.dataclass
 class EscExec:
     """The ESC bin: precomputed sub-CSR structure + capacities.
 
@@ -181,6 +210,7 @@ class ExecutionPlan:
     total_products: int
     m_regs: int
     b_sketches: Optional[jax.Array]
+    hash: List[HashBinExec] = dataclasses.field(default_factory=list)
     build_seconds: Dict[str, float] = dataclasses.field(default_factory=dict)
     # how the analysis stage ran when this plan was built (surfaced into
     # OceanReport on every execution of the plan)
@@ -279,9 +309,13 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
     t0 = time.perf_counter()
     sketches = analysis.b_sketches
     if wf == "known":
-        # feed-forward: the exact sizes are the prediction, at zero cost
+        # feed-forward: the exact sizes are the prediction, at zero cost.
+        # A stale/elided feed can report 0 for a row that is provably
+        # non-empty (products > 0 implies structural nnz >= 1); clamp to 1
+        # so capacity ladders never size a live row's table from 0 and the
+        # overflow fallback stays a correction, not a crutch.
         pred = np.asarray(known_sizes, np.float64)
-        pred = np.where(products > 0, np.maximum(pred, 0.0), 0.0)
+        pred = np.where(products > 0, np.maximum(pred, 1.0), 0.0)
         pred = np.minimum(pred, products)
     elif wf == "estimation":
         if sketches is None:
@@ -295,7 +329,7 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
         pred = np.where(products > 0, pred, 0.0)
         pred = np.minimum(pred, products)  # distinct count <= products
     elif wf == "symbolic":
-        p_cap = pow2_at_least(total_products + 1, floor=64)
+        p_cap = pow2_at_least(total_products, floor=64)
         pred = np.asarray(
             esc_mod.symbolic_exact(a.indptr, a.indices, b.indptr, b.indices,
                                    p_cap=p_cap, num_rows_a=a.m,
@@ -308,10 +342,18 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
     t0 = time.perf_counter()
     assisted_cr = analysis.conservative_cr if (assisted and wf == "upper_bound"
                                                and analysis.cr_mean) else None
+    # the hash rung rides the hybrid-accumulator switch (V1/V2 ablations
+    # disable it with ESC) plus its own config knob; the measured load
+    # factor steers how binning sizes primary tables
+    hash_enabled = hybrid and cfg.hash_rung
+    load_factor = (tuning_mod.hash_tuning_for(tuning_mod.REFERENCE_RUNG)
+                   .load_factor if hash_enabled
+                   else tuning_mod.DEFAULT_TUNING.load_factor)
     plan = plan_bins(pred, products, out_lo, out_hi, a_row_nnz, b.n,
                      expansion=cfg.expansion_for(analysis.m_regs),
                      workflow=wf, esc_enabled=hybrid,
-                     assisted_cr=assisted_cr)
+                     assisted_cr=assisted_cr, hash_enabled=hash_enabled,
+                     load_factor=load_factor)
     if not hybrid:
         # V1/V2: long rows fall back to the global ESC pass instead of the
         # column-tiled kernel (the paper's 'nonadaptive global kernel').
@@ -323,7 +365,7 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
             esc_rows=np.concatenate([plan.esc_rows, longrow_rows]),
             esc_caps=np.concatenate(
                 [plan.esc_caps, products[longrow_rows]]),
-            empty_rows=plan.empty_rows)
+            empty_rows=plan.empty_rows, hash_bins=plan.hash_bins)
 
     # Freeze per-bin structure: gather maps + value-independent ELL blocks.
     dense_execs: List[DenseBinExec] = []
@@ -341,13 +383,29 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
             a_starts=jnp.asarray(a_starts), a_lens=jnp.asarray(a_lens),
             row_lo=row_lo, cost=np.asarray(bn.cost, np.int64),
             bin_id=bin_id, n_valid=len(bn.rows),
-            p_cap=pow2_at_least(bin_products + 1, floor=64)))
+            p_cap=pow2_at_least(bin_products, floor=64)))
+
+    hash_execs: List[HashBinExec] = []
+    for hash_id, hb in enumerate(plan.hash_bins):
+        pos, valid, a_rows, a_starts, a_lens = kops.prep_bin_structure(
+            a, b, hb.rows, hb.ell_width)
+        bin_products = int(np.asarray(a_lens, np.int64).sum())
+        tuned = tuning_mod.hash_tuning_for(hb.table)
+        hash_execs.append(HashBinExec(
+            table=hb.table, spill=hb.spill, rows=hb.rows,
+            ell_width=hb.ell_width, pos=pos, valid=valid,
+            a_rows=jnp.asarray(a_rows), a_starts=jnp.asarray(a_starts),
+            a_lens=jnp.asarray(a_lens),
+            cost=np.asarray(hb.cost, np.int64),
+            bin_id=len(dense_execs) + hash_id, n_valid=len(hb.rows),
+            p_cap=pow2_at_least(bin_products, floor=64),
+            f_chunk=tuned.f_chunk))
 
     esc_exec = None
     if len(plan.esc_rows):
         rows = plan.esc_rows
         sub_ptr, src = flat_gather_index(a.indptr, rows)
-        p_cap = pow2_at_least(int(products[rows].sum()) + 1, floor=64)
+        p_cap = pow2_at_least(int(products[rows].sum()), floor=64)
         esc_exec = EscExec(rows=rows, sub_indptr=sub_ptr.astype(np.int32),
                            sub_indices=np.asarray(a.indices)[src], src=src,
                            p_cap=p_cap, out_cap=p_cap,
@@ -358,7 +416,7 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
     return ExecutionPlan(
         key=key, shape_a=a.shape, shape_b=b.shape, workflow=wf,
         assisted=assisted, hybrid=hybrid, cfg=cfg, products=products,
-        out_lo=out_lo, dense=dense_execs, esc=esc_exec,
+        out_lo=out_lo, dense=dense_execs, esc=esc_exec, hash=hash_execs,
         empty_rows=plan.empty_rows, bins_describe=plan.describe(),
         er=analysis.er, sampled_cr=analysis.sampled_cr,
         nproducts_avg=analysis.nproducts_avg, total_products=total_products,

@@ -98,7 +98,9 @@ def _merge_kernel(a_ell_ref, sk_ref, merged_ref, est_ref, *, m_regs: int):
         v = jnp.sum(regs == 0).astype(jnp.float32)
         e_small = m_regs * jnp.log(
             jnp.where(v > 0, m_regs / jnp.maximum(v, 1e-9), 1.0))
-        est = jnp.where((e_raw <= 2.5 * m_regs) & (v > 0), e_small, e_raw)
+        # lockstep with core.hll.estimate_cardinality: small-range gate on
+        # the linear-counting estimate, not e_raw (boundary continuity)
+        est = jnp.where((e_small <= 2.5 * m_regs) & (v > 0), e_small, e_raw)
         est_ref[0, 0] = est
 
 

@@ -18,6 +18,7 @@ from repro.core.formats import (CSR, PAD_COL, csr_rows_to_ell, pad_axis,
                                 pow2_at_least)
 from . import hll as khll
 from . import spgemm_dense as kdense
+from . import spgemm_hash as khash
 
 ROW_BLOCK = khll.ROW_BLOCK
 ELL_BLOCK = khll.ELL_BLOCK
@@ -179,13 +180,131 @@ def dense_bin_op(a_rows, a_vals, a_starts, a_lens, row_lo, b_cols_pad,
             window=window, col_tiles=col_tiles, interpret=use_interpret())
     else:
         if p_cap is None:
-            p_cap = pow2_at_least(int(jnp.sum(a_lens)) + 1, floor=64)
+            p_cap = pow2_at_least(int(jnp.sum(a_lens)), floor=64)
         acc, cnt = _dense_bin_xla(
             a_rows, a_vals, a_starts, a_lens, row_lo, b_cols_pad, b_vals_pad,
             window=window, col_tiles=col_tiles, p_cap=p_cap)
     if cap is None:
         cap = window * col_tiles
     return extract_window_rows(acc, cnt, row_lo, cap=cap)
+
+
+# ---------------------------------------------------------------------------
+# Hash-accumulator bin op + table -> CSR-slab extraction
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def extract_hash_rows(keys, vals, skeys, svals, fail):
+    """Compact per-row hash tables (primary + spill) into CSR slabs.
+
+    Concatenates both tables, sorts each row by column (empty slots to a
+    big sentinel) and left-packs the occupied entries — the hash analogue
+    of ``extract_window_rows``. Slab width is ``table + spill``; per-row
+    nnz = occupied slots + failed inserts, so ``nnz > width`` iff the
+    row's distinct-column count exceeded both tables (the executor's
+    overflow scan condition; failed rows re-run through exact ESC).
+    Returns (cols (R, table+spill) int32 padded with PAD_COL,
+             vals (R, table+spill), nnz (R,) int32).
+    """
+    k = jnp.concatenate([keys, skeys], axis=1)
+    v = jnp.concatenate([vals, svals], axis=1)
+    big = jnp.int32(2**30)
+    key = jnp.where(k >= 0, k, big)
+    key_s, val_s = jax.lax.sort((key, v), dimension=1, num_keys=1)
+    occ = jnp.sum(k >= 0, axis=1).astype(jnp.int32)
+    nnz = occ + fail[:, 0]
+    slot = jax.lax.broadcasted_iota(jnp.int32, key_s.shape, 1)
+    ok = (slot < occ[:, None]) & (key_s < big)
+    cols = jnp.where(ok, key_s, PAD_COL)
+    out_vals = jnp.where(ok, val_s, 0)
+    return cols, out_vals, nnz
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("table", "spill", "n_cols", "p_cap"))
+def _hash_bin_xla(a_rows, a_vals, a_starts, a_lens, b_cols, b_vals,
+                  *, table: int, spill: int, n_cols: int, p_cap: int):
+    """Vectorized XLA executor for a hash bin — identical slab semantics to
+    the Pallas kernel + ``extract_hash_rows``. Enumerates all products
+    (same scheme as ``_dense_bin_xla``), sorts by packed (row, col) key and
+    segment-sums duplicates; per-(row, col) accumulation order equals the
+    kernel's insertion order (product enumeration order), and the exact
+    per-row distinct count crosses ``table + spill`` exactly when the
+    kernel's occupied+failed count does, so overflow routing matches."""
+    r, e = a_rows.shape
+    width = table + spill
+    lens_flat = a_lens.reshape(-1).astype(jnp.int32)
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.cumsum(lens_flat).astype(jnp.int32)])
+    total = offs[-1]
+    p = jnp.arange(p_cap, dtype=jnp.int32)
+    j = jnp.clip(jnp.searchsorted(offs, p, side="right").astype(jnp.int32)
+                 - 1, 0, r * e - 1)
+    t = p - offs[j]
+    valid = p < total
+    row = j // e
+    bpos = jnp.clip(a_starts.reshape(-1)[j] + t, 0, b_cols.shape[0] - 1)
+    col = b_cols[bpos]
+    val = jnp.where(valid, a_vals.reshape(-1)[j] * b_vals[bpos], 0)
+    ok = valid & (col >= 0)
+    # sort products by (row, col); stable sort keeps enumeration order
+    # within a (row, col) group, so the segment sums accumulate in the
+    # same order the hash kernel's sequential inserts do
+    from repro.core.esc import pack_keys
+    key = pack_keys(jnp.where(ok, row, r), col, n_cols, r, ok)
+    key_s, val_s = jax.lax.sort((key, val), dimension=0, num_keys=1)
+    valid_s = key_s != jnp.iinfo(key_s.dtype).max
+    head = jnp.ones_like(valid_s)
+    head = head.at[1:].set(key_s[1:] != key_s[:-1])
+    seg = jnp.cumsum(head.astype(jnp.int32)) - 1
+    sums = jax.ops.segment_sum(jnp.where(valid_s, val_s, 0), seg,
+                               num_segments=p_cap)
+    take = head & valid_s
+    row_d = (key_s // n_cols).astype(jnp.int32)
+    col_d = (key_s % n_cols).astype(jnp.int32)
+    rowseg = jnp.where(take, row_d, r)
+    counts = jax.ops.segment_sum(take.astype(jnp.int32), rowseg,
+                                 num_segments=r + 1)[:r]
+    # rank of each distinct entry within its row (sorted keys group rows
+    # contiguously, so rank = global distinct index - row's first index)
+    dstart = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts).astype(jnp.int32)])
+    rank = seg - dstart[jnp.clip(row_d, 0, r - 1)]
+    emit = take & (rank < width)
+    rr = jnp.where(emit, row_d, r)
+    cc = jnp.clip(jnp.where(emit, rank, 0), 0, width - 1)
+    cols_out = jnp.full((r + 1, width), PAD_COL, jnp.int32).at[rr, cc].set(
+        jnp.where(emit, col_d, PAD_COL))[:r]
+    vals_out = jnp.zeros((r + 1, width), b_vals.dtype).at[rr, cc].set(
+        jnp.where(emit, sums[seg], 0))[:r]
+    return cols_out, vals_out, counts
+
+
+def hash_bin_op(a_rows, a_vals, a_starts, a_lens, b_cols_pad, b_vals_pad,
+                *, table: int, spill: int, n_cols: int,
+                p_cap: int | None = None, f_chunk: int = F_CHUNK):
+    """Run one bin through the hash-accumulator kernel and compact it.
+
+    Returns (cols (R, table+spill), vals (R, table+spill), nnz (R,)). On
+    TPU this is the Pallas kernel + ``extract_hash_rows``; on CPU the
+    vectorized XLA executor with identical slab semantics runs instead
+    (``REPRO_CPU_NUMERIC=pallas`` forces the interpret-mode kernel).
+    ``p_cap`` pins the XLA path's static product capacity — shard slices
+    of one bin pass the per-rung ladder value so same-rung slices share a
+    single jit specialization. ``f_chunk`` is the autotuned DMA chunk for
+    the Pallas path (ignored by the XLA executor).
+    """
+    if _use_pallas_path():
+        out = khash.spgemm_hash_bin(
+            a_rows, a_vals, a_starts, a_lens, b_cols_pad, b_vals_pad,
+            table=table, spill=spill, f_chunk=f_chunk,
+            interpret=use_interpret())
+        return extract_hash_rows(*out)
+    if p_cap is None:
+        p_cap = pow2_at_least(int(jnp.sum(a_lens)), floor=64)
+    return _hash_bin_xla(
+        a_rows, a_vals, a_starts, a_lens, b_cols_pad, b_vals_pad,
+        table=table, spill=spill, n_cols=n_cols, p_cap=p_cap)
 
 
 def prep_bin_structure(a: CSR, b: CSR, rows: np.ndarray, ell_width: int):

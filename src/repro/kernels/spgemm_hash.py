@@ -1,0 +1,191 @@
+"""Binned hash-accumulator SpGEMM numeric kernel (Pallas TPU).
+
+TPU adaptation of the paper's *hybrid hash accumulator* (§3.3/§4.1): each
+output row accumulates its partial products into a per-row open-addressing
+table sized from the planner's estimated/known row nnz, with a spill slab
+for rows whose primary table fills — mirroring the paper's shared/global
+memory split:
+
+* The **primary table** (pow2 slots, linear probing, fp accumulate on hit)
+  lives in the row's VMEM-resident output block — the analogue of the
+  GPU kernel's shared-memory hash table.
+* The **spill table** is a second, smaller open-addressing table the
+  kernel falls through to when the primary has no free slot — the
+  analogue of the paper's global-memory overflow region. Entries never
+  migrate back; extraction treats both tables as one pool.
+* A **fail counter** records insert attempts that found *both* tables
+  full. Lookups scan the full table (vectorized compare over all slots),
+  so a present key is always found regardless of load: the counter is
+  nonzero iff the row's distinct-column count exceeds
+  ``table + spill``, which is exactly the overflow condition the
+  executor's merge scan re-routes to the exact ESC fallback.
+
+GPU hash accumulators insert with atomicCAS loops; TPU has no atomics, so
+one probe-insert is reformulated as a whole-table vector op: compare every
+slot against the key (hit detection), compute each empty slot's probe
+distance from the home slot, pick ``argmin`` as the insertion point, and
+commit the write through a one-hot mask. Insertion order within a row is
+the product enumeration order (A-slot major, B-position minor), matching
+the XLA fallback's segment accumulation order bit for bit.
+
+Grid: ``(rows,)`` — each program owns one row's tables; no cross-program
+races, exactly the per-row-bin guarantee the GPU kernels rely on.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .spgemm_dense import F_CHUNK
+
+# Knuth's multiplicative (Fibonacci) hash constant: 2**32 / phi.
+_FIB_MULT = 2654435769
+
+
+def _probe_insert(keys_ref, vals_ref, col, v, use, size: int):
+    """One vectorized linear-probe insert into a (1, size) pow2 table.
+
+    Accumulates ``v`` into the key's slot (existing or first empty slot in
+    probe order). Returns a bool: the insert found a slot (always true on
+    a hit; false only when the table is full and the key absent)."""
+    p = size.bit_length() - 1
+    keys = keys_ref[...]                               # (1, size)
+    vals = vals_ref[...]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, size), 1)
+    h = (jnp.maximum(col, 0).astype(jnp.uint32) * jnp.uint32(_FIB_MULT)
+         >> jnp.uint32(32 - p)).astype(jnp.int32)
+    is_col = keys == col
+    found = jnp.any(is_col)
+    # probe distance of each empty slot from the home slot h (mod size);
+    # the nearest one is where linear probing would land
+    dist = (iota - h) & (size - 1)
+    empty_dist = jnp.where(keys == -1, dist, size)
+    first = jnp.min(empty_dist)
+    target = jnp.where(found, jnp.argmax(is_col).astype(jnp.int32),
+                       (h + first) & (size - 1))
+    has_slot = found | (first < size)
+    write = (iota == target) & has_slot & use
+    keys_ref[...] = jnp.where(write, col, keys)
+    vals_ref[...] = jnp.where(write, vals + v, vals)
+    return has_slot
+
+
+def _hash_kernel(a_rows_ref, a_vals_ref, a_starts_ref, a_lens_ref,
+                 b_cols_hbm, b_vals_hbm,
+                 keys_ref, vals_ref, skeys_ref, svals_ref, fail_ref,
+                 bcol_scratch, bval_scratch, sem_c, sem_v,
+                 *, table: int, spill: int, f_chunk: int):
+    keys_ref[...] = jnp.full_like(keys_ref, -1)
+    vals_ref[...] = jnp.zeros_like(vals_ref)
+    skeys_ref[...] = jnp.full_like(skeys_ref, -1)
+    svals_ref[...] = jnp.zeros_like(svals_ref)
+    fail_ref[...] = jnp.zeros_like(fail_ref)
+
+    e_total = a_rows_ref.shape[1]
+    nnz_pad = b_cols_hbm.shape[0]
+
+    def e_body(e, _):
+        k = a_rows_ref[0, e]
+        av = a_vals_ref[0, e]
+        active = k >= 0
+        start = a_starts_ref[0, e]
+        length = jnp.where(active, a_lens_ref[0, e], 0)
+        n_chunks = pl.cdiv(length, f_chunk)
+
+        def c_body(c, _):
+            src = jnp.clip(start + c * f_chunk, 0, nnz_pad - f_chunk)
+            cp_c = pltpu.make_async_copy(
+                b_cols_hbm.at[pl.ds(src, f_chunk)], bcol_scratch, sem_c)
+            cp_v = pltpu.make_async_copy(
+                b_vals_hbm.at[pl.ds(src, f_chunk)], bval_scratch, sem_v)
+            cp_c.start()
+            cp_v.start()
+            cp_c.wait()
+            cp_v.wait()
+            # chunk may start below `start` after the clip; recompute offsets
+            pos = jax.lax.broadcasted_iota(jnp.int32, (1, f_chunk), 1) + src
+            in_row = (pos >= start) & (pos < start + length)
+            cols = bcol_scratch[...].reshape(1, f_chunk)
+            bvals = bval_scratch[...].reshape(1, f_chunk)
+
+            def i_body(i, _):
+                col = jax.lax.dynamic_slice(cols, (0, i), (1, 1))[0, 0]
+                use = (jax.lax.dynamic_slice(in_row, (0, i), (1, 1))[0, 0]
+                       & (col >= 0))
+                v = av * jax.lax.dynamic_slice(bvals, (0, i), (1, 1))[0, 0]
+                ok_t = _probe_insert(keys_ref, vals_ref, col, v, use, table)
+                rem = use & ~ok_t
+                ok_s = _probe_insert(skeys_ref, svals_ref, col, v, rem,
+                                     spill)
+                fail_ref[0, 0] += jnp.where(rem & ~ok_s, 1, 0)
+                return 0
+
+            jax.lax.fori_loop(0, f_chunk, i_body, 0)
+            return 0
+
+        jax.lax.fori_loop(0, n_chunks, c_body, 0)
+        return 0
+
+    jax.lax.fori_loop(0, e_total, e_body, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("table", "spill", "f_chunk", "interpret"))
+def spgemm_hash_bin(a_rows, a_vals, a_starts, a_lens, b_cols, b_vals,
+                    *, table: int, spill: int, f_chunk: int = F_CHUNK,
+                    interpret: bool = False):
+    """Run the hash-accumulator kernel over one bin of output rows.
+
+    a_rows:   (R, E) int32 — B-row ids per output row (pad = -1)
+    a_vals:   (R, E) float — matching A values
+    a_starts: (R, E) int32 — b_indptr[k] pregathered (pad = 0)
+    a_lens:   (R, E) int32 — B-row lengths (pad = 0)
+    b_cols:   (nnzB_pad,) int32 — flat B column indices (HBM), padded by
+              >= f_chunk
+    b_vals:   (nnzB_pad,) float
+    table/spill: pow2 slot counts for the primary/spill tables.
+    Returns (keys (R, table) int32 with -1 empties, vals (R, table),
+             skeys (R, spill), svals (R, spill), fail (R, 1) int32).
+    ``fail > 0`` iff the row's distinct count exceeds table + spill.
+    """
+    r, e = a_rows.shape
+    dtype = b_vals.dtype
+    kernel = functools.partial(_hash_kernel, table=table, spill=spill,
+                               f_chunk=f_chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, e), lambda i: (i, 0)),
+            pl.BlockSpec((1, e), lambda i: (i, 0)),
+            pl.BlockSpec((1, e), lambda i: (i, 0)),
+            pl.BlockSpec((1, e), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, table), lambda i: (i, 0)),
+            pl.BlockSpec((1, table), lambda i: (i, 0)),
+            pl.BlockSpec((1, spill), lambda i: (i, 0)),
+            pl.BlockSpec((1, spill), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, table), jnp.int32),
+            jax.ShapeDtypeStruct((r, table), dtype),
+            jax.ShapeDtypeStruct((r, spill), jnp.int32),
+            jax.ShapeDtypeStruct((r, spill), dtype),
+            jax.ShapeDtypeStruct((r, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((f_chunk,), jnp.int32),
+            pltpu.VMEM((f_chunk,), dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(a_rows, a_vals, a_starts, a_lens, b_cols, b_vals)

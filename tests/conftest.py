@@ -21,6 +21,17 @@ if "--xla_force_host_platform_device_count" not in \
         os.environ.get("XLA_FLAGS", "")
         + " --xla_force_host_platform_device_count=4").strip()
 
+# XLA-CPU's parallel LLVM codegen segfaults inside backend_compile once a
+# long-lived process has accumulated a few hundred jit specializations
+# (reproducible on 1-CPU runners ~115 tests into the tier-1 suite, at any
+# commit). Serializing codegen sidesteps the crash; the suite's kernels
+# are small enough that split codegen buys nothing here anyway.
+if "--xla_cpu_parallel_codegen_split_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_cpu_parallel_codegen_split_count=1").strip()
+
 
 def csr_bits(c):
     """Host tuples of a CSR's raw arrays (for bit-exact comparisons)."""

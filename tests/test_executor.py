@@ -411,3 +411,67 @@ def test_plan_cache_thread_safety_smoke():
     assert len(cache) <= 8
     s = cache.stats()
     assert s["hits"] + s["misses"] == cache.hits + cache.misses
+
+
+def test_ensure_esc_capacity_helper():
+    """Both overflow raise sites funnel through one helper with one
+    message format."""
+    assert esc.ensure_esc_capacity(4, 4) == 4
+    assert esc.ensure_esc_capacity(0, 4) == 0
+    with pytest.raises(esc.EscOverflowError,
+                       match=r"widget overflow: nnz 5 > capacity 4"):
+        esc.ensure_esc_capacity(5, 4, where="widget")
+
+
+# ---------------------------------------------------------------------------
+# Satellite: stale feed-forward sizes (workflow 'known')
+# ---------------------------------------------------------------------------
+
+def _assert_matches_reference(c, ref):
+    for x, y in zip(c.to_scipy_like(), ref.to_scipy_like()):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_stale_zero_feed_clamped_not_dropped():
+    """A stale/elided feed reporting 0 for provably non-empty rows must
+    not bin those rows as empty: the planner clamps live rows to >= 1 and
+    the overflow fallback corrects, bit-identically in every mode."""
+    a = formats.random_uniform_csr(60, 200, 200, 8.0)
+    ref = workflow.spgemm_reference(a, a)
+    feed = np.zeros(a.m, np.int64)  # maximally stale: all zeros
+    plan = planner.build_plan(a, a, known_sizes=feed)
+    assert plan.workflow == "known" and plan.feed_forward
+    # only truly product-free rows were binned empty
+    live = np.asarray(plan.products) > 0
+    assert len(plan.empty_rows) == int((~live).sum())
+    for n_dev in (1, 4):
+        (c1, _), (c2, _) = both_executors(plan, a, a, n_dev)
+        assert_bit_identical(c1, c2)
+        _assert_matches_reference(c1, ref)
+
+
+def test_size_feed_stale_after_rhs_mutation_stays_exact():
+    """Sizes measured against one RHS, then the RHS mutates: a SizeFeed
+    entry injected for the new pattern pair (simulating out-of-band
+    staleness) still yields the exact product — understatement is absorbed
+    by the overflow fallback, zeros by the planner's clamp."""
+    from repro.graph import chain
+    a = formats.random_uniform_csr(61, 160, 160, 6.0)
+    b1 = formats.random_uniform_csr(62, 160, 160, 6.0)
+    b2 = formats.random_uniform_csr(63, 160, 160, 14.0)  # mutated RHS
+    c1, _ = workflow.ocean_spgemm(a, b1, cache=False)
+    stale = np.diff(np.asarray(c1.indptr)).astype(np.int64)
+    # the direct known_sizes= path
+    ref2 = workflow.spgemm_reference(a, b2)
+    c2, rep = workflow.ocean_spgemm(a, b2, cache=False, known_sizes=stale)
+    assert rep.workflow == "known"
+    _assert_matches_reference(c2, ref2)
+    # the SizeFeed machinery path (chain runner consults the feed)
+    from repro.core.analysis import OceanConfig
+    feed = chain.SizeFeed()
+    key2 = planner.structure_key(a, b2, OceanConfig(), None, True, True)
+    feed.record(key2, stale)
+    runner = chain.ChainRunner(b2, size_feed=feed)
+    c3, rep3 = runner.step(a)
+    assert rep3.feed_forward, "runner must have consulted the stale feed"
+    _assert_matches_reference(c3, ref2)

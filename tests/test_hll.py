@@ -100,10 +100,9 @@ def test_error_envelope_100_trials(m_regs):
 
 def test_small_range_correction_branch():
     """Cardinalities << m must take estimate_cardinality's linear-counting
-    branch (v > 0 zero registers and e_raw <= 2.5m) and be near-exact."""
+    branch (v > 0 zero registers and e_small <= 2.5m) and be near-exact."""
     m = 64
     rng = np.random.default_rng(7)
-    alpha = 0.709  # _alpha(64)
     for true in (1, 2, 5, 10, 20, 40):
         ids = rng.choice(2**20, true, replace=False).astype(np.int32)
         csr = formats.csr_from_arrays(np.array([0, true]), ids,
@@ -112,8 +111,8 @@ def test_small_range_correction_branch():
         regs = np.asarray(hll.sketch_rows(csr, m))[0]
         # confirm the branch condition actually holds for this input
         v = int((regs == 0).sum())
-        e_raw = alpha * m * m / np.exp2(-regs.astype(np.float64)).sum()
-        assert v > 0 and e_raw <= 2.5 * m, (true, v, e_raw)
+        e_small = m * np.log(m / max(v, 1e-9))
+        assert v > 0 and e_small <= 2.5 * m, (true, v, e_small)
         est = float(np.asarray(hll.estimate_cardinality(
             hll.sketch_rows(csr, m)))[0])
         # linear counting: std ~= sqrt(m(e^t - t - 1)) with t = true/m;
@@ -133,3 +132,32 @@ def test_cohen_estimator_sane():
     mask = true > 0
     rel = np.abs(est[mask] - true[mask]) / true[mask]
     assert rel.mean() < 0.5
+
+
+@pytest.mark.parametrize("v", [0, 5, 6, 63])
+def test_small_range_gate_boundary_lockstep(v):
+    """Gate boundary cases: the linear-counting branch engages iff v > 0
+    and e_small <= 2.5m (for m = 64 that flips between v = 5 and v = 6),
+    and the core estimator and the Pallas merge kernel agree exactly on
+    which branch each side of the boundary takes."""
+    from repro.kernels import hll as khll
+    from repro.kernels import ops as kops
+    m = 64
+    regs = np.full(m, 3, np.int32)
+    regs[:v] = 0
+    e_small = m * np.log(m / v) if v > 0 else np.inf
+    e_raw = hll._alpha(m) * m * m / np.sum(np.exp2(-regs.astype(np.float64)))
+    takes_lc = v > 0 and e_small <= 2.5 * m
+    # the branch flips exactly at v >= m * e^-2.5 (v >= 6 for m = 64)
+    assert takes_lc == (v >= int(np.ceil(m * np.exp(-2.5))))
+    want = e_small if takes_lc else e_raw
+    est = float(np.asarray(hll.estimate_cardinality(
+        jnp.asarray(regs)[None, :]))[0])
+    assert est == pytest.approx(want, rel=1e-4), (v, est, want)
+    # Pallas merge kernel finalizes through the identical gate (lockstep)
+    sk = np.stack([regs, np.zeros(m, np.int32)]).astype(np.int32)
+    a_ell = np.array([[0, 1]], np.int32)  # row 1 = all-zero sentinel
+    merged, est_k = khll.hll_merge(jnp.asarray(a_ell), jnp.asarray(sk),
+                                   interpret=kops.use_interpret())
+    np.testing.assert_array_equal(np.asarray(merged)[0], regs)
+    assert float(np.asarray(est_k)[0]) == pytest.approx(want, rel=1e-4)

@@ -62,6 +62,13 @@ def test_shards_disjoint_cover_of_each_bin(name, gen, n_dev):
                               if sh.esc is not None])
         assert len(got) == len(np.unique(got))
         np.testing.assert_array_equal(np.sort(got), np.sort(plan.esc.rows))
+    # hash bins: shard slices are a disjoint cover too
+    for bin_id, hb in enumerate(plan.hash):
+        shard_rows = [s.rows for sh in splan.shards for s in sh.hash
+                      if s.bin_id == hb.bin_id]
+        got = np.concatenate(shard_rows) if shard_rows else np.zeros(0, int)
+        assert len(got) == len(np.unique(got)), "hash shard row-sets overlap"
+        np.testing.assert_array_equal(np.sort(got), np.sort(hb.rows))
 
 
 @settings(max_examples=8, deadline=None)
@@ -90,6 +97,7 @@ def test_cost_imbalance_bounded_on_suite(n_dev):
         assert splan.imbalance <= 2.0, (name, splan.describe())
         # shard costs account for every bin's total estimated cost
         want = (sum(int(be.cost.sum()) for be in plan.dense)
+                + sum(int(hb.cost.sum()) for hb in plan.hash)
                 + (int(plan.esc.cost.sum()) if plan.esc is not None else 0))
         assert int(splan.shard_costs.sum()) == want
 
@@ -282,3 +290,50 @@ def test_peek_refreshes_lru_recency_without_counting():
     cache.insert("k2", "plan2")  # evicts k1 (LRU after the peek), not k0
     assert cache.peek("k0") == "plan0"
     assert cache.peek("k1") is None
+
+
+# ---------------------------------------------------------------------------
+# Satellite: capacity-ladder edge cases
+# ---------------------------------------------------------------------------
+
+def test_pow2_at_least_floor_guard():
+    """A non-positive floor must raise, not spin forever (the doubling
+    loop can never reach x from 0 or a negative floor)."""
+    assert formats.pow2_at_least(0, floor=64) == 64
+    assert formats.pow2_at_least(64, floor=64) == 64
+    assert formats.pow2_at_least(65, floor=64) == 128
+    assert formats.pow2_at_least(5, floor=8) == 8
+    for bad in (0, -3):
+        with pytest.raises(ValueError, match="floor must be positive"):
+            formats.pow2_at_least(5, floor=bad)
+
+
+def test_rung_capacity_cap_exact_pow2_boundary():
+    """A worst-case cost sum landing exactly on a power of two must get a
+    capacity equal to it — not the next rung up (the ESC expansion accepts
+    position == capacity - 1, so an exact cover suffices)."""
+    costs = np.array([64, 64], np.int64)
+    assert partition.rung_capacity_cap(costs, 2, 1 << 20) == 128
+    assert partition.rung_capacity_cap(costs, 1, 1 << 20) == 64
+    # clamped to the bin-level capacity when the rung cover exceeds it
+    assert partition.rung_capacity_cap(costs, 2, 100) == 100
+    # degenerate rungs: no rows -> floor; bin_cap below the floor wins
+    assert partition.rung_capacity_cap(np.zeros(0, np.int64), 4, 256) == 64
+    assert partition.rung_capacity_cap(np.array([1], np.int64), 1, 1) == 1
+    # rung larger than the bin: cover is the whole-bin sum
+    assert partition.rung_capacity_cap(costs, 8, 1 << 20) == 128
+
+
+def test_exact_pow2_bin_capacities_stay_exact():
+    """End-to-end regression at the boundary: plans whose bins land on
+    exact power-of-two product counts execute bit-identically sharded."""
+    # 64 rows x 4 products each = 256 products in one dense bin
+    d = np.zeros((64, 64), np.float32)
+    d[:, :2] = 1.0
+    a = formats.csr_from_dense(d)
+    plan = planner.build_plan(a, a)
+    c1, _ = planner.execute_plan(plan, a, a)
+    for n_dev in (2, 4):
+        splan = partition.partition_plan(plan, n_dev)
+        c2, _ = planner.execute_sharded_plan(splan, a, a)
+        assert_bit_identical(c1, c2)

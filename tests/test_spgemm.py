@@ -112,10 +112,19 @@ def test_longrow_path_exercised():
     # B maps columns across the whole range
     b = formats.random_uniform_csr(1, n, n, 3.0)
     ref = workflow.spgemm_reference(a, b)
-    c, rep = workflow.ocean_spgemm(a, b, force_workflow="symbolic")
+    # hash_rung=False: the hash accumulator would otherwise absorb these
+    # sparse scattered rows (its intended behavior — tests/test_hash.py
+    # covers that routing); this test pins the column-tiled kernel itself.
+    c, rep = workflow.ocean_spgemm(a, b, OceanConfig(hash_rung=False),
+                                   force_workflow="symbolic")
     longrow_bins = [k for k in rep.bins if "x" in k and not k.endswith("x1")]
     assert longrow_bins, rep.bins
     assert_csr_equal(c, ref)
+    # with the rung enabled the same rows route to hash bins and stay exact
+    c2, rep2 = workflow.ocean_spgemm(a, b, force_workflow="symbolic")
+    assert any(k.startswith("hash_t") for k in rep2.bins if rep2.bins[k]), \
+        rep2.bins
+    assert_csr_equal(c2, ref)
 
 
 def test_analysis_table1_selection():
