@@ -45,7 +45,7 @@ def main() -> None:
     # deferred so --devices takes effect before jax initializes
     from . import (ablation, common, cr_sampling, estimation_precision,
                    estimator_vs_cohen, graph, moe_dispatch, overall,
-                   selection_validation, sharding)
+                   selection_validation, serving, sharding)
 
     modules = {
         "overall": overall,                       # Table 2 / Fig 6-7
@@ -57,6 +57,7 @@ def main() -> None:
         "moe_dispatch": moe_dispatch,              # beyond-paper
         "sharding": sharding,                      # device-partitioned exec
         "graph": graph,                            # chained SpGEMM analytics
+        "serving": serving,                        # multi-tenant pool SLOs
     }
     all_modules = modules
     common.EXECUTOR = args.executor
@@ -64,7 +65,7 @@ def main() -> None:
     if args.smoke:
         common.SMOKE = True
         modules = {k: modules[k] for k in ("overall", "moe_dispatch",
-                                           "sharding", "graph")}
+                                           "sharding", "graph", "serving")}
     if args.only:
         modules = {args.only: all_modules[args.only]}
 
@@ -94,6 +95,9 @@ def main() -> None:
     chain_parity_rows = 0
     hash_bin_rows = 0
     hash_rows_by_matrix = {}
+    serving = {"p50_us": None, "p95_us": None, "p99_us": None,
+               "occupancy": None, "shed_rate": None}
+    serving_parity_rows = 0
     for name, us, derived in rows:
         if name == "overall/plan_setup/total":
             setup_us = us
@@ -104,6 +108,9 @@ def main() -> None:
             chain_rows[name] = us
             if "parity=ok" in derived:
                 chain_parity_rows += 1
+        is_serving = name.startswith("serving/")
+        if is_serving and "parity=ok" in derived:
+            serving_parity_rows += 1
         for part in derived.split():
             if name == "overall/plan_setup/total" and \
                     part.startswith("cached_us="):
@@ -123,6 +130,11 @@ def main() -> None:
                 n_rows = int(part.split("=", 1)[1])
                 hash_bin_rows += n_rows
                 hash_rows_by_matrix[name] = n_rows
+            if is_serving:
+                for key in ("p50_us", "p95_us", "p99_us", "occupancy",
+                            "shed_rate"):
+                    if part.startswith(key + "="):
+                        serving[key] = float(part.split("=", 1)[1])
     wall_s = sum(module_seconds.values())
     summary = {"plan_setup_fresh_us": setup_us,
                "plan_setup_cached_us": cached_us,
@@ -164,7 +176,19 @@ def main() -> None:
                # asserts this is nonzero so the rung cannot silently
                # regress to dense/ESC-only selection)
                "hash_bin_rows": hash_bin_rows,
-               "hash_bin_rows_by_matrix": hash_rows_by_matrix}
+               "hash_bin_rows_by_matrix": hash_rows_by_matrix,
+               # serving-tier SLOs: benchmarks/serving.py asserts every
+               # pooled multi-tenant output bit-identical to per-request
+               # serial execution before emitting rows (parity=ok), so
+               # these fields double as the micro-batching correctness
+               # canary. shed_rate > 0 by construction (the module runs a
+               # deliberate-overload burst against a bounded queue).
+               "serving_p50_us": serving["p50_us"],
+               "serving_p95_us": serving["p95_us"],
+               "serving_p99_us": serving["p99_us"],
+               "serving_batch_occupancy": serving["occupancy"],
+               "serving_shed_rate": serving["shed_rate"],
+               "serving_parity_rows": serving_parity_rows}
     if setup_us is not None:
         print(f"# BENCH summary: setup_us={setup_us:.1f} "
               f"cached_setup_us={cached_us:.1f} wall_s={wall_s:.1f}",

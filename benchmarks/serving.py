@@ -1,0 +1,123 @@
+"""Serving-tier load test: multi-tenant pool SLOs under a request burst.
+
+Drives ``repro.serving.SpGEMMPool`` with interleaved traffic from several
+tenants (mixed sparsity patterns, one shared right-hand side so
+cross-tenant micro-batching engages) and emits the SLO metrics the tier
+is specified by:
+
+* ``serving/pool/latency``   — p50/p95/p99 request latency (submit ->
+  batch completion) over the burst, from the ServiceStats reservoir;
+* ``serving/pool/batching``  — dispatched micro-batches + mean batch
+  occupancy (requests per ``ocean_spgemm_many`` call);
+* ``serving/pool/queue``     — queue-depth peak and mean submit->dispatch
+  wait;
+* ``serving/shed``           — admission control under deliberate
+  overload: a tiny bounded queue sheds the tail of a burst
+  (``shed_rate`` > 0 by construction).
+
+Every row doubles as a correctness canary: before any timing row is
+emitted, every pooled output — across tenants, batches, and worker
+threads — is asserted **bit-identical** to per-request serial execution
+with no cache at all (``parity=ok`` in the derived column). The uploaded
+``BENCH_smoke.json`` carries the evidence for CI's serving-canary step.
+See ``docs/serving.md`` for how to read these rows.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import formats
+from repro.core.workflow import ocean_spgemm
+from repro.serving import AdmissionError, PoolConfig, SpGEMMPool
+
+from . import common
+
+TENANTS = ("acme", "globex", "initech")
+
+
+def _assert_same(c1, c2, tag):
+    for x, y in ((c1.indptr, c2.indptr), (c1.indices, c2.indices),
+                 (c1.values, c2.values)):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), tag
+
+
+def _workload(scale: int):
+    """Interleaved multi-tenant request list [(tenant, A)], one shared B."""
+    n = 96 if common.SMOKE else 160
+    b = formats.random_uniform_csr(900, n, n, 5.0)
+    patterns = [formats.random_uniform_csr(901, n, n, 6.0),
+                formats.banded_csr(902, n, n, max(8, n // 8)),
+                formats.powerlaw_csr(903, n, n, 6.0)]
+    per_tenant = 6 if common.SMOKE else 12 * max(scale, 1)
+    reqs = [(t, patterns[(ti + i) % len(patterns)])
+            for i in range(per_tenant)
+            for ti, t in enumerate(TENANTS)]
+    return reqs, b
+
+
+def run(rows, scale: int = 1) -> None:
+    reqs, b = _workload(scale)
+
+    # serial per-request references (no cache, serial executor): the
+    # ground truth every pooled output must match bit for bit
+    refs = [ocean_spgemm(a, b, cache=False, executor="serial")[0]
+            for _, a in reqs]
+
+    pool = SpGEMMPool(pool=PoolConfig(workers=2, max_batch=8,
+                                      max_queue=len(reqs) + 1,
+                                      tenant_plan_quota=8),
+                      executor=common.EXECUTOR, autostart=False)
+    t0 = time.perf_counter()
+    futs = [pool.submit(a, b, tenant=t) for t, a in reqs]
+    pool.start()
+    assert pool.drain(600), "pool failed to drain the burst"
+    wall = time.perf_counter() - t0
+    outs = [f.result(0) for f in futs]
+    for (t, _), (c, _), ref in zip(reqs, outs, refs):
+        _assert_same(c, ref, f"pooled output != serial reference ({t})")
+    st = pool.stats
+    pool.shutdown()
+
+    n = len(reqs)
+    assert st.requests == n and st.batched_requests == n
+    p50, p95, p99 = (st.latency_percentile(q) for q in (50, 95, 99))
+    rows.append((
+        "serving/pool/latency", wall / n * 1e6,
+        f"p50_us={p50 * 1e6:.1f} p95_us={p95 * 1e6:.1f} "
+        f"p99_us={p99 * 1e6:.1f} n={n} tenants={len(TENANTS)} parity=ok"))
+    rows.append((
+        "serving/pool/batching", wall / max(st.batches, 1) * 1e6,
+        f"batches={st.batches} occupancy={st.batch_occupancy:.2f} "
+        f"plan_hits={st.plan_hits} hit_rate={st.hit_rate:.2f} parity=ok"))
+    rows.append((
+        "serving/pool/queue",
+        st.queue_wait_seconds / n * 1e6,
+        f"queue_peak={st.queue_depth_peak} "
+        f"wait_us={st.queue_wait_seconds / n * 1e6:.1f} parity=ok"))
+
+    # deliberate overload: bounded queue + deferred workers => the tail
+    # of the burst sheds with AdmissionError (typed, counted)
+    limit = 8
+    shed_pool = SpGEMMPool(pool=PoolConfig(workers=1, max_batch=4,
+                                           max_queue=limit),
+                           executor=common.EXECUTOR, autostart=False)
+    accepted = []
+    for t, a in reqs:
+        try:
+            accepted.append(shed_pool.submit(a, b, tenant=t))
+        except AdmissionError:
+            pass
+    shed_pool.start()
+    assert shed_pool.drain(600)
+    for f in accepted:
+        f.result(0)
+    sst = shed_pool.stats
+    shed_pool.shutdown()
+    assert sst.shed == len(reqs) - limit and sst.requests == limit
+    assert sst.queue_depth_peak <= limit
+    rows.append((
+        "serving/shed", 0.0,
+        f"shed={sst.shed} shed_rate={sst.shed_rate:.3f} "
+        f"limit={limit} submitted={len(reqs)} parity=ok"))

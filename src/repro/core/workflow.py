@@ -40,12 +40,17 @@ __all__ = ["OceanReport", "ocean_spgemm", "ocean_spgemm_many",
            "spgemm_reference", "gather_rows"]
 
 
-def _resolve_cache(cache: Union[bool, PlanCache, None]) -> Optional[PlanCache]:
+def _resolve_cache(cache: Union[bool, PlanCache, None]):
     if cache is True:
         return DEFAULT_PLAN_CACHE
-    if isinstance(cache, PlanCache):
+    if cache is False or cache is None:
+        return None
+    if hasattr(cache, "lookup") and hasattr(cache, "insert"):
+        # a PlanCache or any compatible view — e.g. the per-tenant
+        # planner.TenantPlanCache namespaces the serving tier hands out
         return cache
-    return None
+    raise TypeError(f"cache must be bool/None or expose lookup/insert, "
+                    f"got {type(cache).__name__}")
 
 
 def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
@@ -187,7 +192,8 @@ def ocean_spgemm_many(a_list: Sequence[CSR], b: CSR,
                       cfg: OceanConfig = OceanConfig(), *,
                       force_workflow: Optional[str] = None,
                       assisted: bool = True, hybrid: bool = True,
-                      cache: Union[bool, PlanCache, None] = True,
+                      cache: Union[bool, PlanCache, None, Sequence] = True,
+                      sketch_cache: Union[Dict, Sequence, None] = None,
                       devices: DeviceSpec = None,
                       analysis_devices: DeviceSpec = None,
                       executor: str = "pipelined",
@@ -204,16 +210,36 @@ def ocean_spgemm_many(a_list: Sequence[CSR], b: CSR,
     shards each call's analysis stage (defaults to ``devices``);
     ``executor`` picks the pipelined (overlapped merge) or serial
     execution path.
+
+    ``cache`` and ``sketch_cache`` also accept a *sequence* with one entry
+    per left-hand side — the multi-tenant pool (``repro.serving.pool``)
+    micro-batches requests from different tenants into one call this way,
+    each item hitting its own tenant's plan-cache namespace and per-RHS
+    sketch bucket. Outputs are unaffected (plans and sketches are
+    deterministic functions of structure + config); only where the cached
+    artifacts live changes. When ``sketch_cache`` is ``None`` a fresh dict
+    is shared across the batch, preserving the original amortization.
     """
-    sketch_cache: Dict = {}
+    n = len(a_list)
+    caches = (list(cache) if isinstance(cache, (list, tuple))
+              else [cache] * n)
+    if isinstance(sketch_cache, (list, tuple)):
+        sketches = list(sketch_cache)
+    else:
+        shared: Dict = {} if sketch_cache is None else sketch_cache
+        sketches = [shared] * n
+    if len(caches) != n or len(sketches) != n:
+        raise ValueError(
+            f"per-item cache/sketch_cache sequences must match a_list: "
+            f"{len(caches)}/{len(sketches)} entries for {n} items")
     devs = resolve_devices(devices) if devices is not None else None
     an_devs = (resolve_devices(analysis_devices)
                if analysis_devices is not None else devs)
     return [ocean_spgemm(a, b, cfg, force_workflow=force_workflow,
-                         assisted=assisted, hybrid=hybrid, cache=cache,
-                         sketch_cache=sketch_cache, devices=devs,
+                         assisted=assisted, hybrid=hybrid, cache=c,
+                         sketch_cache=s, devices=devs,
                          analysis_devices=an_devs, executor=executor)
-            for a in a_list]
+            for a, c, s in zip(a_list, caches, sketches)]
 
 
 def spgemm_reference(a: CSR, b: CSR) -> CSR:

@@ -1,5 +1,17 @@
+"""Serving tier: traffic-facing front-ends over the Ocean planner.
+
+Two independent surfaces live here. The SpGEMM tier —
+:class:`SpGEMMService` (synchronous, plan-cached, tenant-aware) and
+:class:`SpGEMMPool` (bounded queue + admission control + worker threads +
+micro-batching on top of a service) — serves repeated sparse-multiply
+traffic; see ``docs/serving.md``. :class:`ServingEngine` is the separate
+LM text-generation engine (continuous batching over a KV cache) used by
+``launch.serve``.
+"""
 from .engine import Request, ServeConfig, ServingEngine
+from .pool import AdmissionError, PoolConfig, PoolFuture, SpGEMMPool
 from .spgemm_service import ServiceStats, SpGEMMService
 
-__all__ = ["Request", "ServeConfig", "ServingEngine",
-           "ServiceStats", "SpGEMMService"]
+__all__ = ["AdmissionError", "PoolConfig", "PoolFuture", "Request",
+           "ServeConfig", "ServiceStats", "ServingEngine", "SpGEMMPool",
+           "SpGEMMService"]

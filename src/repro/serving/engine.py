@@ -1,5 +1,10 @@
-"""Batched serving engine: static-batch continuous batching over a shared
-KV cache.
+"""LM text-generation engine: static-batch continuous batching over a
+shared KV cache.
+
+This is the *language-model* half of the serving package (driven by
+``launch.serve``); it is unrelated to the SpGEMM tier documented in
+``docs/serving.md`` — sparse-multiply traffic goes through
+``spgemm_service.SpGEMMService`` / ``pool.SpGEMMPool`` instead.
 
 Slots hold independent requests; finished slots are refilled from the queue
 each decode step (continuous batching). Prefill runs per-request into the

@@ -1,16 +1,28 @@
-"""SpGEMM serving front-end: plan-cached multiplies for repeated traffic.
+"""SpGEMM serving front-end: plan-cached, tenant-aware multiplies.
 
 Production SpGEMM traffic (graph iterations, MoE dispatch, recurring
 serving requests) multiplies the *same sparsity patterns* over and over
-with fresh values. This service wraps the planner/executor split for that
-regime: every request is keyed by structure, plans are reused from a
-per-service LRU cache, and streams against a common right-hand side share
-B sketches. It is the single-process shape of the sharded/multi-device
-serving tier on the ROADMAP.
+with fresh values. This module is the synchronous core of the serving
+tier: every request is keyed by structure, plans are reused from a
+per-service LRU cache, streams against a common right-hand side share
+B sketches, and graph chains persist feed-forward :class:`SizeFeed`\\ s
+per RHS.
+
+Multi-tenancy lives here too: ``tenant=`` on :meth:`SpGEMMService.multiply`
+/ :meth:`SpGEMMService.run_chain` routes a request through that tenant's
+private plan-cache namespace (a :class:`~repro.core.planner.TenantPlanCache`
+view over the shared LRU, with fairness-aware eviction — per-tenant quota
+before global LRU) and per-tenant sketch/size-feed buckets. The queued,
+micro-batched front-end that faces concurrent traffic is
+:class:`repro.serving.pool.SpGEMMPool`, which wraps one service instance;
+:class:`ServiceStats` carries the shared SLO metrics (latency percentiles,
+queue depth, batch occupancy, shed rate) for both. See ``docs/serving.md``.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
+import threading
 import time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -21,9 +33,27 @@ from repro.core.partition import DeviceSpec, resolve_devices
 from repro.core.planner import OceanReport, PlanCache
 from repro.core.workflow import ocean_spgemm
 
+# per-RHS buckets retained per tenant (sketch caches / size feeds); a
+# tenant's stream usually reuses a handful of right-hand sides
+RHS_BUCKETS_PER_TENANT = 8
+
+# latency reservoir bound: percentiles are exact over the most recent
+# LATENCY_SAMPLE_CAP requests (old entries age out, so p99 tracks current
+# traffic instead of averaging over the service's whole lifetime)
+LATENCY_SAMPLE_CAP = 4096
+
 
 @dataclasses.dataclass
 class ServiceStats:
+    """Request counters + SLO metrics shared by :class:`SpGEMMService`
+    and :class:`~repro.serving.pool.SpGEMMPool`.
+
+    Latency percentiles are exact linear-interpolated quantiles (numpy's
+    default convention) over a bounded sample of the most recent request
+    latencies; queue/batch/shed fields are maintained by the pool (they
+    stay zero for direct synchronous service use). See ``docs/serving.md``
+    for the metrics glossary.
+    """
     requests: int = 0
     plan_hits: int = 0
     plan_misses: int = 0
@@ -42,6 +72,17 @@ class ServiceStats:
     chain_plan_hits: int = 0
     chain_feed_forward_skips: int = 0
     chain_estimated_builds: int = 0
+    # pool traffic (serving.pool): admission control + micro-batching
+    shed: int = 0                  # requests rejected by admission control
+    batches: int = 0               # micro-batches dispatched to workers
+    batched_requests: int = 0      # requests served through those batches
+    queue_depth: int = 0           # current pool queue depth
+    queue_depth_peak: int = 0      # high-water mark of the queue
+    queue_wait_seconds: float = 0.0  # total submit -> dispatch wait
+    _latencies: List[float] = dataclasses.field(
+        default_factory=list, repr=False, compare=False)
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     @property
     def hit_rate(self) -> float:
@@ -59,6 +100,68 @@ class ServiceStats:
         done = self.chain_plan_hits + self.chain_feed_forward_skips
         return done / max(self.chain_iterations, 1)
 
+    # -------------------- SLO metrics --------------------
+
+    def record_latency(self, seconds: float) -> None:
+        """Add one request latency to the bounded reservoir (oldest
+        entries drop once ``LATENCY_SAMPLE_CAP`` is exceeded)."""
+        with self._lock:
+            self._latencies.append(seconds)
+            excess = len(self._latencies) - LATENCY_SAMPLE_CAP
+            if excess > 0:
+                del self._latencies[:excess]
+
+    def latency_sample(self) -> List[float]:
+        """Snapshot of the retained latency sample (seconds, submit
+        order)."""
+        with self._lock:
+            return list(self._latencies)
+
+    def latency_percentile(self, q: float) -> float:
+        """Exact ``q``-th percentile (0..100) of the retained sample,
+        linear interpolation between closest ranks (numpy's default
+        method). 0.0 when no latency has been recorded."""
+        with self._lock:
+            xs = sorted(self._latencies)
+        if not xs:
+            return 0.0
+        rank = (len(xs) - 1) * (q / 100.0)
+        lo = int(math.floor(rank))
+        hi = int(math.ceil(rank))
+        frac = rank - lo
+        return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+    @property
+    def p50_seconds(self) -> float:
+        return self.latency_percentile(50.0)
+
+    @property
+    def p95_seconds(self) -> float:
+        return self.latency_percentile(95.0)
+
+    @property
+    def p99_seconds(self) -> float:
+        return self.latency_percentile(99.0)
+
+    @property
+    def shed_rate(self) -> float:
+        """Fraction of submitted requests rejected by admission control
+        (shed / (served + shed))."""
+        return self.shed / max(self.requests + self.shed, 1)
+
+    @property
+    def batch_occupancy(self) -> float:
+        """Mean requests per dispatched micro-batch (1.0 = no batching
+        benefit; higher = compatible requests coalesced)."""
+        return self.batched_requests / max(self.batches, 1)
+
+    def note_queue_depth(self, depth: int) -> None:
+        """Record the pool's current queue depth (tracks the peak)."""
+        with self._lock:
+            self.queue_depth = depth
+            if depth > self.queue_depth_peak:
+                self.queue_depth_peak = depth
+
 
 class SpGEMMService:
     """Stateful SpGEMM endpoint with plan caching across requests.
@@ -72,14 +175,23 @@ class SpGEMMService:
     — analysis output is bit-identical at any shard count, so cached
     plans and sketches interchange regardless of where analysis ran.
     Default: single-device execution, as before.
+
+    ``tenant=`` on :meth:`multiply`/:meth:`run_chain` isolates a caller
+    into its own plan-cache namespace and per-tenant sketch/size-feed
+    buckets; ``tenant_plan_quota`` bounds any one tenant's share of the
+    shared plan cache (fairness-aware eviction — the tenant's own LRU
+    entry goes first). ``tenant=None`` (default) uses the shared
+    un-namespaced cache, exactly the pre-tenancy behaviour.
     """
 
     def __init__(self, cfg: OceanConfig = OceanConfig(), *,
                  plan_cache_size: int = 64, devices: DeviceSpec = None,
                  analysis_devices: DeviceSpec = None,
-                 executor: str = "pipelined"):
+                 executor: str = "pipelined",
+                 tenant_plan_quota: Optional[int] = None):
         self.cfg = cfg
-        self.plan_cache = PlanCache(maxsize=plan_cache_size)
+        self.plan_cache = PlanCache(maxsize=plan_cache_size,
+                                    tenant_quota=tenant_plan_quota)
         self.stats = ServiceStats()
         # service-wide default; individual requests may override
         self.executor = executor
@@ -90,42 +202,59 @@ class SpGEMMService:
         self.analysis_devices = (resolve_devices(analysis_devices)
                                  if analysis_devices is not None
                                  else self.devices)
-        # sketch caches per right-hand side, keyed by B's structure hash —
-        # kept small (LRU); a stream usually reuses a handful of Bs.
-        self._sketch_caches: "OrderedDict[str, Dict]" = OrderedDict()
-        # feed-forward size feeds per right-hand side (graph chains):
-        # O(m)-int entries, so they persist across chains far beyond any
-        # plan's LRU lifetime — a warm service re-plans a seen pattern
-        # pair without ever re-estimating.
-        self._size_feeds: "OrderedDict[str, object]" = OrderedDict()
+        # per-tenant namespaces of per-RHS buckets, keyed by B's structure
+        # hash. Sketch caches hold HLL sketches (value-independent, so
+        # isolation is a memory-fairness choice, not a correctness one);
+        # size feeds hold O(m)-int exact sizings that outlive any plan's
+        # LRU lifetime. None = the default (un-namespaced) tenant.
+        self._tenant_sketch_caches: Dict[Optional[str], OrderedDict] = {}
+        self._tenant_size_feeds: Dict[Optional[str], OrderedDict] = {}
 
-    def _sketch_cache_for(self, b: CSR) -> Dict:
-        return lru_bucket(self._sketch_caches, structure_hash(b), dict)
+    def plan_cache_for(self, tenant: Optional[str] = None):
+        """The plan cache a request under ``tenant`` consults: the shared
+        cache itself for ``None``, else that tenant's namespaced view."""
+        if tenant is None:
+            return self.plan_cache
+        return self.plan_cache.namespaced(tenant)
+
+    def sketch_cache_for(self, b: CSR, tenant: Optional[str] = None) -> Dict:
+        """The per-(tenant, RHS-structure) sketch bucket for ``b``."""
+        buckets = self._tenant_sketch_caches.setdefault(
+            tenant, OrderedDict())
+        return lru_bucket(buckets, structure_hash(b), dict,
+                          maxsize=RHS_BUCKETS_PER_TENANT)
 
     def multiply(self, a: CSR, b: CSR, *,
+                 tenant: Optional[str] = None,
                  force_workflow: Optional[str] = None,
                  assisted: bool = True,
                  hybrid: bool = True,
                  executor: Optional[str] = None) -> Tuple[CSR, OceanReport]:
         """Serve one C = A @ B request through the plan cache.
 
+        ``tenant`` routes the request through that tenant's cache
+        namespaces (plans, sketches); outputs are identical regardless.
         ``executor`` overrides the service default for this request
         (``"pipelined"`` overlaps the host merge with device work,
         ``"serial"`` keeps the global barrier; output is identical)."""
         t0 = time.perf_counter()
         c, report = ocean_spgemm(
             a, b, self.cfg, force_workflow=force_workflow,
-            assisted=assisted, hybrid=hybrid, cache=self.plan_cache,
-            sketch_cache=self._sketch_cache_for(b), devices=self.devices,
+            assisted=assisted, hybrid=hybrid,
+            cache=self.plan_cache_for(tenant),
+            sketch_cache=self.sketch_cache_for(b, tenant),
+            devices=self.devices,
             analysis_devices=self.analysis_devices,
             executor=executor if executor is not None else self.executor)
+        dt = time.perf_counter() - t0
         self.stats.requests += 1
         self.stats.plan_hits += int(report.plan_cache_hit)
         self.stats.plan_misses += int(not report.plan_cache_hit)
-        self.stats.total_seconds += time.perf_counter() - t0
+        self.stats.total_seconds += dt
         self.stats.setup_seconds += report.setup_seconds
         self.stats.overlap_seconds += report.overlap_seconds
         self.stats.merge_seconds += report.stage_seconds.get("merge", 0.0)
+        self.stats.record_latency(dt)
         return c, report
 
     def multiply_many(self, a_list: Sequence[CSR], b: CSR, **kw
@@ -134,11 +263,15 @@ class SpGEMMService:
         sketches, shared plan cache)."""
         return [self.multiply(a, b, **kw) for a in a_list]
 
-    def _size_feed_for(self, b: CSR):
+    def size_feed_for(self, b: CSR, tenant: Optional[str] = None):
+        """The per-(tenant, RHS-structure) feed-forward size feed."""
         from repro.graph.chain import SizeFeed
-        return lru_bucket(self._size_feeds, structure_hash(b), SizeFeed)
+        buckets = self._tenant_size_feeds.setdefault(tenant, OrderedDict())
+        return lru_bucket(buckets, structure_hash(b), SizeFeed,
+                          maxsize=RHS_BUCKETS_PER_TENANT)
 
     def run_chain(self, c0: CSR, a: CSR, iterations: int, *,
+                  tenant: Optional[str] = None,
                   post=None, square: bool = False,
                   stop_on_fixed_pattern: bool = False,
                   executor: Optional[str] = None):
@@ -149,8 +282,8 @@ class SpGEMMService:
         Plans live in a per-chain cache (heavyweight, device-resident —
         iteration-to-iteration reuse is where they pay off), while the
         feed-forward :class:`~repro.graph.chain.SizeFeed` persists on the
-        service per right-hand side: a warm service re-plans previously
-        seen pattern pairs with exact ``known_sizes`` and never
+        service per (tenant, right-hand side): a warm service re-plans
+        previously seen pattern pairs with exact ``known_sizes`` and never
         re-estimates (``ServiceStats.chain_feed_forward_skips``).
         Returns the :class:`~repro.graph.chain.ChainResult` (final CSR,
         per-iteration reports, chain stats).
@@ -158,7 +291,7 @@ class SpGEMMService:
         from repro.graph.chain import ChainRunner
         t0 = time.perf_counter()
         runner = ChainRunner(
-            a, self.cfg, size_feed=self._size_feed_for(a),
+            a, self.cfg, size_feed=self.size_feed_for(a, tenant),
             devices=self.devices, analysis_devices=self.analysis_devices,
             executor=executor if executor is not None else self.executor)
         res = runner.run(c0, iterations, post=post, square=square,

@@ -1,0 +1,370 @@
+"""Multi-tenant serving tier: worker pool, micro-batching, admission
+control, per-tenant cache fairness, and ServiceStats SLO metrics.
+
+The acceptance property mirrors tests/test_executor.py: every output the
+pool produces — across tenants, micro-batches, and worker threads — must
+be bit-identical to per-request serial execution with no cache at all.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from conftest import assert_bit_identical
+from repro.core import formats
+from repro.core.planner import PlanCache
+from repro.core.workflow import ocean_spgemm, ocean_spgemm_many
+from repro.serving import (AdmissionError, PoolConfig, SpGEMMPool,
+                           SpGEMMService)
+from repro.serving.spgemm_service import LATENCY_SAMPLE_CAP, ServiceStats
+
+
+def _mats():
+    a1 = formats.random_uniform_csr(11, 120, 120, 6.0)
+    a2 = formats.banded_csr(12, 120, 120, 24)
+    a3 = formats.powerlaw_csr(13, 120, 120, 6.0)
+    b = formats.random_uniform_csr(14, 120, 120, 5.0)
+    return a1, a2, a3, b
+
+
+def _serial_ref(a, b, **kw):
+    c, _ = ocean_spgemm(a, b, cache=False, executor="serial", **kw)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: pooled multi-tenant outputs == per-request serial
+# ---------------------------------------------------------------------------
+
+def test_pool_bit_identical_to_per_request_serial():
+    a1, a2, a3, b = _mats()
+    reqs = [(a, t) for t in ("acme", "globex", "initech")
+            for a in (a1, a2, a3, a1)]
+    refs = [_serial_ref(a, b) for a, _ in reqs]
+    with SpGEMMPool(pool=PoolConfig(workers=3, max_batch=4,
+                                    max_queue=64)) as pool:
+        futs = [pool.submit(a, b, tenant=t) for a, t in reqs]
+        outs = [f.result(120) for f in futs]
+    for (c, rep), ref in zip(outs, refs):
+        assert_bit_identical(c, ref)
+    assert pool.stats.requests == len(reqs)
+    assert pool.stats.batched_requests == len(reqs)
+    assert pool.stats.batches >= 1
+
+
+def test_pool_bit_identical_under_knob_variants():
+    """Different planning knobs are never coalesced, and each variant's
+    output still matches its serial reference."""
+    a1, a2, _, b = _mats()
+    cases = [dict(force_workflow="estimation"),
+             dict(force_workflow="upper_bound"),
+             dict(hybrid=False), dict()]
+    refs = [_serial_ref(a, b, **kw) for a in (a1, a2) for kw in cases]
+    with SpGEMMPool(pool=PoolConfig(workers=2)) as pool:
+        futs = [pool.submit(a, b, tenant="t", **kw)
+                for a in (a1, a2) for kw in cases]
+        outs = [f.result(120) for f in futs]
+    for (c, _), ref in zip(outs, refs):
+        assert_bit_identical(c, ref)
+
+
+# ---------------------------------------------------------------------------
+# Micro-batching semantics
+# ---------------------------------------------------------------------------
+
+def test_micro_batch_coalesces_compatible_requests():
+    """autostart=False pins the queue: one worker must serve 4 compatible
+    requests (same B + knobs, different tenants) as ONE batch."""
+    a1, a2, _, b = _mats()
+    pool = SpGEMMPool(pool=PoolConfig(workers=1, max_batch=8),
+                      autostart=False)
+    futs = [pool.submit(a, b, tenant=f"t{i % 2}")
+            for i, a in enumerate((a1, a2, a1, a2))]
+    pool.start()
+    assert pool.drain(120)
+    for f in futs:
+        assert f.done()
+    assert pool.stats.batches == 1
+    assert pool.stats.batched_requests == 4
+    assert pool.stats.batch_occupancy == 4.0
+    pool.shutdown()
+
+
+def test_micro_batch_respects_max_batch():
+    a1, _, _, b = _mats()
+    pool = SpGEMMPool(pool=PoolConfig(workers=1, max_batch=2,
+                                      max_queue=64), autostart=False)
+    for _ in range(5):
+        pool.submit(a1, b)
+    pool.start()
+    assert pool.drain(120)
+    assert pool.stats.batches == 3          # 2 + 2 + 1
+    assert pool.stats.batched_requests == 5
+    pool.shutdown()
+
+
+def test_micro_batch_separates_incompatible_requests():
+    """Different B objects and different planning knobs must land in
+    different batches even when queued together."""
+    a1, _, _, b = _mats()
+    b2 = formats.random_uniform_csr(15, 120, 120, 5.0)
+    pool = SpGEMMPool(pool=PoolConfig(workers=1, max_batch=8),
+                      autostart=False)
+    pool.submit(a1, b)
+    pool.submit(a1, b2)                       # different RHS
+    pool.submit(a1, b, force_workflow="upper_bound")  # different knobs
+    pool.submit(a1, b)                        # compatible with the first
+    pool.start()
+    assert pool.drain(120)
+    assert pool.stats.batches == 3
+    assert pool.stats.batched_requests == 4
+    pool.shutdown()
+
+
+def test_pool_batches_share_sketches_per_tenant_rhs():
+    """A batch executes through ocean_spgemm_many with per-(tenant, RHS)
+    sketch buckets: after serving, each tenant owns a populated bucket
+    for the shared B."""
+    a1, a2, _, b = _mats()
+    with SpGEMMPool(pool=PoolConfig(workers=1)) as pool:
+        pool.multiply(a1, b, tenant="t1", timeout=120,
+                      force_workflow="estimation")
+        pool.multiply(a2, b, tenant="t2", timeout=120,
+                      force_workflow="estimation")
+        assert pool.service.sketch_cache_for(b, "t1")
+        assert pool.service.sketch_cache_for(b, "t2")
+
+
+def test_ocean_spgemm_many_per_item_caches():
+    """Core support the pool builds on: per-item cache/sketch sequences
+    give bit-identical results and populate each tenant's namespace."""
+    a1, a2, _, b = _mats()
+    base = PlanCache(maxsize=16)
+    caches = [base.namespaced("t1"), base.namespaced("t2")]
+    outs = ocean_spgemm_many([a1, a2], b, cache=caches,
+                             sketch_cache=[{}, {}])
+    for (c, _), a in zip(outs, (a1, a2)):
+        assert_bit_identical(c, _serial_ref(a, b))
+    assert base.tenant_sizes() == {"t1": 1, "t2": 1}
+    with pytest.raises(ValueError):
+        ocean_spgemm_many([a1, a2], b, cache=[base.namespaced("t1")])
+
+
+# ---------------------------------------------------------------------------
+# Admission control + lifecycle
+# ---------------------------------------------------------------------------
+
+def test_admission_control_sheds_over_limit():
+    a1, _, _, b = _mats()
+    pool = SpGEMMPool(pool=PoolConfig(workers=1, max_queue=3),
+                      autostart=False)
+    for _ in range(3):
+        pool.submit(a1, b)
+    with pytest.raises(AdmissionError) as ei:
+        pool.submit(a1, b, tenant="late")
+    assert ei.value.tenant == "late"
+    assert ei.value.depth == 3 and ei.value.limit == 3
+    assert pool.stats.shed == 1
+    pool.start()
+    assert pool.drain(120)
+    assert pool.stats.requests == 3
+    assert pool.stats.shed_rate == pytest.approx(1 / 4)
+    assert pool.stats.queue_depth_peak == 3
+    assert pool.stats.queue_depth == 0
+    pool.shutdown()
+
+
+def test_graceful_drain_on_shutdown():
+    a1, a2, _, b = _mats()
+    pool = SpGEMMPool(pool=PoolConfig(workers=2, max_batch=2))
+    futs = [pool.submit(a, b) for a in (a1, a2, a1, a2, a1)]
+    pool.shutdown(drain=True, timeout=120)
+    for f in futs:
+        assert f.done()
+        f.result(0)  # no exceptions
+    with pytest.raises(RuntimeError):
+        pool.submit(a1, b)
+
+
+def test_shutdown_without_drain_fails_queued_futures():
+    a1, _, _, b = _mats()
+    pool = SpGEMMPool(pool=PoolConfig(workers=1), autostart=False)
+    fut = pool.submit(a1, b)
+    pool.shutdown(drain=False)
+    with pytest.raises(RuntimeError, match="shut down"):
+        fut.result(5)
+
+
+def test_worker_exception_propagates_to_future():
+    a1, _, _, b = _mats()
+    with SpGEMMPool(pool=PoolConfig(workers=1)) as pool:
+        bad = pool.submit(None, b)            # not a CSR: worker-side error
+        with pytest.raises(Exception):
+            bad.result(120)
+        good = pool.submit(a1, b)             # pool survives the failure
+        c, _ = good.result(120)
+        assert_bit_identical(c, _serial_ref(a1, b))
+
+
+# ---------------------------------------------------------------------------
+# Tenancy: namespaces + fairness-aware eviction
+# ---------------------------------------------------------------------------
+
+def test_tenant_namespaces_isolate_plans():
+    """The same structure served under two tenants builds two plans (no
+    cross-tenant leakage) but identical outputs; repeats hit per-tenant."""
+    a1, _, _, b = _mats()
+    svc = SpGEMMService()
+    c1, r1 = svc.multiply(a1, b, tenant="t1")
+    c2, r2 = svc.multiply(a1, b, tenant="t2")
+    assert not r1.plan_cache_hit and not r2.plan_cache_hit
+    assert_bit_identical(c1, c2)
+    assert svc.plan_cache.tenant_sizes() == {"t1": 1, "t2": 1}
+    _, r3 = svc.multiply(a1, b, tenant="t1")
+    assert r3.plan_cache_hit
+
+
+def test_default_tenant_uses_shared_cache():
+    """tenant=None keeps the pre-tenancy behaviour: untagged keys in the
+    shared cache, invisible to tenant accounting."""
+    a1, _, _, b = _mats()
+    svc = SpGEMMService()
+    _, r1 = svc.multiply(a1, b)
+    _, r2 = svc.multiply(a1, b)
+    assert not r1.plan_cache_hit and r2.plan_cache_hit
+    assert svc.plan_cache.tenant_sizes() == {}
+    assert len(svc.plan_cache) == 1
+
+
+def test_plan_cache_tenant_quota_evicts_own_lru_first():
+    cache = PlanCache(maxsize=16, tenant_quota=2)
+    va, vb = cache.namespaced("a"), cache.namespaced("b")
+    vb.insert("k0", "b0")                  # oldest entry globally
+    va.insert("k1", "a1")
+    va.insert("k2", "a2")
+    va.insert("k3", "a3")                  # a over quota: evicts a's k1
+    assert cache.tenant_sizes() == {"a": 2, "b": 1}
+    assert vb.lookup("k0") == "b0"         # b untouched despite being LRU
+    assert va.lookup("k1") is None
+    assert va.lookup("k2") == "a2" and va.lookup("k3") == "a3"
+
+
+def test_plan_cache_global_lru_still_bounds_total():
+    cache = PlanCache(maxsize=3, tenant_quota=2)
+    va, vb = cache.namespaced("a"), cache.namespaced("b")
+    va.insert("k1", "a1")
+    vb.insert("k1", "b1")
+    va.insert("k2", "a2")
+    vb.insert("k2", "b2")                  # 4 > maxsize: global LRU evicts
+    assert len(cache) == 3
+    assert va.lookup("k1") is None         # oldest overall went
+    assert cache.tenant_sizes() == {"a": 1, "b": 2}
+
+
+def test_service_tenant_quota_fairness_end_to_end():
+    """A tenant hammering many distinct patterns recycles its own slots;
+    a cold tenant's single plan stays warm."""
+    b = formats.random_uniform_csr(20, 100, 100, 5.0)
+    a_cold = formats.banded_csr(21, 100, 100, 16)
+    svc = SpGEMMService(plan_cache_size=32, tenant_plan_quota=2)
+    svc.multiply(a_cold, b, tenant="cold")
+    for seed in range(5):
+        a_hot = formats.random_uniform_csr(30 + seed, 100, 100, 5.0)
+        svc.multiply(a_hot, b, tenant="hot")
+    sizes = svc.plan_cache.tenant_sizes()
+    assert sizes["hot"] == 2 and sizes["cold"] == 1
+    _, rep = svc.multiply(a_cold, b, tenant="cold")
+    assert rep.plan_cache_hit
+
+
+def test_run_chain_per_tenant_size_feeds():
+    """Chains under different tenants keep separate SizeFeeds: a tenant
+    never inherits another's feed-forward sizing."""
+    adj = formats.random_uniform_csr(40, 80, 80, 4.0)
+    c0 = formats.random_uniform_csr(41, 80, 80, 3.0)
+    svc = SpGEMMService()
+    svc.run_chain(c0, adj, 2, tenant="t1")
+    feed_t1 = svc.size_feed_for(adj, "t1")
+    feed_t2 = svc.size_feed_for(adj, "t2")
+    assert feed_t1 is not feed_t2
+    assert feed_t1 is svc.size_feed_for(adj, "t1")
+
+
+# ---------------------------------------------------------------------------
+# ServiceStats: exact percentile math + accounting under a threaded burst
+# ---------------------------------------------------------------------------
+
+def test_latency_percentiles_exact_on_pinned_sample():
+    st = ServiceStats()
+    sample = [5.0, 1.0, 9.0, 3.0, 7.0, 2.0, 10.0, 4.0, 8.0, 6.0]
+    for v in sample:
+        st.record_latency(v)
+    # numpy 'linear' convention on sorted [1..10]
+    assert st.latency_percentile(0.0) == 1.0
+    assert st.latency_percentile(100.0) == 10.0
+    assert st.p50_seconds == pytest.approx(5.5)
+    assert st.p95_seconds == pytest.approx(9.55)
+    assert st.p99_seconds == pytest.approx(9.91)
+    for q in (0, 10, 25, 50, 75, 90, 95, 99, 100):
+        assert st.latency_percentile(q) == pytest.approx(
+            float(np.percentile(sample, q)))
+
+
+def test_latency_percentiles_edge_cases():
+    st = ServiceStats()
+    assert st.p50_seconds == 0.0 and st.p99_seconds == 0.0
+    st.record_latency(0.25)
+    assert st.p50_seconds == 0.25 and st.p99_seconds == 0.25
+
+
+def test_latency_reservoir_is_bounded_and_keeps_newest():
+    st = ServiceStats()
+    for i in range(LATENCY_SAMPLE_CAP + 100):
+        st.record_latency(float(i))
+    xs = st.latency_sample()
+    assert len(xs) == LATENCY_SAMPLE_CAP
+    assert xs[0] == 100.0 and xs[-1] == float(LATENCY_SAMPLE_CAP + 99)
+
+
+def test_stats_accounting_under_threaded_burst():
+    """Concurrent submitters against a tiny queue: every submission is
+    accounted exactly once as served or shed, and the queue metrics stay
+    within the admission bound."""
+    a1, a2, _, b = _mats()
+    pool = SpGEMMPool(pool=PoolConfig(workers=2, max_batch=4, max_queue=8))
+    n_threads, per_thread = 6, 10
+    futures, shed_counts, fut_lock = [], [0], threading.Lock()
+
+    def burst(tid):
+        for i in range(per_thread):
+            a = a1 if (tid + i) % 2 == 0 else a2
+            try:
+                f = pool.submit(a, b, tenant=f"tenant{tid % 3}")
+                with fut_lock:
+                    futures.append(f)
+            except AdmissionError:
+                with fut_lock:
+                    shed_counts[0] += 1
+
+    threads = [threading.Thread(target=burst, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert pool.drain(180)
+    for f in futures:
+        f.result(0)
+    st = pool.stats
+    pool.shutdown()
+    total = n_threads * per_thread
+    assert st.requests == len(futures)
+    assert st.shed == shed_counts[0]
+    assert st.requests + st.shed == total
+    assert st.batched_requests == st.requests
+    assert st.queue_depth_peak <= 8
+    assert st.queue_depth == 0
+    assert st.shed_rate == pytest.approx(st.shed / total)
+    assert st.batch_occupancy >= 1.0
+    assert len(st.latency_sample()) == st.requests
+    assert st.p99_seconds >= st.p50_seconds >= 0.0

@@ -1,0 +1,116 @@
+"""Validate relative markdown links in README.md and docs/*.md.
+
+CI's ``docs-check`` job runs this: every ``[text](target)`` whose target
+is not an absolute URL must resolve to a real file (relative to the file
+containing the link), and a ``#fragment`` pointing into a markdown file
+must match one of that file's heading anchors (GitHub slug rules).
+
+Usage: ``python tools/docs_check.py [files...]`` — with no arguments,
+checks ``README.md`` plus every ``docs/*.md`` in the repo root.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+# [text](target) — target captured up to the closing paren; images and
+# reference-style links are out of scope (the docs don't use them)
+LINK_RE = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def _rel(p: Path) -> str:
+    try:
+        return str(p.relative_to(REPO_ROOT))
+    except ValueError:
+        return str(p)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, punctuation dropped (hyphens,
+    underscores and spaces kept), spaces to hyphens."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading)       # strip inline code
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # link text only
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_anchors(md_file: Path) -> set:
+    anchors: dict = {}
+    in_fence = False
+    out = set()
+    for line in md_file.read_text(encoding="utf-8").splitlines():
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(1))
+        n = anchors.get(slug, 0)
+        anchors[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def check_file(md_file: Path) -> list:
+    errors = []
+    text = md_file.read_text(encoding="utf-8")
+    # ignore links inside fenced code blocks
+    lines, in_fence, kept = text.splitlines(), False, []
+    for line in lines:
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        kept.append("" if in_fence else line)
+    for target in LINK_RE.findall("\n".join(kept)):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:, ...
+            continue
+        path_part, _, fragment = target.partition("#")
+        dest = (md_file if not path_part
+                else (md_file.parent / path_part).resolve())
+        if not dest.exists():
+            errors.append(f"{_rel(md_file)}: broken link "
+                          f"'{target}' -> {path_part} (missing)")
+            continue
+        if fragment and dest.suffix == ".md":
+            if fragment not in heading_anchors(dest):
+                errors.append(
+                    f"{_rel(md_file)}: broken anchor "
+                    f"'{target}' (no heading '#{fragment}' in "
+                    f"{_rel(dest)})")
+    return errors
+
+
+def main(argv) -> int:
+    if argv:
+        files = [Path(a).resolve() for a in argv]
+    else:
+        files = [REPO_ROOT / "README.md"]
+        files += sorted((REPO_ROOT / "docs").glob("*.md"))
+    files = [f for f in files if f.exists()]
+    if not files:
+        print("docs-check: no markdown files found", file=sys.stderr)
+        return 1
+    errors = []
+    n_links = 0
+    for f in files:
+        errs = check_file(f)
+        errors.extend(errs)
+        n_links += len(LINK_RE.findall(f.read_text(encoding="utf-8")))
+    for e in errors:
+        print(f"::error::{e}")
+    print(f"docs-check: {len(files)} files, {n_links} links, "
+          f"{len(errors)} broken")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
