@@ -13,8 +13,9 @@ from repro.core import formats
 SMOKE = False
 
 # Set by ``run.py --executor``: which core.executor pipeline the workflow
-# benchmarks run through ("pipelined" overlaps the host merge, "serial"
-# keeps the global barrier; output is bit-identical either way).
+# benchmarks run through ("pipelined" overlaps the host merge, "threaded"
+# adds a dedicated merge-worker thread, "serial" keeps the global
+# barrier; output is bit-identical in every mode).
 EXECUTOR = "pipelined"
 
 # Set by ``run.py --analysis-shards``: how many devices the sharding

@@ -16,7 +16,11 @@ GFLOPS uses the paper's 2 x products FLOP convention. Wall times are CPU
 """
 from __future__ import annotations
 
+import jax
+import numpy as np
+
 from repro.core import planner, workflow
+from repro.kernels import ops as kops
 
 from . import common
 from .common import flops_of, geomean, suite, timeit
@@ -62,14 +66,18 @@ def run(rows: list, scale: int = 1):
             rows.append((f"overall/{name}/{mname}", t * 1e6,
                          f"gflops={gflops:.3f}"))
 
-        # host-side planning cost: fresh build vs plan-cache hit
+        # host-side planning cost: fresh build vs plan-cache hit, plus the
+        # binning prework the planner ran behind analysis wave 2
         _, rep_fresh = workflow.ocean_spgemm(a, a, cache=False, executor=ex)
         _, rep_hit = workflow.ocean_spgemm(a, a, cache=cache, executor=ex)
         assert rep_hit.plan_cache_hit
         setup_fresh.append(rep_fresh.setup_seconds)
         setup_cached.append(rep_hit.setup_seconds)
         rows.append((f"overall/plan_setup/{name}", rep_fresh.setup_seconds * 1e6,
-                     f"cached_us={rep_hit.setup_seconds * 1e6:.1f}"))
+                     f"cached_us={rep_hit.setup_seconds * 1e6:.1f} "
+                     f"wave2_overlap_us="
+                     f"{rep_fresh.wave2_overlap_seconds * 1e6:.1f} "
+                     f"wave2_overlapped={int(rep_fresh.wave2_overlapped)}"))
 
         # per-rung accumulator occupancy: how Ocean's hybrid binning split
         # this matrix across the dense-window / hash-table / ESC rungs
@@ -79,6 +87,53 @@ def run(rows: list, scale: int = 1):
         occ = " ".join(f"{k}={v}" for k, v in bins.items() if v)
         rows.append((f"overall/{name}/rungs", 0.0,
                      f"{occ} hash_rows={hash_rows}".strip()))
+
+        # per-rung hash-kernel timing: the multi-row tiled kernel (the
+        # bin's autotuned tile) against its tile=1 row-sequential
+        # degeneracy, both through the real dispatching backend path
+        # (kops.hash_bin_op — Pallas on TPU / forced-interpret, XLA twin
+        # otherwise, where tile is a no-op and the two times tie)
+        plan_obj = planner.build_plan(a, a)
+        if plan_obj.hash:
+            b_cols_pad, b_vals_pad = kops.pad_b_flat(a)
+            a_vals_np = np.asarray(a.values)
+            for hb in plan_obj.hash:
+                a_vals = kops.gather_bin_values(a_vals_np, hb.pos, hb.valid)
+
+                def rung_call(tile, hb=hb, a_vals=a_vals):
+                    jax.block_until_ready(kops.hash_bin_op(
+                        hb.a_rows, a_vals, hb.a_starts, hb.a_lens,
+                        b_cols_pad, b_vals_pad, table=hb.table,
+                        spill=hb.spill, n_cols=a.n, p_cap=hb.p_cap,
+                        f_chunk=hb.f_chunk, tile=tile))
+
+                rung_call(hb.tile)  # compile outside the timed region
+                rung_call(1)        # (timeit skips warmup under --smoke)
+                t_tiled = timeit(lambda: rung_call(hb.tile))
+                t_seq = timeit(lambda: rung_call(1))
+                rows.append((
+                    f"overall/{name}/kernel_rung/hash_t{hb.table}",
+                    t_tiled * 1e6,
+                    f"tile={hb.tile} rows={hb.n_valid} "
+                    f"tile1_us={t_seq * 1e6:.1f} "
+                    f"tile_speedup=x{t_seq / max(t_tiled, 1e-12):.2f}"))
+
+        # threaded-executor overlap: merge work the worker thread ran
+        # while the collect loop was still pulling slabs (feeds the CI
+        # overlap canary; output parity with serial is asserted by the
+        # sharding module before its rows are emitted)
+        thr_frac = thr_us = 0.0
+        for _ in range(3):
+            _, rep_thr = workflow.ocean_spgemm(a, a, cache=cache,
+                                               executor="threaded")
+            thr_frac = max(thr_frac, rep_thr.merge_overlap_frac)
+            thr_us = max(thr_us, rep_thr.overlap_seconds * 1e6)
+            if thr_frac > 0.0:
+                break
+        rows.append((f"overall/{name}/threaded",
+                     0.0,
+                     f"threaded_merge_overlap_frac={thr_frac:.4g} "
+                     f"threaded_overlap_us={thr_us:.1f}"))
 
     for mname, gs in per_method.items():
         rows.append((f"overall/geomean/{mname}", 0.0,

@@ -3,7 +3,9 @@
 Prints ``name,us_per_call,derived`` CSV. ``--scale`` grows the matrix suite;
 ``--only`` runs a single module; ``--json`` additionally writes the rows,
 per-module wall times, and a setup-vs-total summary as a JSON record (the
-perf-trajectory artifact CI uploads); ``--devices N`` forces N virtual host
+perf-trajectory artifact CI uploads) and appends a compact headline entry
+to the append-only ``--trajectory`` file (default ``BENCH_trajectory.json``)
+so perf is comparable across commits; ``--devices N`` forces N virtual host
 devices (must be set before jax initializes, which this flag guarantees) so
 the sharding benchmark exercises real multi-device dispatch.
 """
@@ -27,9 +29,15 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=0,
                     help="force N virtual host devices before jax init")
     ap.add_argument("--executor", default="pipelined",
-                    choices=("pipelined", "serial"),
+                    choices=("pipelined", "threaded", "serial"),
                     help="core.executor pipeline the workflow benchmarks "
-                         "run through (output is bit-identical either way)")
+                         "run through (output is bit-identical in every "
+                         "mode)")
+    ap.add_argument("--trajectory", default="BENCH_trajectory.json",
+                    metavar="PATH",
+                    help="append-only perf-trajectory record (one compact "
+                         "entry per --json run; pass an empty string to "
+                         "skip)")
     ap.add_argument("--analysis-shards", type=int, default=0,
                     help="devices the sharding benchmark partitions the "
                          "analysis stage across (0 = all local devices; "
@@ -88,6 +96,11 @@ def main() -> None:
     # perf-trajectory record alongside the JSON artifact
     setup_us = cached_us = None
     overlap_fracs = {}
+    threaded_fracs = {}
+    kernel_us_by_rung = {}
+    kernel_tile_speedup = {}
+    wave2_us_total = 0.0
+    wave2_overlapped_rows = 0
     analysis_rows = {}
     analysis_shards_used = None
     chain_iterations = chain_plan_hits = chain_ff_skips = 0
@@ -111,12 +124,23 @@ def main() -> None:
         is_serving = name.startswith("serving/")
         if is_serving and "parity=ok" in derived:
             serving_parity_rows += 1
+        if "/kernel_rung/" in name:
+            kernel_us_by_rung[name] = us
         for part in derived.split():
             if name == "overall/plan_setup/total" and \
                     part.startswith("cached_us="):
                 cached_us = float(part.split("=", 1)[1])
             if part.startswith("merge_overlap_frac="):
                 overlap_fracs[name] = float(part.split("=", 1)[1])
+            if part.startswith("threaded_merge_overlap_frac="):
+                threaded_fracs[name] = float(part.split("=", 1)[1])
+            if "/kernel_rung/" in name and \
+                    part.startswith("tile_speedup=x"):
+                kernel_tile_speedup[name] = float(part.split("=x", 1)[1])
+            if part.startswith("wave2_overlap_us="):
+                wave2_us_total += float(part.split("=", 1)[1])
+            if part.startswith("wave2_overlapped="):
+                wave2_overlapped_rows += int(part.split("=", 1)[1])
             if name.endswith("/analysis_sharded") and \
                     part.startswith("shards="):
                 analysis_shards_used = int(part.split("=", 1)[1])
@@ -154,6 +178,28 @@ def main() -> None:
                "merge_overlap_frac_by_row": (overlap_fracs
                                              if args.executor == "pipelined"
                                              else {}),
+               # threaded executor: merge work the worker thread ran while
+               # the collect loop was still pulling slabs. The sharding
+               # module asserts threaded == serial output (monolithic and
+               # sharded) before emitting these, so their presence doubles
+               # as the threaded-merge correctness canary; measured
+               # unconditionally (the overall/sharding modules run the
+               # threaded mode explicitly, whatever --executor is)
+               "threaded_merge_overlap_frac": (max(threaded_fracs.values())
+                                               if threaded_fracs else None),
+               "threaded_merge_overlap_frac_by_row": threaded_fracs,
+               # per-rung hash-kernel timing: the multi-row tiled kernel
+               # vs its tile=1 row-sequential degeneracy, through the real
+               # dispatching backend path (the two tie on the XLA twin,
+               # where the tile knob is a no-op)
+               "kernel_us_by_rung": kernel_us_by_rung,
+               "kernel_tile_speedup_by_rung": kernel_tile_speedup,
+               # binning prework overlapped behind analysis wave 2 at
+               # plan-build time (planner.build_plan -> analyze
+               # overlap_work); *_rows counts plan builds where wave-2
+               # launches were genuinely still in flight when it ran
+               "wave2_overlap_us": round(wave2_us_total, 1),
+               "wave2_overlapped_rows": wave2_overlapped_rows,
                # sharded-analysis stage seconds (the sharding module
                # asserts sharded == monolithic AnalysisResult parity
                # before emitting these rows, so their presence doubles as
@@ -211,6 +257,38 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(record, f, indent=1)
         print(f"# wrote {args.json}", file=sys.stderr, flush=True)
+
+        if args.trajectory:
+            # append-only perf trajectory: one compact headline entry per
+            # recorded run, so regressions are visible across commits
+            # without diffing full artifacts
+            entry = {
+                "unix_time": record["meta"]["unix_time"],
+                "smoke": args.smoke, "scale": args.scale,
+                "executor": args.executor,
+                "wall_seconds": summary["wall_seconds"],
+                "plan_setup_fresh_us": summary["plan_setup_fresh_us"],
+                "plan_setup_cached_us": summary["plan_setup_cached_us"],
+                "merge_overlap_frac": summary["merge_overlap_frac"],
+                "threaded_merge_overlap_frac":
+                    summary["threaded_merge_overlap_frac"],
+                "kernel_us_by_rung": summary["kernel_us_by_rung"],
+                "wave2_overlap_us": summary["wave2_overlap_us"],
+                "hash_bin_rows": summary["hash_bin_rows"],
+                "serving_p50_us": summary["serving_p50_us"],
+            }
+            try:
+                with open(args.trajectory) as f:
+                    traj = json.load(f)
+                if not isinstance(traj, list):
+                    traj = []
+            except (OSError, ValueError):
+                traj = []
+            traj.append(entry)
+            with open(args.trajectory, "w") as f:
+                json.dump(traj, f, indent=1)
+            print(f"# appended to {args.trajectory} "
+                  f"({len(traj)} records)", file=sys.stderr, flush=True)
 
 
 if __name__ == "__main__":

@@ -31,7 +31,7 @@ import numpy as np
 
 from . import hll
 from .dispatch import (DeviceSpec, Launch, collect_in_completion_order,
-                       device_context, resolve_devices,
+                       device_context, overlap_host_work, resolve_devices,
                        start_async_host_copies)
 from .formats import CSR, csr_from_arrays, flat_gather_index, pow2_at_least
 from .hll import row_ids_from_indptr
@@ -158,6 +158,13 @@ class AnalysisResult:
     # device compute overlaps these, so this reads as "host time spent on
     # shard i", not device execution time.
     shard_seconds: Optional[List[float]] = None
+    # Host work the caller slotted behind analysis wave 2 (the planner's
+    # binning prework — see ``analyze(..., overlap_work=...)``): seconds it
+    # took, and whether at least one wave-2 launch was still in flight when
+    # it started. Pure timing telemetry — excluded from sharded/monolithic
+    # parity comparisons like n_shards/shard_seconds.
+    wave2_overlap_seconds: float = 0.0
+    wave2_overlapped: bool = False
 
     @property
     def conservative_cr(self) -> float:
@@ -283,7 +290,16 @@ class AnalysisPipeline:
     def run(self, a: CSR, b: CSR, *, build_sketches: bool = True,
             sketch_cache: Optional[Dict] = None,
             devices: DeviceSpec = None,
-            known_sizes: Optional[np.ndarray] = None) -> AnalysisResult:
+            known_sizes: Optional[np.ndarray] = None,
+            overlap_work=None) -> AnalysisResult:
+        """``overlap_work``, when given, is a host callable
+        ``overlap_work(prod_row_host)`` run while the wave-2 launches
+        (output ranges / sketches) are still in flight — the slot the
+        planner uses to start binning prework on wave-1 products. It must
+        not depend on any wave-2 output; its wall time and whether it
+        genuinely overlapped in-flight work land on
+        ``AnalysisResult.wave2_overlap_seconds`` / ``wave2_overlapped``.
+        """
         if known_sizes is not None:
             known_sizes = np.asarray(known_sizes, np.int64)
             if known_sizes.shape != (a.m,):
@@ -297,36 +313,47 @@ class AnalysisPipeline:
             devs = None
         if devs is None:
             return self._run_monolithic(a, b, build_sketches, sketch_cache,
-                                        known_sizes)
+                                        known_sizes, overlap_work)
         return self._run_sharded(a, b, devs, build_sketches, sketch_cache,
-                                 known_sizes)
+                                 known_sizes, overlap_work)
 
     # -- single-device path (the legacy monolithic analyze) ----------------
 
     def _run_monolithic(self, a: CSR, b: CSR, build_sketches: bool,
                         sketch_cache: Optional[Dict],
-                        known_sizes: Optional[np.ndarray] = None
-                        ) -> AnalysisResult:
+                        known_sizes: Optional[np.ndarray] = None,
+                        overlap_work=None) -> AnalysisResult:
         cfg = self.cfg
         prod_row = products_per_row(a.indptr, a.indices, b.indptr,
                                     num_rows_a=a.m)
         b_min, b_max = row_col_ranges(b.indptr, b.indices, num_rows=b.m)
         out_lo, out_hi = output_col_ranges(a.indptr, a.indices, b_min, b_max,
                                            num_rows_a=a.m)
+        ov_s, ov_pending = 0.0, False
+        if overlap_work is not None:
+            # The range arrays above are dispatched but not awaited: wrap
+            # them in a pseudo-launch so the prework runs behind whatever
+            # the backend still has in flight (it blocks only on wave-1
+            # products, which the work itself needs).
+            wave2 = [Launch("wave2", 0, (out_lo, out_hi))]
+            start_async_host_copies(wave2)
+            _, ov_s, ov_pending = overlap_host_work(
+                wave2, lambda: overlap_work(np.asarray(prod_row)))
         return self._finish(
             a, b, prod_row=prod_row, out_lo=out_lo, out_hi=out_hi,
             build_sketches=build_sketches,
             sketch_builder=lambda m: sketches_for(b, m, cfg.seed,
                                                   sketch_cache),
-            n_shards=1, shard_seconds=None, known_sizes=known_sizes)
+            n_shards=1, shard_seconds=None, known_sizes=known_sizes,
+            wave2_overlap_seconds=ov_s, wave2_overlapped=ov_pending)
 
     # -- device-partitioned path -------------------------------------------
 
     def _run_sharded(self, a: CSR, b: CSR, devs: Tuple,
                      build_sketches: bool,
                      sketch_cache: Optional[Dict],
-                     known_sizes: Optional[np.ndarray] = None
-                     ) -> AnalysisResult:
+                     known_sizes: Optional[np.ndarray] = None,
+                     overlap_work=None) -> AnalysisResult:
         # partition is imported lazily: it depends on the plan containers
         # (planner), which import this module.
         from .partition import contiguous_split
@@ -437,6 +464,14 @@ class AnalysisPipeline:
                 shard_s[part.index] += time.perf_counter() - t0
         start_async_host_copies(launches)
 
+        # Caller-provided host prework (planner binning) rides behind the
+        # in-flight wave-2 launches; it consumes only the wave-1 merged
+        # products, which are already host-resident here.
+        ov_s, ov_pending = 0.0, False
+        if overlap_work is not None:
+            _, ov_s, ov_pending = overlap_host_work(
+                launches, lambda: overlap_work(prod_row))
+
         out_lo = np.full(a.m, np.iinfo(np.int32).max, np.int32)
         out_hi = np.full(a.m, np.iinfo(np.int32).min, np.int32)
         sketch_parts: List[Tuple[int, int, np.ndarray]] = []
@@ -471,7 +506,8 @@ class AnalysisPipeline:
             a, b, prod_row=jnp.asarray(prod_row),
             out_lo=jnp.asarray(out_lo), out_hi=jnp.asarray(out_hi),
             build_sketches=build_sketches, sketch_builder=sketch_builder,
-            n_shards=n_dev, shard_seconds=shard_s, known_sizes=known_sizes)
+            n_shards=n_dev, shard_seconds=shard_s, known_sizes=known_sizes,
+            wave2_overlap_seconds=ov_s, wave2_overlapped=ov_pending)
 
     # -- shared host tail: workflow gate + sampled CR ----------------------
 
@@ -479,7 +515,9 @@ class AnalysisPipeline:
                 build_sketches: bool, sketch_builder,
                 n_shards: int,
                 shard_seconds: Optional[List[float]],
-                known_sizes: Optional[np.ndarray] = None) -> AnalysisResult:
+                known_sizes: Optional[np.ndarray] = None,
+                wave2_overlap_seconds: float = 0.0,
+                wave2_overlapped: bool = False) -> AnalysisResult:
         cfg = self.cfg
         total_products = int(np.asarray(prod_row, np.int64).sum())
         nnz_a, nnz_b = a.nnz, b.nnz
@@ -500,7 +538,9 @@ class AnalysisPipeline:
                 cr_mean=None, cr_std=None, out_lo=out_lo, out_hi=out_hi,
                 workflow="known", cr_sigma=cfg.cr_sigma,
                 n_shards=n_shards, shard_seconds=shard_seconds,
-                known_sizes=known_sizes)
+                known_sizes=known_sizes,
+                wave2_overlap_seconds=wave2_overlap_seconds,
+                wave2_overlapped=wave2_overlapped)
 
         if nproducts_avg < cfg.upper_bound_avg_products:
             return AnalysisResult(
@@ -509,7 +549,9 @@ class AnalysisPipeline:
                 m_regs=m_regs, b_sketches=None, sampled_cr=None,
                 cr_mean=None, cr_std=None, out_lo=out_lo, out_hi=out_hi,
                 workflow="upper_bound", cr_sigma=cfg.cr_sigma,
-                n_shards=n_shards, shard_seconds=shard_seconds)
+                n_shards=n_shards, shard_seconds=shard_seconds,
+                wave2_overlap_seconds=wave2_overlap_seconds,
+                wave2_overlapped=wave2_overlapped)
 
         sketches = None
         sampled_cr = cr_mean = cr_std = None
@@ -544,14 +586,17 @@ class AnalysisPipeline:
             cr_mean=cr_mean, cr_std=cr_std, out_lo=out_lo, out_hi=out_hi,
             workflow=workflow, sample_rows=sample_rows,
             cr_sigma=cfg.cr_sigma, n_shards=n_shards,
-            shard_seconds=shard_seconds)
+            shard_seconds=shard_seconds,
+            wave2_overlap_seconds=wave2_overlap_seconds,
+            wave2_overlapped=wave2_overlapped)
 
 
 def analyze(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(),
             build_sketches: bool = True,
             sketch_cache: Optional[Dict] = None,
             devices: DeviceSpec = None,
-            known_sizes: Optional[np.ndarray] = None) -> AnalysisResult:
+            known_sizes: Optional[np.ndarray] = None,
+            overlap_work=None) -> AnalysisResult:
     """The Ocean analysis step. Selects the workflow per Table 1:
 
         upper_bound  if nproducts_avg < 64
@@ -565,11 +610,14 @@ def analyze(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(),
     numeric pass over the same pattern pair — see ``repro.graph.chain``)
     short-circuits selection to the ``"known"`` workflow: sketching,
     sampling, and CR estimation are skipped entirely.
+    ``overlap_work(prod_row_host)`` runs host-side while the wave-2
+    launches are in flight (see :meth:`AnalysisPipeline.run`).
     """
     return AnalysisPipeline(cfg).run(a, b, build_sketches=build_sketches,
                                      sketch_cache=sketch_cache,
                                      devices=devices,
-                                     known_sizes=known_sizes)
+                                     known_sizes=known_sizes,
+                                     overlap_work=overlap_work)
 
 
 def sharded_merge_estimate(a: CSR, sketches_with_sentinel,

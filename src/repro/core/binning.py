@@ -85,14 +85,18 @@ class HashBin:
     """One hash-accumulator bin: rows sharing a primary-table size.
 
     ``spill`` is a pure function of ``table`` (never of the rows that
-    happen to share a launch), so every shard slice of the bin replays
-    the same kernel shapes — the invariant bit-identical sharding needs.
+    happen to share a launch), and ``tile`` is a bin-level property too
+    (the autotuned row tile the kernel probes per grid step — shard
+    slices inherit it, never re-derive it from their own row counts), so
+    every shard slice of the bin replays the same kernel shapes — the
+    invariant bit-identical sharding needs.
     """
     table: int                # pow2 primary-table slots per row
     spill: int                # pow2 spill-table slots per row
     rows: np.ndarray          # row ids (original matrix row indices)
     ell_width: int            # padded A-row nnz width for this bin
     cost: np.ndarray          # per-row estimated product counts
+    tile: int = 8             # rows per kernel grid step (autotuned)
 
 
 def hash_spill_of(table: int) -> int:
@@ -134,7 +138,8 @@ def plan_bins(pred_nnz: np.ndarray, products: np.ndarray,
               esc_enabled: bool = True,
               assisted_cr: float | None = None,
               hash_enabled: bool = True,
-              load_factor: float = HASH_LOAD_FACTOR) -> BinPlan:
+              load_factor: float = HASH_LOAD_FACTOR,
+              tile_rows: int = 8) -> BinPlan:
     """Assign every output row to an accumulator configuration.
 
     pred_nnz:   per-row predicted output nnz (estimate / exact / upper bound)
@@ -155,6 +160,9 @@ def plan_bins(pred_nnz: np.ndarray, products: np.ndarray,
                 ablations alongside ESC.
     load_factor: primary hash tables are sized ``pow2(alloc/load_factor)``
                 (``core.tuning`` supplies the measured value per rung).
+    tile_rows:  rows the hash kernel probes vectorized per grid step
+                (``core.tuning`` again); stamped onto every
+                :class:`HashBin` so shard slices share the bin's tile.
     """
     m = len(pred_nnz)
     products = np.asarray(products)
@@ -237,7 +245,8 @@ def plan_bins(pred_nnz: np.ndarray, products: np.ndarray,
             ell = pow2_at_least(int(a_row_nnz[rows_arr].max()), floor=8)
             hash_bins.append(HashBin(
                 table=int(t), spill=hash_spill_of(int(t)), rows=rows_arr,
-                ell_width=ell, cost=products[rows_arr].astype(np.int64)))
+                ell_width=ell, cost=products[rows_arr].astype(np.int64),
+                tile=int(tile_rows)))
 
     esc_rows = np.nonzero(esc_mask)[0]
     esc_caps = products[esc_rows].astype(np.int64)

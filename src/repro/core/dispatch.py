@@ -18,7 +18,8 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Iterator, List, Sequence, Tuple, Union
+import time
+from typing import Callable, Iterator, List, Sequence, Tuple, Union
 
 import jax
 import numpy as np
@@ -92,6 +93,27 @@ def launch_ready(it: Launch) -> bool:
         if ready is not None and not ready():
             return False
     return True
+
+
+def overlap_host_work(launches: Sequence[Launch],
+                      work: Callable[[], object]
+                      ) -> Tuple[object, float, bool]:
+    """Run independent host-side ``work`` while ``launches`` are in flight.
+
+    The canonical slot for this is right after
+    :func:`start_async_host_copies`, before the collect loop: on async
+    backends the devices keep computing / copying while ``work`` executes
+    on the host, so its cost is hidden behind the outstanding launches.
+    Returns ``(result, seconds, overlapped)`` where ``overlapped`` is True
+    iff at least one launch was still pending when the work started —
+    i.e. the seconds were genuinely concurrent with device work rather
+    than running after everything already finished (the synchronous-CPU
+    degenerate case).
+    """
+    pending = any(not launch_ready(it) for it in launches)
+    t0 = time.perf_counter()
+    result = work()
+    return result, time.perf_counter() - t0, pending
 
 
 def collect_in_completion_order(launches: Sequence[Launch]

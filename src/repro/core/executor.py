@@ -35,10 +35,23 @@ accelerators) that is merge work overlapped with outstanding device
 compute/copies; on a synchronous host it still measures how much of the
 merge the pipeline moved off the post-barrier critical path.
 ``merge_overlap_frac`` is the same as a fraction of all merge work.
+
+The ``"threaded"`` executor goes one step further: a dedicated merge
+worker thread runs the overflow scan + incremental compaction
+(:class:`_MergeState`) while the collect loop keeps pulling slabs — so
+merge/collect overlap happens even when the collect loop is pinned
+blocking on a device queue, not only between ``is_ready`` polls. The
+worker is the *sole* mutator of the merge state and ``_MergeState`` is
+add-order-independent (overflow keyed by dispatch order, kept slabs and
+column-sum partials sorted by dispatch order at finalize), so
+serial == pipelined == threaded bit for bit, overflow fallback and
+``MergePostOps`` included.
 """
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -57,7 +70,8 @@ from .planner import (DenseBinExec, EscExec, ExecutionPlan, HashBinExec,
 
 SERIAL = "serial"
 PIPELINED = "pipelined"
-EXECUTORS = (PIPELINED, SERIAL)
+THREADED = "threaded"
+EXECUTORS = (PIPELINED, THREADED, SERIAL)
 
 
 class _Slab:
@@ -187,6 +201,31 @@ def _esc_to_slab(res, rows: np.ndarray, num_rows: int,
                  counts.astype(np.int64)), nnz
 
 
+def _gather_ell_values(exec_, a_values: np.ndarray) -> jax.Array:
+    """Value half of ELL bin input prep, shared by the dense and hash bin
+    runners: replay the bin's frozen flat-gather map over (possibly new)
+    A values and commit the ELL block."""
+    return jax.numpy.asarray(
+        kops.gather_bin_values(a_values, exec_.pos, exec_.valid))
+
+
+def _prep_shard_b(b: CSR, b_cols_host, b_vals_host, shard: "_ShardWork",
+                  multi: bool):
+    """Per-shard B-side inputs shared by every bin family: the padded
+    flat arrays the dense/hash kernels stream (shipped to the shard's
+    device when more than one shard participates) plus the raw CSR
+    triple the ESC pass consumes (device-committed only when the shard
+    actually has an ESC bin — ``None`` means "use host arrays")."""
+    if not (multi and shard.device is not None):
+        return b_cols_host, b_vals_host, None
+    b_cols_pad = jax.device_put(b_cols_host, shard.device)
+    b_vals_pad = jax.device_put(b_vals_host, shard.device)
+    b_esc = (tuple(jax.device_put(x, shard.device)
+                   for x in (b.indptr, b.indices, b.values))
+             if shard.esc is not None else None)
+    return b_cols_pad, b_vals_pad, b_esc
+
+
 def _run_dense_bin(be: DenseBinExec, a_values: np.ndarray, b_cols_pad,
                    b_vals_pad):
     """Dispatch one dense bin; returns device arrays (cols, vals, nnz).
@@ -199,8 +238,7 @@ def _run_dense_bin(be: DenseBinExec, a_values: np.ndarray, b_cols_pad,
     a pure function of (bin, rung)) so every same-rung slice of one bin
     replays a single jit specialization.
     """
-    a_vals = jax.numpy.asarray(
-        kops.gather_bin_values(a_values, be.pos, be.valid))
+    a_vals = _gather_ell_values(be, a_values)
     return kops.dense_bin_op(
         be.a_rows, a_vals, be.a_starts, be.a_lens, be.row_lo,
         b_cols_pad, b_vals_pad, window=be.window,
@@ -212,17 +250,16 @@ def _run_hash_bin(hb: HashBinExec, a_values: np.ndarray, b_cols_pad,
     """Dispatch one hash bin; returns device arrays (cols, vals, nnz).
 
     Same per-row-independence contract as dense bins: each row owns its
-    tables, table/spill/f_chunk come from the bin (never the shard), and
-    shard slices carry inert pad rows plus the per-rung ``p_cap`` for the
-    XLA path — so any row subset replays one jit specialization and
+    tables, table/spill/f_chunk/tile come from the bin (never the shard),
+    and shard slices carry inert pad rows plus the per-rung ``p_cap`` for
+    the XLA path — so any row subset replays one jit specialization and
     produces the full bin's per-row output bit for bit.
     """
-    a_vals = jax.numpy.asarray(
-        kops.gather_bin_values(a_values, hb.pos, hb.valid))
+    a_vals = _gather_ell_values(hb, a_values)
     return kops.hash_bin_op(
         hb.a_rows, a_vals, hb.a_starts, hb.a_lens, b_cols_pad, b_vals_pad,
         table=hb.table, spill=hb.spill, n_cols=n_cols, p_cap=hb.p_cap,
-        f_chunk=hb.f_chunk)
+        f_chunk=hb.f_chunk, tile=hb.tile)
 
 
 def _run_esc_bin(ex: EscExec, a_values: np.ndarray, b: CSR, *,
@@ -307,11 +344,8 @@ def _dispatch(shards: List[_ShardWork], a_values: np.ndarray,
         if not shard.dense and not shard.hash and shard.esc is None:
             continue
         with device_context(shard.device):
-            if multi and shard.device is not None:
-                b_cols_pad = jax.device_put(b_cols_host, shard.device)
-                b_vals_pad = jax.device_put(b_vals_host, shard.device)
-            else:
-                b_cols_pad, b_vals_pad = b_cols_host, b_vals_host
+            b_cols_pad, b_vals_pad, b_esc = _prep_shard_b(
+                b, b_cols_host, b_vals_host, shard, multi)
             for be in shard.dense:
                 arrays = _run_dense_bin(be, a_values, b_cols_pad, b_vals_pad)
                 items.append(Launch(("dense", be), order, tuple(arrays)))
@@ -322,9 +356,6 @@ def _dispatch(shards: List[_ShardWork], a_values: np.ndarray,
                 items.append(Launch(("hash", hb), order, tuple(arrays)))
                 order += 1
             if shard.esc is not None:
-                b_esc = (tuple(jax.device_put(x, shard.device)
-                               for x in (b.indptr, b.indices, b.values))
-                         if multi and shard.device is not None else None)
                 res = _run_esc_bin(shard.esc, a_values, b, b_arrays=b_esc)
                 items.append(Launch(("esc", shard.esc), order, tuple(res)))
                 order += 1
@@ -461,7 +492,7 @@ def _run_overflow_fallback(state: _MergeState, products: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# The two collect policies
+# The collect policies
 # ---------------------------------------------------------------------------
 
 def _collect_serial(items: List[Launch], plan: ExecutionPlan, a: CSR,
@@ -520,6 +551,78 @@ def _collect_pipelined(items: List[Launch], plan: ExecutionPlan, a: CSR,
     return c, total, n_overflow, overlap_s, frac, state.raw_counts
 
 
+def _collect_threaded(items: List[Launch], plan: ExecutionPlan, a: CSR,
+                      b: CSR, a_values: np.ndarray,
+                      stage: Dict[str, float], dispatch_s: float,
+                      post: Optional[MergePostOps]):
+    """Collect with a dedicated merge worker thread.
+
+    The main thread runs the collect loop (completion-order pull +
+    materialization) and hands each slab to a worker that runs the
+    overflow scan, fused post-ops, and the counting half of compaction —
+    so merge work proceeds even while the collect loop is *blocked* on a
+    device queue (the pipelined policy only merges between ``is_ready``
+    polls). Bit-identity holds because the worker is the sole mutator of
+    the merge state and ``_MergeState`` is add-order-independent; the
+    overflow fallback and final scatter run on the main thread after the
+    worker drains.
+
+    ``overlap_s`` sums the portions of worker merge spans that ran
+    before the collect loop finished — merge work a single-threaded
+    executor would have serialized behind collection.
+    """
+    state = _MergeState(a.m, post)
+    slabs: "queue.Queue[Optional[Tuple[Launch, _Slab]]]" = queue.Queue()
+    spans: List[Tuple[float, float]] = []   # (start, duration) per add
+    errors: List[BaseException] = []
+
+    def worker():
+        while True:
+            item = slabs.get()
+            if item is None:
+                return
+            it, slab = item
+            t0 = time.perf_counter()
+            try:
+                state.add(it, slab)
+            except BaseException as e:  # surfaced on the main thread
+                errors.append(e)
+                return
+            spans.append((t0, time.perf_counter() - t0))
+
+    th = threading.Thread(target=worker, name="ocean-merge-worker",
+                          daemon=True)
+    th.start()
+    collect_s = 0.0
+    try:
+        for it in collect_in_completion_order(items):
+            t0 = time.perf_counter()
+            slab = _materialize(it)
+            collect_s += time.perf_counter() - t0
+            slabs.put((it, slab))
+    finally:
+        collect_end = time.perf_counter()
+        slabs.put(None)
+        th.join()
+    if errors:
+        raise errors[0]
+    merge_s = sum(dt for _, dt in spans)
+    overlap_s = sum(min(max(collect_end - t0, 0.0), dt) for t0, dt in spans)
+    t0 = time.perf_counter()
+    n_overflow = _run_overflow_fallback(state, plan.products, a, b)
+    c, total = _compact_slabs(state.finalize(), (a.m, b.n), a_values.dtype)
+    merge_s += time.perf_counter() - t0
+    stage["dispatch"] = dispatch_s
+    stage["collect"] = collect_s
+    stage["merge"] = merge_s
+    frac = overlap_s / merge_s if merge_s > 0.0 else 0.0
+    return c, total, n_overflow, overlap_s, frac, state.raw_counts
+
+
+_COLLECT_OF = {PIPELINED: _collect_pipelined, THREADED: _collect_threaded,
+               SERIAL: _collect_serial}
+
+
 # ---------------------------------------------------------------------------
 # Entry points
 # ---------------------------------------------------------------------------
@@ -547,7 +650,7 @@ def _execute(plan: ExecutionPlan, shards: List[_ShardWork], a: CSR, b: CSR,
     items = _dispatch(shards, a_values, b)
     dispatch_s = time.perf_counter() - t0
 
-    collect = _collect_pipelined if mode == PIPELINED else _collect_serial
+    collect = _COLLECT_OF[mode]
     c, total, n_overflow, overlap_s, frac, raw_counts = collect(
         items, plan, a, b, a_values, stage, dispatch_s, post)
 
@@ -562,7 +665,9 @@ def _execute(plan: ExecutionPlan, shards: List[_ShardWork], a: CSR, b: CSR,
         executor=mode, overlap_seconds=overlap_s, merge_overlap_frac=frac,
         analysis_shards=plan.analysis_shards,
         analysis_shard_seconds=plan.analysis_shard_seconds,
-        raw_row_nnz=raw_counts)
+        raw_row_nnz=raw_counts,
+        wave2_overlap_seconds=plan.wave2_overlap_seconds,
+        wave2_overlapped=plan.wave2_overlapped)
     return c, report
 
 

@@ -184,11 +184,14 @@ def _slice_hash(hb: HashBinExec, sel: np.ndarray, device) -> HashBinExec:
 
     Bucketed exactly like dense-bin slices (:func:`bucket_shard_rows` row
     padding with inert ``a_lens == 0`` rows, per-rung ``p_cap`` for the
-    XLA fallback's product enumeration). ``table``/``spill``/``f_chunk``
-    come from the bin, never the shard, so every same-rung slice of one
-    bin — across devices and topologies — replays a single jit
-    specialization, and per-row table contents are independent of which
-    rows share the launch (the bit-identical-merge invariant)."""
+    XLA fallback's product enumeration). ``table``/``spill``/``f_chunk``/
+    ``tile`` come from the bin, never the shard — the row tile is *not*
+    re-derived from the slice's row count, so the kernel's internal
+    tile-multiple padding lands on the same shapes for every slice — so
+    every same-rung slice of one bin — across devices and topologies —
+    replays a single jit specialization, and per-row table contents are
+    independent of which rows share the launch (the bit-identical-merge
+    invariant)."""
     n_valid = len(sel)
     r_pad = bucket_shard_rows(n_valid, len(hb.rows))
     pad = r_pad - n_valid
@@ -210,7 +213,7 @@ def _slice_hash(hb: HashBinExec, sel: np.ndarray, device) -> HashBinExec:
         a_starts=put(hb.a_starts, 0), a_lens=put(hb.a_lens, 0),
         cost=hb.cost[sel], bin_id=hb.bin_id, n_valid=n_valid,
         p_cap=rung_capacity_cap(hb.cost, r_pad, hb.p_cap),
-        f_chunk=hb.f_chunk)
+        f_chunk=hb.f_chunk, tile=hb.tile)
 
 
 def _slice_esc(ex: EscExec, sel: np.ndarray) -> EscExec:

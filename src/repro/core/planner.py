@@ -83,6 +83,12 @@ class OceanReport:
     # own indptr already is the exact raw sizing). Graph chains feed these
     # forward as ``known_sizes`` for the next plan on the same pattern.
     raw_row_nnz: Optional[np.ndarray] = None
+    # binning prework the planner ran behind analysis wave 2 (build-time
+    # facts of the plan, like analysis_shard_seconds): seconds of host
+    # work moved off the serial analysis->binning critical path, and
+    # whether wave-2 launches were genuinely still in flight when it ran
+    wave2_overlap_seconds: float = 0.0
+    wave2_overlapped: bool = False
 
     @property
     def total_seconds(self) -> float:
@@ -141,11 +147,12 @@ class DenseBinExec:
 class HashBinExec:
     """One hash-accumulator bin with its structure-only kernel inputs.
 
-    ``table``/``spill`` are pure functions of the bin (``binning.HashBin``
-    invariant), never of a shard slice, so every slice replays the same
-    kernel specialization. ``f_chunk`` is the autotuned DMA tile for the
-    Pallas path (``core.tuning``), frozen at plan-build time so cached
-    plans replay their measured choice.
+    ``table``/``spill``/``tile`` are pure functions of the bin
+    (``binning.HashBin`` invariant), never of a shard slice, so every
+    slice replays the same kernel specialization. ``f_chunk`` (DMA chunk)
+    and ``tile`` (rows probed vectorized per grid step) are the autotuned
+    Pallas-path knobs (``core.tuning``), frozen at plan-build time so
+    cached plans replay their measured choice.
     """
     table: int
     spill: int
@@ -163,6 +170,7 @@ class HashBinExec:
                                # (bin-level pow2 cover; shard slices carry
                                # the per-rung ladder value)
     f_chunk: int = 128
+    tile: int = 8
 
 
 @dataclasses.dataclass
@@ -219,6 +227,10 @@ class ExecutionPlan:
     # built from exact feed-forward sizes (workflow 'known'): estimation
     # and the symbolic pass were skipped when this plan was planned
     feed_forward: bool = False
+    # binning prework overlapped with analysis wave 2 at build time (see
+    # OceanReport.wave2_overlap_seconds)
+    wave2_overlap_seconds: float = 0.0
+    wave2_overlapped: bool = False
 
     def reuse_b_sketches(self) -> Dict:
         """Seed a sketch cache from this plan for later builds against the
@@ -286,12 +298,43 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
     """
     stage: Dict[str, float] = {}
 
+    # Binning prework slotted behind analysis wave 2: when the workflow is
+    # going to be upper_bound (decidable from wave-1 products alone — the
+    # Table-1 gate needs only nproducts_avg), the ESC bin's membership and
+    # gather structure are pure functions of the product counts, so they
+    # can be computed on the host while the wave-2 launches (output
+    # ranges) are still in flight. The binning stage below reuses the
+    # prework only after verifying the recomputed ESC row set matches —
+    # a mismatch (never expected) just falls back to recomputing.
+    prework: Dict[str, object] = {}
+
+    def _wave2_prework(prod_host: np.ndarray) -> None:
+        if known_sizes is not None or force_workflow not in (None,
+                                                             "upper_bound"):
+            return
+        prods = np.asarray(prod_host, np.int64)
+        avg = int(prods.sum()) / max(a.m, 1)
+        if force_workflow is None and avg >= cfg.upper_bound_avg_products:
+            return  # estimation/symbolic territory: no ESC bin to prepare
+        if not hybrid:
+            return  # ESC rung disabled (V1/V2 ablations)
+        from .binning import ESC_THRESHOLD
+        esc_rows = np.nonzero((prods > 0) & (prods < ESC_THRESHOLD))[0]
+        sub_ptr, src = flat_gather_index(a.indptr, esc_rows)
+        prework.update(
+            esc_rows=esc_rows, sub_ptr=sub_ptr, src=src,
+            p_cap=pow2_at_least(int(prods[esc_rows].sum()), floor=64))
+
     # ---------------- analysis ----------------
     t0 = time.perf_counter()
+    ov_s, ov_pending = 0.0, False
     if analysis is None:
         analysis = analyze(a, b, cfg, sketch_cache=sketch_cache,
                            devices=analysis_devices,
-                           known_sizes=known_sizes)
+                           known_sizes=known_sizes,
+                           overlap_work=_wave2_prework)
+        ov_s = analysis.wave2_overlap_seconds
+        ov_pending = analysis.wave2_overlapped
     if known_sizes is None and analysis.known_sizes is not None:
         known_sizes = analysis.known_sizes
     # exact feed-forward sizes trump both Table-1 selection and ablation
@@ -346,14 +389,14 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
     # disable it with ESC) plus its own config knob; the measured load
     # factor steers how binning sizes primary tables
     hash_enabled = hybrid and cfg.hash_rung
-    load_factor = (tuning_mod.hash_tuning_for(tuning_mod.REFERENCE_RUNG)
-                   .load_factor if hash_enabled
-                   else tuning_mod.DEFAULT_TUNING.load_factor)
+    ref_tuned = (tuning_mod.hash_tuning_for(tuning_mod.REFERENCE_RUNG)
+                 if hash_enabled else tuning_mod.DEFAULT_TUNING)
     plan = plan_bins(pred, products, out_lo, out_hi, a_row_nnz, b.n,
                      expansion=cfg.expansion_for(analysis.m_regs),
                      workflow=wf, esc_enabled=hybrid,
                      assisted_cr=assisted_cr, hash_enabled=hash_enabled,
-                     load_factor=load_factor)
+                     load_factor=ref_tuned.load_factor,
+                     tile_rows=ref_tuned.tile_rows)
     if not hybrid:
         # V1/V2: long rows fall back to the global ESC pass instead of the
         # column-tiled kernel (the paper's 'nonadaptive global kernel').
@@ -399,13 +442,18 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
             cost=np.asarray(hb.cost, np.int64),
             bin_id=len(dense_execs) + hash_id, n_valid=len(hb.rows),
             p_cap=pow2_at_least(bin_products, floor=64),
-            f_chunk=tuned.f_chunk))
+            f_chunk=tuned.f_chunk, tile=tuned.tile_rows))
 
     esc_exec = None
     if len(plan.esc_rows):
         rows = plan.esc_rows
-        sub_ptr, src = flat_gather_index(a.indptr, rows)
-        p_cap = pow2_at_least(int(products[rows].sum()), floor=64)
+        if prework and np.array_equal(prework["esc_rows"], rows):
+            # the wave-2-overlapped prework computed this exact row set
+            sub_ptr, src = prework["sub_ptr"], prework["src"]
+            p_cap = prework["p_cap"]
+        else:
+            sub_ptr, src = flat_gather_index(a.indptr, rows)
+            p_cap = pow2_at_least(int(products[rows].sum()), floor=64)
         esc_exec = EscExec(rows=rows, sub_indptr=sub_ptr.astype(np.int32),
                            sub_indices=np.asarray(a.indices)[src], src=src,
                            p_cap=p_cap, out_cap=p_cap,
@@ -424,7 +472,8 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
         if wf == "estimation" else analysis.b_sketches,
         build_seconds=stage, analysis_shards=analysis.n_shards,
         analysis_shard_seconds=analysis.shard_seconds,
-        feed_forward=(wf == "known"))
+        feed_forward=(wf == "known"),
+        wave2_overlap_seconds=ov_s, wave2_overlapped=ov_pending)
 
 
 # ---------------------------------------------------------------------------

@@ -6,13 +6,22 @@ table-size rung the tuner times the hash bin op on a tiny synthetic
 workload scaled to that rung, across a small candidate grid of
 
 * primary-table **load factor** (how much slack ``plan_bins`` sizes the
-  table with relative to the predicted row nnz), and
-* DMA **tile shape** (``f_chunk``, the B-stream chunk the Pallas kernel
-  copies per step; the XLA executor ignores it, so on that path the
-  candidates tie and the default wins),
+  table with relative to the predicted row nnz),
+* DMA **chunk shape** (``f_chunk``, the B-stream chunk the Pallas kernel
+  copies per step), and
+* row **tile** (``tile_rows``, how many rows one grid step probes
+  vectorized — the multi-row dimension of ``kernels.spgemm_hash``).
 
-and caches the winner in a :class:`TuningCache` — a thread-safe LRU keyed
-by a digest of (rung, backend, kernel path), the same keying discipline as
+Measurements run through :func:`repro.kernels.ops.hash_bin_op` — the
+*real dispatching backend path*, exactly what the executor calls — so the
+timed code is the Pallas kernel (compiled on TPU, interpreted under
+``REPRO_CPU_NUMERIC=pallas``) or the XLA twin, whichever this process
+will actually execute. On the XLA path the f_chunk/tile candidates are
+no-ops, so they tie and the defaults win; the cache key's kernel-path
+component keeps those measurements from aliasing Pallas-path ones.
+
+Winners cache in a :class:`TuningCache` — a thread-safe LRU keyed by a
+digest of (rung, backend, kernel path), the same keying discipline as
 ``planner.PlanCache``. Measurement failures (e.g. an exotic backend) fall
 back to the untuned defaults, so tuning can never break a build.
 """
@@ -33,10 +42,13 @@ from .formats import pow2_at_least
 
 # Candidate grid. Load factors below 0.5 waste VMEM; above ~0.85 linear
 # probing degrades. f_chunk=64 only matters on the Pallas path (smaller
-# DMA granularity for short B rows).
+# DMA granularity for short B rows), as does the row tile (tile_rows=1 is
+# the row-sequential degeneracy; 8 matches the f32 sublane tile).
 LOAD_FACTOR_CANDIDATES = (0.5, HASH_LOAD_FACTOR)
 F_CHUNK_CANDIDATES = (128,)
 F_CHUNK_CANDIDATES_PALLAS = (128, 64)
+TILE_CANDIDATES = (8,)
+TILE_CANDIDATES_PALLAS = (8, 1)
 
 # The rung the planner consults for the load factor it hands to binning
 # (binning runs before per-bin rungs are known, so one representative
@@ -50,6 +62,7 @@ class HashTuning:
     """One rung's measured choice."""
     load_factor: float = HASH_LOAD_FACTOR
     f_chunk: int = 128
+    tile_rows: int = 8
 
 
 DEFAULT_TUNING = HashTuning()
@@ -133,9 +146,14 @@ def _synthetic_workload(rung: int, f_chunk: int) -> Tuple:
 
 
 def _measure(rung: int) -> HashTuning:
+    """Time every (load_factor, f_chunk, tile_rows) candidate through
+    ``kops.hash_bin_op`` — the same dispatching entry point the executor
+    calls, so the measurement exercises whichever backend path (compiled
+    Pallas, interpreted Pallas, or the XLA twin) this process will run."""
     from repro.kernels import ops as kops
-    f_cands = (F_CHUNK_CANDIDATES_PALLAS if kops._use_pallas_path()
-               else F_CHUNK_CANDIDATES)
+    pallas = kops._use_pallas_path()
+    f_cands = F_CHUNK_CANDIDATES_PALLAS if pallas else F_CHUNK_CANDIDATES
+    t_cands = TILE_CANDIDATES_PALLAS if pallas else TILE_CANDIDATES
     nnz_row = max(int(rung * 0.6), 8)
     best, best_t = DEFAULT_TUNING, float("inf")
     for lf in LOAD_FACTOR_CANDIDATES:
@@ -144,26 +162,28 @@ def _measure(rung: int) -> HashTuning:
         for fc in f_cands:
             work = _synthetic_workload(rung, fc)
             p_cap = pow2_at_least(int(work[3].sum()), floor=64)
+            for tr in t_cands:
+                def run():
+                    out = kops.hash_bin_op(
+                        *work, table=table, spill=hash_spill_of(table),
+                        n_cols=max(2 * rung, 64), p_cap=p_cap, f_chunk=fc,
+                        tile=tr)
+                    jax.block_until_ready(out[0])
 
-            def run():
-                out = kops.hash_bin_op(
-                    *work, table=table, spill=hash_spill_of(table),
-                    n_cols=max(2 * rung, 64), p_cap=p_cap, f_chunk=fc)
-                jax.block_until_ready(out[0])
-
-            run()  # warmup/compile
-            t0 = time.perf_counter()
-            run()
-            run()
-            dt = time.perf_counter() - t0
-            if dt < best_t:
-                best_t, best = dt, HashTuning(load_factor=lf, f_chunk=fc)
+                run()  # warmup/compile
+                t0 = time.perf_counter()
+                run()
+                run()
+                dt = time.perf_counter() - t0
+                if dt < best_t:
+                    best_t, best = dt, HashTuning(load_factor=lf, f_chunk=fc,
+                                                  tile_rows=tr)
     return best
 
 
 def hash_tuning_for(rung: int,
                     cache: Optional[TuningCache] = None) -> HashTuning:
-    """Measured (load_factor, f_chunk) for a table-size rung, cached.
+    """Measured (load_factor, f_chunk, tile_rows) for a rung, cached.
 
     Never raises: measurement errors return the untuned defaults (and
     cache them, so a broken backend is probed once, not per plan)."""

@@ -91,8 +91,10 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
     (only where the O(nnz) setup work runs); per-shard timings surface as
     ``OceanReport.analysis_shard_seconds``.
     ``executor``: ``"pipelined"`` (default) overlaps the host merge with
-    device work through ``core.executor``; ``"serial"`` keeps the global
-    barrier before the merge. Output is bit-identical either way.
+    device work through ``core.executor``; ``"threaded"`` adds a
+    dedicated merge-worker thread so merge work also proceeds while the
+    collect loop blocks on a device queue; ``"serial"`` keeps the global
+    barrier before the merge. Output is bit-identical in all three.
     ``known_sizes``: exact per-row output nnz fed forward from a prior
     numeric pass over the same pattern pair (graph chains —
     ``repro.graph.chain``); planning skips estimation entirely and bins
@@ -208,8 +210,8 @@ def ocean_spgemm_many(a_list: Sequence[CSR], b: CSR,
     the shared cache. ``devices`` shards every multiply in the stream
     across the same device set (resolved once); ``analysis_devices``
     shards each call's analysis stage (defaults to ``devices``);
-    ``executor`` picks the pipelined (overlapped merge) or serial
-    execution path.
+    ``executor`` picks the pipelined (overlapped merge), threaded
+    (merge-worker thread), or serial execution path.
 
     ``cache`` and ``sketch_cache`` also accept a *sequence* with one entry
     per left-hand side — the multi-tenant pool (``repro.serving.pool``)

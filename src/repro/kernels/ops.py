@@ -282,7 +282,8 @@ def _hash_bin_xla(a_rows, a_vals, a_starts, a_lens, b_cols, b_vals,
 
 def hash_bin_op(a_rows, a_vals, a_starts, a_lens, b_cols_pad, b_vals_pad,
                 *, table: int, spill: int, n_cols: int,
-                p_cap: int | None = None, f_chunk: int = F_CHUNK):
+                p_cap: int | None = None, f_chunk: int = F_CHUNK,
+                tile: int = khash.DEFAULT_TILE_ROWS):
     """Run one bin through the hash-accumulator kernel and compact it.
 
     Returns (cols (R, table+spill), vals (R, table+spill), nnz (R,)). On
@@ -291,13 +292,15 @@ def hash_bin_op(a_rows, a_vals, a_starts, a_lens, b_cols_pad, b_vals_pad,
     (``REPRO_CPU_NUMERIC=pallas`` forces the interpret-mode kernel).
     ``p_cap`` pins the XLA path's static product capacity — shard slices
     of one bin pass the per-rung ladder value so same-rung slices share a
-    single jit specialization. ``f_chunk`` is the autotuned DMA chunk for
-    the Pallas path (ignored by the XLA executor).
+    single jit specialization. ``f_chunk``/``tile`` are the autotuned DMA
+    chunk and row-tile for the Pallas path (ignored by the XLA executor,
+    whose product enumeration has no analogous knobs); per-row output is
+    bit-identical across every (f_chunk, tile) choice.
     """
     if _use_pallas_path():
         out = khash.spgemm_hash_bin(
             a_rows, a_vals, a_starts, a_lens, b_cols_pad, b_vals_pad,
-            table=table, spill=spill, f_chunk=f_chunk,
+            table=table, spill=spill, f_chunk=f_chunk, tile=tile,
             interpret=use_interpret())
         return extract_hash_rows(*out)
     if p_cap is None:

@@ -28,8 +28,17 @@ commit the write through a one-hot mask. Insertion order within a row is
 the product enumeration order (A-slot major, B-position minor), matching
 the XLA fallback's segment accumulation order bit for bit.
 
-Grid: ``(rows,)`` — each program owns one row's tables; no cross-program
-races, exactly the per-row-bin guarantee the GPU kernels rely on.
+Grid: ``(rows / tile,)`` — each program owns a **tile of T rows** and
+probes all T tables per step: the per-element insert is a (T, table)
+vector op with per-row key/value/use lanes, so one sequential step
+retires T inserts instead of one (the row-split half of the
+OpSparse/Yang-Buluç-Owens accumulator design space). Per-row table
+contents depend only on that row's own products — rows never interact —
+so any tile size produces bit-identical per-row output (``tile=1``
+degenerates to the original row-sequential kernel; pinned in
+``tests/test_hash.py``). Rows are padded to a tile multiple with inert
+rows (no A entries) inside :func:`spgemm_hash_bin`, so callers never see
+the tiling.
 """
 from __future__ import annotations
 
@@ -45,29 +54,40 @@ from .spgemm_dense import F_CHUNK
 # Knuth's multiplicative (Fibonacci) hash constant: 2**32 / phi.
 _FIB_MULT = 2654435769
 
+# Rows probed per grid step. 8 matches the f32 sublane tile, divides every
+# pow2 shard-row rung (``partition.bucket_shard_rows`` floor 32), and keeps
+# T (table + spill + f_chunk)-sized live blocks comfortably inside VMEM at
+# the largest rung (2048 + 1024 + 128 slots * 8 bytes * 8 rows ≈ 200 KB).
+DEFAULT_TILE_ROWS = 8
+
 
 def _probe_insert(keys_ref, vals_ref, col, v, use, size: int):
-    """One vectorized linear-probe insert into a (1, size) pow2 table.
+    """One vectorized linear-probe insert into T (T, size) pow2 tables.
 
+    ``col``/``v``/``use`` are (T, 1) per-row lanes: every row of the tile
+    probes its own table with its own key in one whole-table vector op.
     Accumulates ``v`` into the key's slot (existing or first empty slot in
-    probe order). Returns a bool: the insert found a slot (always true on
-    a hit; false only when the table is full and the key absent)."""
+    probe order). Returns a (T, 1) bool: the insert found a slot (always
+    true on a hit; false only when the table is full and the key absent)."""
     p = size.bit_length() - 1
-    keys = keys_ref[...]                               # (1, size)
+    keys = keys_ref[...]                               # (T, size)
     vals = vals_ref[...]
-    iota = jax.lax.broadcasted_iota(jnp.int32, (1, size), 1)
+    t = keys.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (t, size), 1)
     h = (jnp.maximum(col, 0).astype(jnp.uint32) * jnp.uint32(_FIB_MULT)
-         >> jnp.uint32(32 - p)).astype(jnp.int32)
+         >> jnp.uint32(32 - p)).astype(jnp.int32)      # (T, 1)
     is_col = keys == col
-    found = jnp.any(is_col)
+    found = jnp.any(is_col, axis=1, keepdims=True)     # (T, 1)
     # probe distance of each empty slot from the home slot h (mod size);
     # the nearest one is where linear probing would land
     dist = (iota - h) & (size - 1)
     empty_dist = jnp.where(keys == -1, dist, size)
-    first = jnp.min(empty_dist)
-    target = jnp.where(found, jnp.argmax(is_col).astype(jnp.int32),
+    first = jnp.min(empty_dist, axis=1, keepdims=True)  # (T, 1)
+    target = jnp.where(found,
+                       jnp.argmax(is_col, axis=1, keepdims=True
+                                  ).astype(jnp.int32),
                        (h + first) & (size - 1))
-    has_slot = found | (first < size)
+    has_slot = found | (first < size)                  # (T, 1)
     write = (iota == target) & has_slot & use
     keys_ref[...] = jnp.where(write, col, keys)
     vals_ref[...] = jnp.where(write, vals + v, vals)
@@ -78,7 +98,7 @@ def _hash_kernel(a_rows_ref, a_vals_ref, a_starts_ref, a_lens_ref,
                  b_cols_hbm, b_vals_hbm,
                  keys_ref, vals_ref, skeys_ref, svals_ref, fail_ref,
                  bcol_scratch, bval_scratch, sem_c, sem_v,
-                 *, table: int, spill: int, f_chunk: int):
+                 *, table: int, spill: int, f_chunk: int, tile: int):
     keys_ref[...] = jnp.full_like(keys_ref, -1)
     vals_ref[...] = jnp.zeros_like(vals_ref)
     skeys_ref[...] = jnp.full_like(skeys_ref, -1)
@@ -89,39 +109,51 @@ def _hash_kernel(a_rows_ref, a_vals_ref, a_starts_ref, a_lens_ref,
     nnz_pad = b_cols_hbm.shape[0]
 
     def e_body(e, _):
-        k = a_rows_ref[0, e]
-        av = a_vals_ref[0, e]
-        active = k >= 0
-        start = a_starts_ref[0, e]
-        length = jnp.where(active, a_lens_ref[0, e], 0)
-        n_chunks = pl.cdiv(length, f_chunk)
+        # per-row lanes for A slot e: B-row id, A value, B-row start/len
+        ks = jax.lax.dynamic_slice(a_rows_ref[...], (0, e), (tile, 1))
+        avs = jax.lax.dynamic_slice(a_vals_ref[...], (0, e), (tile, 1))
+        starts = jax.lax.dynamic_slice(a_starts_ref[...], (0, e), (tile, 1))
+        lens = jax.lax.dynamic_slice(a_lens_ref[...], (0, e), (tile, 1))
+        lengths = jnp.where(ks >= 0, lens, 0)          # (T, 1)
+        # rows stream their B rows in lockstep; rows whose B row ran out
+        # are masked by in_row below, so the shared chunk count is the
+        # tile's max — per-row insert order is untouched by the batching
+        n_chunks = pl.cdiv(jnp.max(lengths), f_chunk)
 
         def c_body(c, _):
-            src = jnp.clip(start + c * f_chunk, 0, nnz_pad - f_chunk)
-            cp_c = pltpu.make_async_copy(
-                b_cols_hbm.at[pl.ds(src, f_chunk)], bcol_scratch, sem_c)
-            cp_v = pltpu.make_async_copy(
-                b_vals_hbm.at[pl.ds(src, f_chunk)], bval_scratch, sem_v)
-            cp_c.start()
-            cp_v.start()
-            cp_c.wait()
-            cp_v.wait()
+            src = jnp.clip(starts + c * f_chunk, 0, nnz_pad - f_chunk)
+            # one DMA per tile row (starts differ per row); all T copies
+            # are in flight together before the first wait
+            copies = []
+            for ti in range(tile):
+                cp_c = pltpu.make_async_copy(
+                    b_cols_hbm.at[pl.ds(src[ti, 0], f_chunk)],
+                    bcol_scratch.at[ti], sem_c.at[ti])
+                cp_v = pltpu.make_async_copy(
+                    b_vals_hbm.at[pl.ds(src[ti, 0], f_chunk)],
+                    bval_scratch.at[ti], sem_v.at[ti])
+                cp_c.start()
+                cp_v.start()
+                copies.append((cp_c, cp_v))
+            for cp_c, cp_v in copies:
+                cp_c.wait()
+                cp_v.wait()
             # chunk may start below `start` after the clip; recompute offsets
-            pos = jax.lax.broadcasted_iota(jnp.int32, (1, f_chunk), 1) + src
-            in_row = (pos >= start) & (pos < start + length)
-            cols = bcol_scratch[...].reshape(1, f_chunk)
-            bvals = bval_scratch[...].reshape(1, f_chunk)
+            pos = jax.lax.broadcasted_iota(jnp.int32, (tile, f_chunk), 1) + src
+            in_row = (pos >= starts) & (pos < starts + lengths)
+            cols = bcol_scratch[...]                   # (T, f_chunk)
+            bvals = bval_scratch[...]
 
             def i_body(i, _):
-                col = jax.lax.dynamic_slice(cols, (0, i), (1, 1))[0, 0]
-                use = (jax.lax.dynamic_slice(in_row, (0, i), (1, 1))[0, 0]
+                col = jax.lax.dynamic_slice(cols, (0, i), (tile, 1))
+                use = (jax.lax.dynamic_slice(in_row, (0, i), (tile, 1))
                        & (col >= 0))
-                v = av * jax.lax.dynamic_slice(bvals, (0, i), (1, 1))[0, 0]
+                v = avs * jax.lax.dynamic_slice(bvals, (0, i), (tile, 1))
                 ok_t = _probe_insert(keys_ref, vals_ref, col, v, use, table)
                 rem = use & ~ok_t
                 ok_s = _probe_insert(skeys_ref, svals_ref, col, v, rem,
                                      spill)
-                fail_ref[0, 0] += jnp.where(rem & ~ok_s, 1, 0)
+                fail_ref[...] += jnp.where(rem & ~ok_s, 1, 0)
                 return 0
 
             jax.lax.fori_loop(0, f_chunk, i_body, 0)
@@ -133,11 +165,11 @@ def _hash_kernel(a_rows_ref, a_vals_ref, a_starts_ref, a_lens_ref,
     jax.lax.fori_loop(0, e_total, e_body, 0)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("table", "spill", "f_chunk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("table", "spill", "f_chunk",
+                                             "tile", "interpret"))
 def spgemm_hash_bin(a_rows, a_vals, a_starts, a_lens, b_cols, b_vals,
                     *, table: int, spill: int, f_chunk: int = F_CHUNK,
-                    interpret: bool = False):
+                    tile: int = DEFAULT_TILE_ROWS, interpret: bool = False):
     """Run the hash-accumulator kernel over one bin of output rows.
 
     a_rows:   (R, E) int32 — B-row ids per output row (pad = -1)
@@ -148,44 +180,59 @@ def spgemm_hash_bin(a_rows, a_vals, a_starts, a_lens, b_cols, b_vals,
               >= f_chunk
     b_vals:   (nnzB_pad,) float
     table/spill: pow2 slot counts for the primary/spill tables.
+    tile: rows probed per grid step (vectorized over the tile). R is
+          padded to a tile multiple with inert rows internally and the
+          outputs sliced back, so per-row results are independent of
+          ``tile`` (``tile=1`` is the row-sequential degeneracy).
     Returns (keys (R, table) int32 with -1 empties, vals (R, table),
              skeys (R, spill), svals (R, spill), fail (R, 1) int32).
     ``fail > 0`` iff the row's distinct count exceeds table + spill.
     """
     r, e = a_rows.shape
     dtype = b_vals.dtype
+    tile = max(int(tile), 1)
+    r_pad = ((r + tile - 1) // tile) * tile
+    if r_pad != r:
+        pad = ((0, r_pad - r), (0, 0))
+        a_rows = jnp.pad(a_rows, pad, constant_values=-1)
+        a_vals = jnp.pad(a_vals, pad)
+        a_starts = jnp.pad(a_starts, pad)
+        a_lens = jnp.pad(a_lens, pad)
     kernel = functools.partial(_hash_kernel, table=table, spill=spill,
-                               f_chunk=f_chunk)
-    return pl.pallas_call(
+                               f_chunk=f_chunk, tile=tile)
+    out = pl.pallas_call(
         kernel,
-        grid=(r,),
+        grid=(r_pad // tile,),
         in_specs=[
-            pl.BlockSpec((1, e), lambda i: (i, 0)),
-            pl.BlockSpec((1, e), lambda i: (i, 0)),
-            pl.BlockSpec((1, e), lambda i: (i, 0)),
-            pl.BlockSpec((1, e), lambda i: (i, 0)),
+            pl.BlockSpec((tile, e), lambda i: (i, 0)),
+            pl.BlockSpec((tile, e), lambda i: (i, 0)),
+            pl.BlockSpec((tile, e), lambda i: (i, 0)),
+            pl.BlockSpec((tile, e), lambda i: (i, 0)),
             pl.BlockSpec(memory_space=pltpu.ANY),
             pl.BlockSpec(memory_space=pltpu.ANY),
         ],
         out_specs=[
-            pl.BlockSpec((1, table), lambda i: (i, 0)),
-            pl.BlockSpec((1, table), lambda i: (i, 0)),
-            pl.BlockSpec((1, spill), lambda i: (i, 0)),
-            pl.BlockSpec((1, spill), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile, table), lambda i: (i, 0)),
+            pl.BlockSpec((tile, table), lambda i: (i, 0)),
+            pl.BlockSpec((tile, spill), lambda i: (i, 0)),
+            pl.BlockSpec((tile, spill), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((r, table), jnp.int32),
-            jax.ShapeDtypeStruct((r, table), dtype),
-            jax.ShapeDtypeStruct((r, spill), jnp.int32),
-            jax.ShapeDtypeStruct((r, spill), dtype),
-            jax.ShapeDtypeStruct((r, 1), jnp.int32),
+            jax.ShapeDtypeStruct((r_pad, table), jnp.int32),
+            jax.ShapeDtypeStruct((r_pad, table), dtype),
+            jax.ShapeDtypeStruct((r_pad, spill), jnp.int32),
+            jax.ShapeDtypeStruct((r_pad, spill), dtype),
+            jax.ShapeDtypeStruct((r_pad, 1), jnp.int32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((f_chunk,), jnp.int32),
-            pltpu.VMEM((f_chunk,), dtype),
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
+            pltpu.VMEM((tile, f_chunk), jnp.int32),
+            pltpu.VMEM((tile, f_chunk), dtype),
+            pltpu.SemaphoreType.DMA((tile,)),
+            pltpu.SemaphoreType.DMA((tile,)),
         ],
         interpret=interpret,
     )(a_rows, a_vals, a_starts, a_lens, b_cols, b_vals)
+    if r_pad != r:
+        out = [x[:r] for x in out]
+    return tuple(out)

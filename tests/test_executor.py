@@ -1,6 +1,6 @@
-"""Unified executor pipeline: pipelined == serial bit-identity, shape
-bucketing of shards (shared jit specializations), overlap metrics, and the
-EscOverflowError / PlanCache-locking satellites.
+"""Unified executor pipeline: pipelined/threaded == serial bit-identity,
+shape bucketing of shards (shared jit specializations), overlap metrics,
+and the EscOverflowError / PlanCache-locking satellites.
 
 conftest forces a 4-device host platform, so multi-device dispatch and the
 completion-order collect run for real (virtual CPU devices — the same code
@@ -8,6 +8,7 @@ path as a multi-chip host).
 """
 import os
 import threading
+import time
 import types
 
 import jax
@@ -38,15 +39,16 @@ GENS = [
 
 
 def both_executors(plan, a, b, n_dev):
-    """(serial, pipelined) results for a plan at a device count."""
+    """(serial, pipelined, threaded) results for a plan at a device count."""
     if n_dev == 1:
-        c1, r1 = planner.execute_plan(plan, a, b, executor="serial")
-        c2, r2 = planner.execute_plan(plan, a, b, executor="pipelined")
-        return (c1, r1), (c2, r2)
-    splan = partition.partition_plan(plan, n_dev)
-    c1, r1 = planner.execute_sharded_plan(splan, a, b, executor="serial")
-    c2, r2 = planner.execute_sharded_plan(splan, a, b, executor="pipelined")
-    return (c1, r1), (c2, r2)
+        def run(ex):
+            return planner.execute_plan(plan, a, b, executor=ex)
+    else:
+        splan = partition.partition_plan(plan, n_dev)
+
+        def run(ex):
+            return planner.execute_sharded_plan(splan, a, b, executor=ex)
+    return run("serial"), run("pipelined"), run("threaded")
 
 
 # ---------------------------------------------------------------------------
@@ -58,11 +60,14 @@ def both_executors(plan, a, b, n_dev):
 def test_pipelined_equals_serial(name, gen, n_dev):
     a = gen()
     plan = planner.build_plan(a, a)
-    (c1, r1), (c2, r2) = both_executors(plan, a, a, n_dev)
+    (c1, r1), (c2, r2), (c3, r3) = both_executors(plan, a, a, n_dev)
     assert_bit_identical(c1, c2)
-    assert r1.nnz_out == r2.nnz_out
+    assert_bit_identical(c1, c3)
+    assert r1.nnz_out == r2.nnz_out == r3.nnz_out
     assert r1.executor == "serial" and r2.executor == "pipelined"
+    assert r3.executor == "threaded"
     assert r1.overlap_seconds == 0.0 and r1.merge_overlap_frac == 0.0
+    assert 0.0 <= r3.merge_overlap_frac <= 1.0
 
 
 @pytest.mark.parametrize("wf", ["estimation", "symbolic", "upper_bound"])
@@ -71,8 +76,9 @@ def test_pipelined_equals_serial_across_workflows(wf, n_dev):
     a = formats.random_uniform_csr(70, 180, 180, 9.0)
     plan = planner.build_plan(a, a, force_workflow=wf)
     assert plan.workflow == wf
-    (c1, _), (c2, _) = both_executors(plan, a, a, n_dev)
+    (c1, _), (c2, _), (c3, _) = both_executors(plan, a, a, n_dev)
     assert_bit_identical(c1, c2)
+    assert_bit_identical(c1, c3)
 
 
 @pytest.mark.parametrize("n_dev", [1, 4])
@@ -84,10 +90,12 @@ def test_pipelined_equals_serial_under_overflow(n_dev):
                       cr_threshold=0.0, er_threshold=0.0,
                       upper_bound_avg_products=0.0)
     plan = planner.build_plan(a, a, cfg, force_workflow="estimation")
-    (c1, r1), (c2, r2) = both_executors(plan, a, a, n_dev)
+    (c1, r1), (c2, r2), (c3, r3) = both_executors(plan, a, a, n_dev)
     assert r1.overflow_rows > 0
     assert r2.overflow_rows == r1.overflow_rows
+    assert r3.overflow_rows == r1.overflow_rows
     assert_bit_identical(c1, c2)
+    assert_bit_identical(c1, c3)
 
 
 @pytest.mark.parametrize("n_dev", [1, 4])
@@ -96,21 +104,24 @@ def test_pipelined_equals_serial_empty_and_single_bin_plans(n_dev):
     z = formats.csr_from_dense(np.zeros((6, 6), np.float32))
     plan = planner.build_plan(z, z)
     assert not plan.dense and plan.esc is None
-    (c1, r1), (c2, r2) = both_executors(plan, z, z, n_dev)
-    assert r1.nnz_out == r2.nnz_out == 0
+    (c1, r1), (c2, r2), (c3, r3) = both_executors(plan, z, z, n_dev)
+    assert r1.nnz_out == r2.nnz_out == r3.nnz_out == 0
     assert_bit_identical(c1, c2)
+    assert_bit_identical(c1, c3)
     # ESC-only plan (hypersparse -> upper_bound short rows), no dense bins
     h = formats.hypersparse_csr(46, 300, 300)
     plan_h = planner.build_plan(h, h)
     if not plan_h.dense and plan_h.esc is not None:
-        (c1, _), (c2, _) = both_executors(plan_h, h, h, n_dev)
+        (c1, _), (c2, _), (c3, _) = both_executors(plan_h, h, h, n_dev)
         assert_bit_identical(c1, c2)
+        assert_bit_identical(c1, c3)
     # dense-only plan (banded estimation), empty ESC
     d = formats.banded_csr(47, 120, 120, 25)
     plan_d = planner.build_plan(d, d)
     assert plan_d.esc is None and plan_d.dense
-    (c1, _), (c2, _) = both_executors(plan_d, d, d, n_dev)
+    (c1, _), (c2, _), (c3, _) = both_executors(plan_d, d, d, n_dev)
     assert_bit_identical(c1, c2)
+    assert_bit_identical(c1, c3)
 
 
 @settings(max_examples=6, deadline=None)
@@ -126,8 +137,9 @@ def test_property_pipelined_exact_on_random_pairs(seed, n_dev):
     if a.nnz == 0 or b.nnz == 0:
         return
     plan = planner.build_plan(a, b)
-    (c1, _), (c2, _) = both_executors(plan, a, b, n_dev)
+    (c1, _), (c2, _), (c3, _) = both_executors(plan, a, b, n_dev)
     assert_bit_identical(c1, c2)
+    assert_bit_identical(c1, c3)
     np.testing.assert_allclose(np.asarray(c2.to_dense()), am @ bm, atol=1e-5)
 
 
@@ -159,14 +171,51 @@ def test_overlap_metrics_populated_on_multi_bin_plans():
     assert rep_s.overlap_seconds > 0.0
 
 
+def test_threaded_equals_serial_under_slow_collect(monkeypatch):
+    """Inject a slow collect (each slab materialization sleeps, releasing
+    the GIL): the merge worker must overlap real merge work with the
+    collect loop — overlap metrics strictly positive — while staying
+    bit-identical to the serial reference computed before the patch."""
+    a = formats.skewed_rows_csr(44, 400, 400, 5.0)
+    plan = planner.build_plan(a, a)
+    n_launches = len(plan.dense) + (plan.esc is not None) + len(plan.hash)
+    assert n_launches >= 2, "structure must produce a multi-launch plan"
+    c_ref, _ = planner.execute_plan(plan, a, a, executor="serial")
+
+    real = executor._materialize
+
+    def slow_materialize(it):
+        time.sleep(0.005)  # sleep releases the GIL: worker merges meanwhile
+        return real(it)
+
+    monkeypatch.setattr(executor, "_materialize", slow_materialize)
+    c_thr, rep = planner.execute_plan(plan, a, a, executor="threaded")
+    assert_bit_identical(c_ref, c_thr)
+    assert rep.executor == "threaded"
+    assert rep.overlap_seconds > 0.0
+    assert 0.0 < rep.merge_overlap_frac <= 1.0
+    for k in ("dispatch", "collect", "merge"):
+        assert k in rep.stage_seconds
+    # sharded threaded execution overlaps and stays exact too
+    splan = partition.partition_plan(plan, N_DEV)
+    c_s, rep_s = planner.execute_sharded_plan(splan, a, a,
+                                              executor="threaded")
+    assert_bit_identical(c_ref, c_s)
+    assert rep_s.overlap_seconds > 0.0
+
+
 def test_workflow_and_service_thread_executor_choice():
     a = formats.random_uniform_csr(81, 200, 200, 8.0)
     c_ser, r_ser = workflow.ocean_spgemm(a, a, cache=False,
                                          executor="serial")
     c_pip, r_pip = workflow.ocean_spgemm(a, a, cache=False,
                                          executor="pipelined")
+    c_thr, r_thr = workflow.ocean_spgemm(a, a, cache=False,
+                                         executor="threaded")
     assert r_ser.executor == "serial" and r_pip.executor == "pipelined"
+    assert r_thr.executor == "threaded"
     assert_bit_identical(c_ser, c_pip)
+    assert_bit_identical(c_ser, c_thr)
 
     svc = SpGEMMService(executor="serial")
     _, rep1 = svc.multiply(a, a)
@@ -445,8 +494,9 @@ def test_stale_zero_feed_clamped_not_dropped():
     live = np.asarray(plan.products) > 0
     assert len(plan.empty_rows) == int((~live).sum())
     for n_dev in (1, 4):
-        (c1, _), (c2, _) = both_executors(plan, a, a, n_dev)
+        (c1, _), (c2, _), (c3, _) = both_executors(plan, a, a, n_dev)
         assert_bit_identical(c1, c2)
+        assert_bit_identical(c1, c3)
         _assert_matches_reference(c1, ref)
 
 

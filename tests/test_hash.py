@@ -1,7 +1,8 @@
-"""Hash-accumulator rung: binning selection, kernel/XLA parity, executor
-bit-identity across serial / pipelined / sharded execution (incl. the
-overflow -> spill -> exact-ESC fallback), fused merge post-ops, jit-cache
-sharing across topologies, and the measured autotuner's cache discipline.
+"""Hash-accumulator rung: binning selection, kernel/XLA parity (incl. the
+multi-row tile's boundary cases), executor bit-identity across serial /
+pipelined / threaded / sharded execution (incl. the overflow -> spill ->
+exact-ESC fallback), fused merge post-ops, jit-cache sharing across
+topologies, and the measured autotuner's cache discipline.
 
 conftest forces a 4-device host platform, so sharded hash dispatch runs
 for real (virtual CPU devices).
@@ -31,13 +32,15 @@ def powerlaw_pair():
 
 
 def run_all_modes(plan, a, b):
-    """(serial, pipelined, sharded-2, sharded-4) results for one plan."""
+    """(serial, pipelined, threaded, sharded-2, sharded-4) results for one
+    plan — the full executor-mode property matrix."""
     outs = [planner.execute_plan(plan, a, b, executor="serial"),
-            planner.execute_plan(plan, a, b, executor="pipelined")]
-    for n_dev in (2, 4):
+            planner.execute_plan(plan, a, b, executor="pipelined"),
+            planner.execute_plan(plan, a, b, executor="threaded")]
+    for n_dev, mode in ((2, "pipelined"), (4, "threaded")):
         splan = partition.partition_plan(plan, n_dev)
         outs.append(planner.execute_sharded_plan(splan, a, b,
-                                                 executor="pipelined"))
+                                                 executor=mode))
     return outs
 
 
@@ -202,6 +205,69 @@ def test_hash_kernel_overflow_flag_exact():
     assert k_nnz[1] > width and x_nnz[1] > width
 
 
+def _tile_workload(r, seed=11):
+    """Non-overflow r-row hash workload (distinct cols < table + spill)."""
+    rng = np.random.default_rng(seed)
+    nb, blen = 6, 24
+    b_cols = rng.integers(0, 80, nb * blen).astype(np.int32)
+    b_vals = rng.integers(1, 5, nb * blen).astype(np.float32)
+    pad = formats.pow2_at_least(nb * blen, floor=128)
+    b_cols = np.concatenate([b_cols,
+                             np.full(pad - nb * blen, -1, np.int32)])
+    b_vals = np.concatenate([b_vals,
+                             np.zeros(pad - nb * blen, np.float32)])
+    a_rows = np.tile(np.arange(nb, dtype=np.int32), (r, 1))
+    a_vals = rng.integers(1, 4, (r, nb)).astype(np.float32)
+    a_starts = np.tile(np.arange(nb, dtype=np.int32) * blen, (r, 1))
+    a_lens = np.full((r, nb), blen, np.int32)
+    return a_rows, a_vals, a_starts, a_lens, b_cols, b_vals
+
+
+@pytest.mark.parametrize("r", [1, 5, 8, 11])
+def test_hash_kernel_tile_boundaries(r):
+    """The multi-row tiled kernel is bit-identical across tile sizes,
+    including row counts that are not a multiple of the tile (the kernel's
+    internal pad path) and the T=1 row-sequential degeneracy."""
+    work = _tile_workload(r)
+    table, spill = 64, binning.hash_spill_of(64)
+    outs = {}
+    for tile in (1, 4, 8):
+        keys, vals, skeys, svals, fail = khash.spgemm_hash_bin(
+            *work, table=table, spill=spill, f_chunk=128, tile=tile,
+            interpret=True)
+        outs[tile] = tuple(np.asarray(x) for x in kops.extract_hash_rows(
+            keys, vals, skeys, svals, fail))
+        assert outs[tile][0].shape[0] == r  # pad rows sliced off
+    for tile in (4, 8):
+        for x, y in zip(outs[1], outs[tile]):
+            np.testing.assert_array_equal(x, y)
+    # the T=1 degeneracy matches the XLA twin exactly (per-row tables
+    # depend only on the row's own products, so this covers every tile)
+    a_lens = work[3]
+    p_cap = formats.pow2_at_least(int(a_lens.sum()), floor=64)
+    x_out = tuple(np.asarray(x) for x in kops._hash_bin_xla(
+        *work, table=table, spill=spill, n_cols=512, p_cap=p_cap))
+    nnz = outs[1][2]
+    assert (nnz == x_out[2]).all()
+    for i in range(r):
+        n = int(nnz[i])
+        np.testing.assert_array_equal(outs[1][0][i, :n], x_out[0][i, :n])
+        np.testing.assert_array_equal(outs[1][1][i, :n], x_out[1][i, :n])
+
+
+def test_hash_bin_op_tile_invariant_through_backend():
+    """kops.hash_bin_op output is invariant to the tile knob on whichever
+    backend path is active (Pallas tiles the grid, XLA ignores it)."""
+    work = _tile_workload(5, seed=12)
+    table, spill = 64, binning.hash_spill_of(64)
+    p_cap = formats.pow2_at_least(int(work[3].sum()), floor=64)
+    outs = [tuple(np.asarray(x) for x in kops.hash_bin_op(
+        *work, table=table, spill=spill, n_cols=512, p_cap=p_cap,
+        tile=tile)) for tile in (1, 8)]
+    for x, y in zip(*outs):
+        np.testing.assert_array_equal(x, y)
+
+
 # ---------------------------------------------------------------------------
 # Executor bit-identity matrix
 # ---------------------------------------------------------------------------
@@ -292,8 +358,9 @@ def test_hash_shard_shapes_and_jit_cache_across_topologies():
         for sh in sp.shards:
             for hb in sh.hash:
                 parent = plan.hash[hb.bin_id - len(plan.dense)]
-                assert (hb.table, hb.spill, hb.f_chunk) == \
-                    (parent.table, parent.spill, parent.f_chunk)
+                assert (hb.table, hb.spill, hb.f_chunk, hb.tile) == \
+                    (parent.table, parent.spill, parent.f_chunk,
+                     parent.tile)
                 want = partition.bucket_shard_rows(hb.n_valid,
                                                    len(parent.rows))
                 assert hb.a_rows.shape[0] == want
@@ -326,9 +393,13 @@ def test_tuning_cache_measures_once_and_lru():
     cache = tuning.TuningCache(maxsize=2)
     t1 = tuning.hash_tuning_for(64, cache=cache)
     assert t1.load_factor in tuning.LOAD_FACTOR_CANDIDATES
-    f_cands = (tuning.F_CHUNK_CANDIDATES_PALLAS if kops._use_pallas_path()
+    pallas = kops._use_pallas_path()
+    f_cands = (tuning.F_CHUNK_CANDIDATES_PALLAS if pallas
                else tuning.F_CHUNK_CANDIDATES)
     assert t1.f_chunk in f_cands
+    t_cands = (tuning.TILE_CANDIDATES_PALLAS if pallas
+               else tuning.TILE_CANDIDATES)
+    assert t1.tile_rows in t_cands
     misses0 = cache.stats()["misses"]
     t2 = tuning.hash_tuning_for(64, cache=cache)
     assert t2 == t1  # cached, not re-measured
@@ -349,9 +420,34 @@ def test_tuning_failure_falls_back_to_default(monkeypatch):
     monkeypatch.setattr(tuning, "_measure", boom)
     t = tuning.hash_tuning_for(512, cache=cache)
     assert t == tuning.DEFAULT_TUNING
+    assert t.tile_rows == 8 and t.f_chunk == 128
     # the failure is cached: probed once, not per plan
     assert tuning.hash_tuning_for(512, cache=cache) == tuning.DEFAULT_TUNING
     assert cache.stats()["hits"] == 1
+
+
+def test_tuning_measures_through_real_backend_path(monkeypatch):
+    """_measure must time kops.hash_bin_op — the executor's dispatching
+    entry point — and sweep the tile dimension: every candidate call
+    carries explicit f_chunk/tile kwargs from the candidate grids."""
+    calls = []
+    real = kops.hash_bin_op
+
+    def spy(*args, **kw):
+        calls.append(kw)
+        return real(*args, **kw)
+
+    monkeypatch.setattr(kops, "hash_bin_op", spy)
+    t = tuning.hash_tuning_for(64, cache=tuning.TuningCache())
+    assert calls, "measurement never reached the backend path"
+    pallas = kops._use_pallas_path()
+    f_cands = (tuning.F_CHUNK_CANDIDATES_PALLAS if pallas
+               else tuning.F_CHUNK_CANDIDATES)
+    t_cands = (tuning.TILE_CANDIDATES_PALLAS if pallas
+               else tuning.TILE_CANDIDATES)
+    assert {kw["f_chunk"] for kw in calls} == set(f_cands)
+    assert {kw["tile"] for kw in calls} == set(t_cands)
+    assert t.f_chunk in f_cands and t.tile_rows in t_cands
 
 
 def test_tuning_key_separates_rungs():
@@ -359,10 +455,11 @@ def test_tuning_key_separates_rungs():
     assert tuning.tuning_key(64) == tuning.tuning_key(64)
 
 
-def test_planner_exec_uses_tuned_f_chunk():
+def test_planner_exec_uses_tuned_f_chunk_and_tile():
     a, b = powerlaw_pair()
     plan = planner.build_plan(a, b)
     assert plan.hash
     for hb in plan.hash:
         tuned = tuning.hash_tuning_for(hb.table)
         assert hb.f_chunk == tuned.f_chunk
+        assert hb.tile == tuned.tile_rows
