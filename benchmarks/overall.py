@@ -19,7 +19,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from repro.core import planner, workflow
+from repro.core import planner, tuning, workflow
 from repro.kernels import ops as kops
 
 from . import common
@@ -148,3 +148,27 @@ def run(rows: list, scale: int = 1):
     rows.append(("overall/plan_setup/total", tot_fresh * 1e6,
                  f"cached_us={tot_cached * 1e6:.1f} "
                  f"setup_speedup=x{tot_fresh / max(tot_cached, 1e-12):.0f}"))
+
+    # drain the autotuner's measurement log into the artifact: every
+    # candidate the sweep timed (winners *and* losers) plus which
+    # descending tile-ladder tails the monotone-regression rule pruned,
+    # so losing-candidate timings survive for later hardware comparisons
+    for rung, entries in sorted(tuning.measurement_log().items()):
+        for e in entries:
+            if "pruned_tiles" in e:
+                rows.append((
+                    f"tuning/rung{rung}/pruned", 0.0,
+                    f"load_factor={e['load_factor']} "
+                    f"f_chunk={e['f_chunk']} "
+                    f"pruned_tiles={'-'.join(map(str, e['pruned_tiles']))}"))
+            elif "winner" in e:
+                w = e["winner"]
+                rows.append((
+                    f"tuning/rung{rung}/winner", e["seconds"] * 1e6,
+                    f"load_factor={w['load_factor']} "
+                    f"f_chunk={w['f_chunk']} tile_rows={w['tile_rows']}"))
+            else:
+                rows.append((
+                    f"tuning/rung{rung}/candidate", e["seconds"] * 1e6,
+                    f"load_factor={e['load_factor']} "
+                    f"f_chunk={e['f_chunk']} tile_rows={e['tile_rows']}"))

@@ -18,6 +18,24 @@ import sys
 import time
 
 
+def check_trajectory_schema(traj: list, entry: dict) -> None:
+    """Guard the append-only trajectory record: a new entry must carry
+    every key the latest established row has (additive fields are
+    tolerated — older rows simply lack them; *dropping* an established
+    key fails loudly so CI's canary can't silently lose the field it
+    compares against)."""
+    if not traj:
+        return
+    established = set(traj[-1].keys())
+    missing = established - set(entry.keys())
+    if missing:
+        raise SystemExit(
+            "trajectory schema violation: new entry drops established "
+            f"key(s) {sorted(missing)} — trajectory rows are append-only "
+            "and must keep the established key set (new additive fields "
+            "are fine)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=1)
@@ -111,6 +129,8 @@ def main() -> None:
     serving = {"p50_us": None, "p95_us": None, "p99_us": None,
                "occupancy": None, "shed_rate": None}
     serving_parity_rows = 0
+    plans_warmed = plan_warm_hits = sketch_warm_hits = 0
+    tuning_rows = 0
     for name, us, derived in rows:
         if name == "overall/plan_setup/total":
             setup_us = us
@@ -159,6 +179,14 @@ def main() -> None:
                             "shed_rate"):
                     if part.startswith(key + "="):
                         serving[key] = float(part.split("=", 1)[1])
+                if part.startswith("plans_warmed="):
+                    plans_warmed += int(part.split("=", 1)[1])
+                if part.startswith("plan_warm_hits="):
+                    plan_warm_hits += int(part.split("=", 1)[1])
+                if part.startswith("sketch_warm_hits="):
+                    sketch_warm_hits += int(part.split("=", 1)[1])
+        if name.startswith("tuning/"):
+            tuning_rows += 1
     wall_s = sum(module_seconds.values())
     summary = {"plan_setup_fresh_us": setup_us,
                "plan_setup_cached_us": cached_us,
@@ -234,7 +262,20 @@ def main() -> None:
                "serving_p99_us": serving["p99_us"],
                "serving_batch_occupancy": serving["occupancy"],
                "serving_shed_rate": serving["shed_rate"],
-               "serving_parity_rows": serving_parity_rows}
+               "serving_parity_rows": serving_parity_rows,
+               # plan-warmer canary: benchmarks/serving.py runs a burst
+               # where the background warmer builds every queued plan
+               # before workers start, asserts the warmed outputs
+               # bit-identical to serial references, and emits these
+               # counters (CI's plan-setup canary asserts
+               # plan_warm_hits >= 1)
+               "plans_warmed": plans_warmed,
+               "plan_warm_hits": plan_warm_hits,
+               "sketch_warm_hits": sketch_warm_hits,
+               # autotune sweep evidence: tuning/... rows carry every
+               # measured candidate (including losers and pruned tile
+               # tails) drained from core.tuning.measurement_log()
+               "tuning_measurement_rows": tuning_rows}
     if setup_us is not None:
         print(f"# BENCH summary: setup_us={setup_us:.1f} "
               f"cached_setup_us={cached_us:.1f} wall_s={wall_s:.1f}",
@@ -276,6 +317,8 @@ def main() -> None:
                 "wave2_overlap_us": summary["wave2_overlap_us"],
                 "hash_bin_rows": summary["hash_bin_rows"],
                 "serving_p50_us": summary["serving_p50_us"],
+                "plans_warmed": summary["plans_warmed"],
+                "plan_warm_hits": summary["plan_warm_hits"],
             }
             try:
                 with open(args.trajectory) as f:
@@ -284,6 +327,7 @@ def main() -> None:
                     traj = []
             except (OSError, ValueError):
                 traj = []
+            check_trajectory_schema(traj, entry)
             traj.append(entry)
             with open(args.trajectory, "w") as f:
                 json.dump(traj, f, indent=1)

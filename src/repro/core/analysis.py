@@ -33,7 +33,7 @@ from . import hll
 from .dispatch import (DeviceSpec, Launch, collect_in_completion_order,
                        device_context, overlap_host_work, resolve_devices,
                        start_async_host_copies)
-from .formats import CSR, csr_from_arrays, flat_gather_index, pow2_at_least
+from .formats import CSR, flat_gather_index, pow2_at_least
 from .hll import row_ids_from_indptr
 
 
@@ -78,11 +78,13 @@ class OceanConfig:
 # segment that is dropped: masked slots must never touch a real row's
 # statistics, because the sharded pipeline's row blocks carry pow2 shape
 # padding (and callers may pass capacity-padded CSRs).
+#
+# Each stage has a traceable ``_impl`` body shared by the standalone jitted
+# wrapper and the fused wave jits below — every stage is an integer segment
+# reduction, so fusing them into one launch cannot change any value.
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("num_rows_a",))
-def products_per_row(a_indptr, a_indices, b_indptr, *, num_rows_a: int):
-    """Number of intermediate products per output row — O(nnz_A)."""
+def _products_impl(a_indptr, a_indices, b_indptr, num_rows_a: int):
     cap = a_indices.shape[0]
     nnz_a = a_indptr[-1]
     valid = jnp.arange(cap, dtype=jnp.int32) < nnz_a
@@ -95,9 +97,7 @@ def products_per_row(a_indptr, a_indices, b_indptr, *, num_rows_a: int):
                                num_segments=num_rows_a + 1)[:num_rows_a]
 
 
-@partial(jax.jit, static_argnames=("num_rows",))
-def row_col_ranges(indptr, indices, *, num_rows: int):
-    """Per-row (min_col, max_col) — used to bound dense-accumulator windows."""
+def _ranges_impl(indptr, indices, num_rows: int):
     cap = indices.shape[0]
     nnz = indptr[-1]
     valid = jnp.arange(cap, dtype=jnp.int32) < nnz
@@ -111,9 +111,7 @@ def row_col_ranges(indptr, indices, *, num_rows: int):
     return mins, maxs
 
 
-@partial(jax.jit, static_argnames=("num_rows_a",))
-def output_col_ranges(a_indptr, a_indices, b_min, b_max, *, num_rows_a: int):
-    """Upper bound on each C row's column range from B-row ranges."""
+def _out_ranges_impl(a_indptr, a_indices, b_min, b_max, num_rows_a: int):
     cap = a_indices.shape[0]
     nnz_a = a_indptr[-1]
     valid = jnp.arange(cap, dtype=jnp.int32) < nnz_a
@@ -126,6 +124,57 @@ def output_col_ranges(a_indptr, a_indices, b_min, b_max, *, num_rows_a: int):
     hi = jax.ops.segment_max(jnp.where(valid, b_max[k], -1), row,
                              num_segments=num_rows_a + 1)[:num_rows_a]
     return lo, hi
+
+
+@partial(jax.jit, static_argnames=("num_rows_a",))
+def products_per_row(a_indptr, a_indices, b_indptr, *, num_rows_a: int):
+    """Number of intermediate products per output row — O(nnz_A)."""
+    return _products_impl(a_indptr, a_indices, b_indptr, num_rows_a)
+
+
+@partial(jax.jit, static_argnames=("num_rows",))
+def row_col_ranges(indptr, indices, *, num_rows: int):
+    """Per-row (min_col, max_col) — used to bound dense-accumulator windows."""
+    return _ranges_impl(indptr, indices, num_rows)
+
+
+@partial(jax.jit, static_argnames=("num_rows_a",))
+def output_col_ranges(a_indptr, a_indices, b_min, b_max, *, num_rows_a: int):
+    """Upper bound on each C row's column range from B-row ranges."""
+    return _out_ranges_impl(a_indptr, a_indices, b_min, b_max, num_rows_a)
+
+
+# Fused wave launches: one device dispatch (and one async D2H) per wave
+# instead of one per stage. The monolithic path runs all three statistics
+# stages in a single launch; the sharded path pairs each device's A-block
+# with its same-slot B-block so wave 1 (products + B ranges) and wave 2
+# (output ranges + sketches) are each one launch per device.
+
+@partial(jax.jit, static_argnames=("num_rows_a", "num_rows_b"))
+def _fused_stats(a_indptr, a_indices, b_indptr, b_indices,
+                 *, num_rows_a: int, num_rows_b: int):
+    prod = _products_impl(a_indptr, a_indices, b_indptr, num_rows_a)
+    b_min, b_max = _ranges_impl(b_indptr, b_indices, num_rows_b)
+    lo, hi = _out_ranges_impl(a_indptr, a_indices, b_min, b_max, num_rows_a)
+    return prod, lo, hi
+
+
+@partial(jax.jit, static_argnames=("num_rows_a", "num_rows_b"))
+def _fused_wave1(a_indptr, a_indices, b_indptr_full, sb_indptr, sb_indices,
+                 *, num_rows_a: int, num_rows_b: int):
+    prod = _products_impl(a_indptr, a_indices, b_indptr_full, num_rows_a)
+    mins, maxs = _ranges_impl(sb_indptr, sb_indices, num_rows_b)
+    return prod, mins, maxs
+
+
+@partial(jax.jit, static_argnames=("num_rows_a", "num_rows_b",
+                                   "m_regs", "seed"))
+def _fused_wave2(a_indptr, a_indices, b_min, b_max, sb_indptr, sb_indices,
+                 *, num_rows_a: int, num_rows_b: int, m_regs: int, seed: int):
+    lo, hi = _out_ranges_impl(a_indptr, a_indices, b_min, b_max, num_rows_a)
+    regs = hll.sketch_registers_impl(sb_indptr, sb_indices, m_regs,
+                                     num_rows_b, seed)
+    return lo, hi, regs
 
 
 @dataclasses.dataclass
@@ -196,7 +245,10 @@ def sketches_for(b: CSR, m_regs: int, seed: int,
     key = (m_regs, seed)
     if sketch_cache is not None and key in sketch_cache:
         return sketch_cache[key]
-    sk = hll.sketch_rows(b, m_regs, seed=seed)
+    sp, si, r_pad = _block_arrays(np.asarray(b.indptr),
+                                  np.asarray(b.indices), 0, b.m)
+    sk = hll.build_sketches(sp, si, m_regs=m_regs, num_rows=r_pad,
+                            seed=seed)[: b.m]
     if sketch_cache is not None:
         sketch_cache[key] = sk
     return sk
@@ -206,30 +258,52 @@ def sketches_for(b: CSR, m_regs: int, seed: int,
 # Sharded device stages
 # ---------------------------------------------------------------------------
 
-# Shard-block shapes are rounded up pow2 ladders (clamped to the full
-# matrix) so analysis shards share jit specializations across splits and
-# topologies, exactly like partition.bucket_shard_rows does for execution
-# shards. Padding is inert: indptr repeats its last value (empty rows) and
-# index slots past nnz are masked by every stage above.
+# Shard-block shapes are rounded up pow2 ladders so analysis blocks share
+# jit specializations across matrices, splits, and topologies, exactly like
+# partition.bucket_shard_rows does for execution shards. The ladders are
+# deliberately *unclamped* (no cap at the matrix's own size): clamping would
+# make each block's shape depend on (m, nnz) of the full matrix, forking a
+# fresh specialization per input — the dominant cold-plan cost. Padding is
+# inert: indptr repeats its last value (empty rows) and index slots past nnz
+# are masked by every stage above.
 SHARD_ROW_FLOOR = 64
 SHARD_NNZ_FLOOR = 256
 
 
-def _block_arrays(indptr: np.ndarray, indices: np.ndarray, r0: int, r1: int,
-                  *, num_rows: int, nnz_total: int
+def _block_arrays(indptr: np.ndarray, indices: np.ndarray, r0: int, r1: int
                   ) -> Tuple[np.ndarray, np.ndarray, int]:
     """Padded (sub_indptr, sub_indices, padded_rows) of rows [r0, r1)."""
     rows = r1 - r0
     lo, hi = int(indptr[r0]), int(indptr[r1])
-    r_pad = min(pow2_at_least(max(rows, 1), floor=SHARD_ROW_FLOOR),
-                max(num_rows, 1))
-    n_pad = min(pow2_at_least(max(hi - lo, 1), floor=SHARD_NNZ_FLOOR),
-                max(nnz_total, 1))
+    r_pad = pow2_at_least(max(rows, 1), floor=SHARD_ROW_FLOOR)
+    n_pad = pow2_at_least(max(hi - lo, 1), floor=SHARD_NNZ_FLOOR)
     sub_ptr = np.full(r_pad + 1, hi - lo, np.int32)
     sub_ptr[: rows + 1] = indptr[r0:r1 + 1] - lo
     sub_idx = np.zeros(n_pad, np.int32)
     sub_idx[: hi - lo] = indices[lo:hi]
     return sub_ptr, sub_idx, r_pad
+
+
+def _bucket_ptr(indptr: np.ndarray, rows: int) -> np.ndarray:
+    """Full indptr padded to the pow2 row bucket (trailing empty rows)."""
+    r_pad = pow2_at_least(max(rows, 1), floor=SHARD_ROW_FLOOR)
+    out = np.full(r_pad + 1, int(indptr[rows]), np.int32)
+    out[: rows + 1] = indptr[: rows + 1]
+    return out
+
+
+def _pad_sketch_rows(sk, rows: int) -> jax.Array:
+    """Pad a (n, m) sketch array with all-zero rows up to ``rows``.
+
+    Zero registers are the HLL identity (empty-row sketch), and merge
+    consumers mask invalid gathers anyway, so padding is value-inert; it
+    exists purely to keep merge-stage jit specializations bucketed."""
+    sk = jnp.asarray(sk)
+    if sk.shape[0] >= rows:
+        return sk
+    return jnp.concatenate(
+        [sk, jnp.zeros((rows - sk.shape[0], sk.shape[1]), jnp.int32)],
+        axis=0)
 
 
 @dataclasses.dataclass
@@ -324,26 +398,41 @@ class AnalysisPipeline:
                         known_sizes: Optional[np.ndarray] = None,
                         overlap_work=None) -> AnalysisResult:
         cfg = self.cfg
-        prod_row = products_per_row(a.indptr, a.indices, b.indptr,
-                                    num_rows_a=a.m)
-        b_min, b_max = row_col_ranges(b.indptr, b.indices, num_rows=b.m)
-        out_lo, out_hi = output_col_ranges(a.indptr, a.indices, b_min, b_max,
-                                           num_rows_a=a.m)
+        a_ptr, a_idx = np.asarray(a.indptr), np.asarray(a.indices)
+        b_ptr, b_idx = np.asarray(b.indptr), np.asarray(b.indices)
+        # Bucket both matrices onto the pow2 shape ladder so this single
+        # fused launch (all three statistics stages, one dispatch, one
+        # async D2H) reuses its jit specialization across matrices.
+        sa_ptr, sa_idx, ra_pad = _block_arrays(a_ptr, a_idx, 0, a.m)
+        sb_ptr, sb_idx, rb_pad = _block_arrays(b_ptr, b_idx, 0, b.m)
+        prod_p, lo_p, hi_p = _fused_stats(sa_ptr, sa_idx, sb_ptr, sb_idx,
+                                          num_rows_a=ra_pad,
+                                          num_rows_b=rb_pad)
+        wave1 = [Launch("stats", 0, (prod_p, lo_p, hi_p))]
+        start_async_host_copies(wave1)
         ov_s, ov_pending = 0.0, False
         if overlap_work is not None:
-            # The range arrays above are dispatched but not awaited: wrap
-            # them in a pseudo-launch so the prework runs behind whatever
-            # the backend still has in flight (it blocks only on wave-1
-            # products, which the work itself needs).
-            wave2 = [Launch("wave2", 0, (out_lo, out_hi))]
-            start_async_host_copies(wave2)
+            # The fused launch is dispatched but not awaited: the prework
+            # runs behind whatever the backend still has in flight (it
+            # blocks only on the products slice, which the work needs).
             _, ov_s, ov_pending = overlap_host_work(
-                wave2, lambda: overlap_work(np.asarray(prod_row)))
+                wave1, lambda: overlap_work(np.asarray(prod_p)[: a.m]))
+
+        def sketch_builder(m: int):
+            key = (m, cfg.seed)
+            if sketch_cache is not None and key in sketch_cache:
+                return sketch_cache[key], None
+            full = hll.build_sketches(sb_ptr, sb_idx, m_regs=m,
+                                      num_rows=rb_pad, seed=cfg.seed)
+            sk = full[: b.m]
+            if sketch_cache is not None:
+                sketch_cache[key] = sk
+            return sk, full
+
         return self._finish(
-            a, b, prod_row=prod_row, out_lo=out_lo, out_hi=out_hi,
-            build_sketches=build_sketches,
-            sketch_builder=lambda m: sketches_for(b, m, cfg.seed,
-                                                  sketch_cache),
+            a, b, prod_row=np.asarray(prod_p)[: a.m],
+            out_lo=np.asarray(lo_p)[: a.m], out_hi=np.asarray(hi_p)[: a.m],
+            build_sketches=build_sketches, sketch_builder=sketch_builder,
             n_shards=1, shard_seconds=None, known_sizes=known_sizes,
             wave2_overlap_seconds=ov_s, wave2_overlapped=ov_pending)
 
@@ -370,15 +459,13 @@ class AnalysisPipeline:
         b_blocks = contiguous_split(
             (b_ptr[1:] - b_ptr[:-1]).astype(np.int64), n_dev)
 
-        def commit(blocks, ptr, idx, num_rows, nnz_total) -> List[_ShardBlock]:
+        def commit(blocks, ptr, idx) -> List[_ShardBlock]:
             parts = []
             for i, (r0, r1) in enumerate(blocks):
                 if r1 <= r0:
                     continue
                 t0 = time.perf_counter()
-                sp, si, r_pad = _block_arrays(ptr, idx, r0, r1,
-                                              num_rows=num_rows,
-                                              nnz_total=nnz_total)
+                sp, si, r_pad = _block_arrays(ptr, idx, r0, r1)
                 dev = devs[i]
                 parts.append(_ShardBlock(
                     index=i, device=dev, r0=r0, r1=r1,
@@ -387,27 +474,50 @@ class AnalysisPipeline:
                 shard_s[i] += time.perf_counter() - t0
             return parts
 
-        a_parts = commit(a_blocks, a_ptr, a_idx, a.m, a.nnz)
-        b_parts = commit(b_blocks, b_ptr, b_idx, b.m, b.nnz)
+        a_parts = commit(a_blocks, a_ptr, a_idx)
+        b_parts = commit(b_blocks, b_ptr, b_idx)
+        b_by = {p.index: p for p in b_parts}
+        # The full-B indptr every products launch consumes rides the same
+        # pow2 row bucket as the blocks, so its shape (hence the fused
+        # wave's jit specialization) is matrix-independent too.
+        b_ptr_pad = _bucket_ptr(b_ptr, b.m)
+        rb_full = b_ptr_pad.shape[0] - 1
 
-        # ---- wave 1: per-block products + B column ranges ----
+        # ---- wave 1: one fused launch per device slot holding both an
+        # A-block (products) and its same-slot B-block (column ranges);
+        # unpaired blocks fall back to the standalone stage jits ----
         launches: List[Launch] = []
         order = 0
+        fused1 = set()
         for part in a_parts:
+            bpart = b_by.get(part.index)
             t0 = time.perf_counter()
             with device_context(part.device):
-                bp = jax.device_put(b_ptr, part.device)
-                out = products_per_row(part.indptr, part.indices, bp,
-                                       num_rows_a=part.r_pad)
-            launches.append(Launch(("prod", part), order, (out,)))
+                bp = jax.device_put(b_ptr_pad, part.device)
+                if bpart is not None:
+                    prod, mins, maxs = _fused_wave1(
+                        part.indptr, part.indices, bp,
+                        bpart.indptr, bpart.indices,
+                        num_rows_a=part.r_pad, num_rows_b=bpart.r_pad)
+                    launches.append(Launch(("w1", part, bpart), order,
+                                           (prod, mins, maxs)))
+                    fused1.add(part.index)
+                else:
+                    out = products_per_row(part.indptr, part.indices, bp,
+                                           num_rows_a=part.r_pad)
+                    launches.append(Launch(("prod", part, None), order,
+                                           (out,)))
             order += 1
             shard_s[part.index] += time.perf_counter() - t0
         for part in b_parts:
+            if part.index in fused1:
+                continue
             t0 = time.perf_counter()
             with device_context(part.device):
                 mins, maxs = row_col_ranges(part.indptr, part.indices,
                                             num_rows=part.r_pad)
-            launches.append(Launch(("brange", part), order, (mins, maxs)))
+            launches.append(Launch(("brange", part, None), order,
+                                   (mins, maxs)))
             order += 1
             shard_s[part.index] += time.perf_counter() - t0
         start_async_host_copies(launches)
@@ -415,19 +525,28 @@ class AnalysisPipeline:
         prod_row = np.zeros(a.m, np.int32)
         b_min = np.full(b.m, np.iinfo(np.int32).max, np.int32)
         b_max = np.full(b.m, np.iinfo(np.int32).min, np.int32)
+
+        def fold_prod(part, arr):
+            # disjoint row blocks: per-block segment sums concatenate
+            prod_row[part.r0:part.r1] = arr[: part.rows]
+
+        def fold_brange(part, mn, mx):
+            np.minimum(b_min[part.r0:part.r1], mn[: part.rows],
+                       out=b_min[part.r0:part.r1])
+            np.maximum(b_max[part.r0:part.r1], mx[: part.rows],
+                       out=b_max[part.r0:part.r1])
+
         for it in collect_in_completion_order(launches):
-            kind, part = it.tag
+            kind, part, bpart = it.tag
             t0 = time.perf_counter()
             host = [np.asarray(x) for x in it.arrays]
-            n = part.rows
-            if kind == "prod":
-                # disjoint row blocks: per-block segment sums concatenate
-                prod_row[part.r0:part.r1] = host[0][:n]
+            if kind == "w1":
+                fold_prod(part, host[0])
+                fold_brange(bpart, host[1], host[2])
+            elif kind == "prod":
+                fold_prod(part, host[0])
             else:
-                np.minimum(b_min[part.r0:part.r1], host[0][:n],
-                           out=b_min[part.r0:part.r1])
-                np.maximum(b_max[part.r0:part.r1], host[1][:n],
-                           out=b_max[part.r0:part.r1])
+                fold_brange(part, host[0], host[1])
             shard_s[part.index] += time.perf_counter() - t0
 
         total_products = int(prod_row.astype(np.int64).sum())
@@ -439,27 +558,52 @@ class AnalysisPipeline:
         cached_sk = (sketch_cache.get((m_regs, cfg.seed))
                      if need_sketches and sketch_cache is not None else None)
 
-        # ---- wave 2: output ranges (+ sketches on a cache miss) ----
+        # ---- wave 2: output ranges (+ sketches on a cache miss), again
+        # fused per device slot when the slot holds both blocks ----
+        build_shard_sketches = need_sketches and cached_sk is None
+        # The merged B ranges are broadcast padded with the min/max gather
+        # identities (matching the segment-op defaults above) so their
+        # shape stays on the row bucket; padded entries are masked.
+        bmin_pad = np.full(rb_full, np.iinfo(np.int32).max, np.int32)
+        bmin_pad[: b.m] = b_min
+        bmax_pad = np.full(rb_full, -1, np.int32)
+        bmax_pad[: b.m] = b_max
         launches = []
+        fused2 = set()
         for part in a_parts:
+            bpart = b_by.get(part.index) if build_shard_sketches else None
             t0 = time.perf_counter()
             with device_context(part.device):
-                bmin_d = jax.device_put(b_min, part.device)
-                bmax_d = jax.device_put(b_max, part.device)
-                lo, hi = output_col_ranges(part.indptr, part.indices,
-                                           bmin_d, bmax_d,
-                                           num_rows_a=part.r_pad)
-            launches.append(Launch(("orange", part), order, (lo, hi)))
+                bmin_d = jax.device_put(bmin_pad, part.device)
+                bmax_d = jax.device_put(bmax_pad, part.device)
+                if bpart is not None:
+                    lo, hi, regs = _fused_wave2(
+                        part.indptr, part.indices, bmin_d, bmax_d,
+                        bpart.indptr, bpart.indices,
+                        num_rows_a=part.r_pad, num_rows_b=bpart.r_pad,
+                        m_regs=m_regs, seed=cfg.seed)
+                    launches.append(Launch(("w2", part, bpart), order,
+                                           (lo, hi, regs)))
+                    fused2.add(part.index)
+                else:
+                    lo, hi = output_col_ranges(part.indptr, part.indices,
+                                               bmin_d, bmax_d,
+                                               num_rows_a=part.r_pad)
+                    launches.append(Launch(("orange", part, None), order,
+                                           (lo, hi)))
             order += 1
             shard_s[part.index] += time.perf_counter() - t0
-        if need_sketches and cached_sk is None:
+        if build_shard_sketches:
             for part in b_parts:
+                if part.index in fused2:
+                    continue
                 t0 = time.perf_counter()
                 with device_context(part.device):
                     regs = hll.build_sketches(
                         part.indptr, part.indices, m_regs=m_regs,
                         num_rows=part.r_pad, seed=cfg.seed)
-                launches.append(Launch(("sketch", part), order, (regs,)))
+                launches.append(Launch(("sketch", part, None), order,
+                                       (regs,)))
                 order += 1
                 shard_s[part.index] += time.perf_counter() - t0
         start_async_host_copies(launches)
@@ -475,23 +619,29 @@ class AnalysisPipeline:
         out_lo = np.full(a.m, np.iinfo(np.int32).max, np.int32)
         out_hi = np.full(a.m, np.iinfo(np.int32).min, np.int32)
         sketch_parts: List[Tuple[int, int, np.ndarray]] = []
+
+        def fold_orange(part, lo, hi):
+            np.minimum(out_lo[part.r0:part.r1], lo[: part.rows],
+                       out=out_lo[part.r0:part.r1])
+            np.maximum(out_hi[part.r0:part.r1], hi[: part.rows],
+                       out=out_hi[part.r0:part.r1])
+
         for it in collect_in_completion_order(launches):
-            kind, part = it.tag
+            kind, part, bpart = it.tag
             t0 = time.perf_counter()
             host = [np.asarray(x) for x in it.arrays]
-            n = part.rows
-            if kind == "orange":
-                np.minimum(out_lo[part.r0:part.r1], host[0][:n],
-                           out=out_lo[part.r0:part.r1])
-                np.maximum(out_hi[part.r0:part.r1], host[1][:n],
-                           out=out_hi[part.r0:part.r1])
+            if kind == "w2":
+                fold_orange(part, host[0], host[1])
+                sketch_parts.append((bpart.r0, bpart.r1, host[2]))
+            elif kind == "orange":
+                fold_orange(part, host[0], host[1])
             else:
                 sketch_parts.append((part.r0, part.r1, host[0]))
             shard_s[part.index] += time.perf_counter() - t0
 
-        def sketch_builder(m: int) -> jax.Array:
+        def sketch_builder(m: int):
             if cached_sk is not None:
-                return cached_sk
+                return cached_sk, None
             assert sketch_parts, \
                 "sketch stage was gated off but the host tail wants " \
                 "sketches — _needs_sketches gates must agree"
@@ -500,11 +650,10 @@ class AnalysisPipeline:
             sk = jnp.asarray(merged)
             if sketch_cache is not None:
                 sketch_cache[(m, cfg.seed)] = sk
-            return sk
+            return sk, None
 
         return self._finish(
-            a, b, prod_row=jnp.asarray(prod_row),
-            out_lo=jnp.asarray(out_lo), out_hi=jnp.asarray(out_hi),
+            a, b, prod_row=prod_row, out_lo=out_lo, out_hi=out_hi,
             build_sketches=build_sketches, sketch_builder=sketch_builder,
             n_shards=n_dev, shard_seconds=shard_s, known_sizes=known_sizes,
             wave2_overlap_seconds=ov_s, wave2_overlapped=ov_pending)
@@ -558,11 +707,32 @@ class AnalysisPipeline:
         sample_rows = None
         if self._needs_sketches(er, nproducts_avg, build_sketches):
             # Sketch construction O(nnz_B) + sampled merge (~3% of runtime).
-            sketches = sketch_builder(m_regs)
-            sample_rows = _pick_sample_rows(a.m, cfg)
-            sub = _sample_sub_csr(a, sample_rows)
-            est = hll.estimate_row_nnz(sub, sketches, b.n)
-            est = np.maximum(np.asarray(est), 1.0)
+            sketches, sk_padded = sketch_builder(m_regs)
+            rb_pad = pow2_at_least(max(b.m, 1), floor=SHARD_ROW_FLOOR)
+            if sk_padded is None or sk_padded.shape[0] != rb_pad:
+                sk_padded = _pad_sketch_rows(sketches, rb_pad)
+            # The sampling prework (row pick + sub-CSR gather + padding) is
+            # pure host work independent of the sketch values, so it rides
+            # behind the in-flight sketch launch — the estimation-workflow
+            # twin of the planner's wave-2 binning prework.
+            in_flight = [Launch("sketches", 0, (sk_padded,))]
+            start_async_host_copies(in_flight)
+
+            def _sample_prework():
+                rows = _pick_sample_rows(a.m, cfg)
+                new_ptr, src = flat_gather_index(np.asarray(a.indptr), rows)
+                sub_idx = np.asarray(a.indices)[src]
+                return (rows,) + _block_arrays(new_ptr, sub_idx, 0,
+                                               len(rows))
+
+            (sample_rows, sp, si, r_pad), est_s, est_pend = \
+                overlap_host_work(in_flight, _sample_prework)
+            wave2_overlap_seconds += est_s
+            wave2_overlapped = wave2_overlapped or est_pend
+            merged = hll.merge_sketches(sp, si, sk_padded,
+                                        num_rows_a=r_pad)
+            est = hll.estimate_cardinality(merged, clip_max=b.n)
+            est = np.maximum(np.asarray(est)[: len(sample_rows)], 1.0)
             prods = np.asarray(prod_row)[sample_rows].astype(np.float64)
             mask = prods > 0
             if mask.any():
@@ -640,11 +810,17 @@ def sharded_merge_estimate(a: CSR, sketches_with_sentinel,
     devs = resolve_devices(devices) if devices is not None else None
     if devs is not None and (len(devs) <= 1 or a.m == 0):
         devs = None
-    if devs is None:
-        _, est = kops.merge_estimate_op(a, sketches_with_sentinel,
-                                        clip_max=clip_max)
-        return np.asarray(est)
     a_ptr, a_idx = np.asarray(a.indptr), np.asarray(a.indices)
+    if devs is None:
+        # Single-device merges ride the same pow2 block bucket as shards
+        # so the merge/estimate specialization is matrix-independent.
+        sp, si, r_pad = _block_arrays(a_ptr, a_idx, 0, a.m)
+        sub = CSR(jnp.asarray(sp), jnp.asarray(si),
+                  jnp.zeros((si.shape[0],), jnp.float32),
+                  (r_pad, a.n), int(sp[-1]))
+        _, est = kops.merge_estimate_op(sub, sketches_with_sentinel,
+                                        clip_max=clip_max)
+        return np.asarray(est)[: a.m]
     blocks = contiguous_split_rows(a_ptr, len(devs))
     sk_host = np.asarray(sketches_with_sentinel)
     launches: List[Launch] = []
@@ -652,8 +828,7 @@ def sharded_merge_estimate(a: CSR, sketches_with_sentinel,
     for i, (r0, r1) in enumerate(blocks):
         if r1 <= r0:
             continue
-        sp, si, r_pad = _block_arrays(a_ptr, a_idx, r0, r1,
-                                      num_rows=a.m, nnz_total=a.nnz)
+        sp, si, r_pad = _block_arrays(a_ptr, a_idx, r0, r1)
         dev = devs[i]
         with device_context(dev):
             sub = CSR(jax.device_put(sp, dev), jax.device_put(si, dev),
@@ -678,11 +853,3 @@ def contiguous_split_rows(indptr: np.ndarray,
     from .partition import contiguous_split
     nnz_row = (indptr[1:] - indptr[:-1]).astype(np.int64)
     return contiguous_split(nnz_row, n_shards)
-
-
-def _sample_sub_csr(a: CSR, rows: np.ndarray) -> CSR:
-    """Host-side: a small CSR containing only the sampled rows of A."""
-    new_ptr, src = flat_gather_index(a.indptr, rows)
-    indices = np.asarray(a.indices)[src]
-    values = np.asarray(a.values)[src]
-    return csr_from_arrays(new_ptr, indices, values, (len(rows), a.n))

@@ -17,6 +17,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .formats import CSR, PAD_COL
 from .hll import row_ids_from_indptr
@@ -165,6 +166,41 @@ def symbolic_exact(a_indptr, a_indices, b_indptr, b_indices,
     counts = jax.ops.segment_sum(head.astype(jnp.int32), row_s,
                                  num_segments=num_rows_a + 1)[:-1]
     return counts
+
+
+def symbolic_exact_host(a_indptr, a_indices, b_indptr, b_indices,
+                        *, num_rows_a: int, n_cols_b: int) -> np.ndarray:
+    """Host (numpy) twin of :func:`symbolic_exact` — bit-identical counts.
+
+    Same expand -> packed-key sort -> unique-head compaction, but over
+    int64 numpy arrays with no device round trip or jit specialization.
+    On the CPU backend the planner's symbolic prediction takes this path:
+    the XLA version pays a device dispatch plus a pow2-padded sort
+    (``p_cap``) that dominates fresh-plan latency, while the host sort
+    works on the exact product count. Distinct counting is integer-exact
+    either way, so the two are interchangeable anywhere
+    (``tests/test_planner.py`` asserts equality against the jit path).
+    """
+    a_ptr = np.asarray(a_indptr, np.int64)
+    b_ptr = np.asarray(b_indptr, np.int64)
+    m = int(num_rows_a)
+    a_idx = np.asarray(a_indices, np.int64)[: int(a_ptr[-1])]
+    b_idx = np.asarray(b_indices, np.int64)
+    reps = (b_ptr[1:] - b_ptr[:-1])[a_idx]
+    total = int(reps.sum())
+    if total == 0:
+        return np.zeros(m, np.int32)
+    a_rows = np.repeat(np.arange(m, dtype=np.int64), a_ptr[1:] - a_ptr[:-1])
+    rows = np.repeat(a_rows, reps)
+    ends = np.cumsum(reps)
+    offs = np.arange(total, dtype=np.int64) - np.repeat(ends - reps, reps)
+    cols = b_idx[np.repeat(b_ptr[a_idx], reps) + offs]
+    key = rows * int(n_cols_b) + cols
+    key.sort()
+    head = np.ones(total, bool)
+    head[1:] = key[1:] != key[:-1]
+    return np.bincount(key[head] // int(n_cols_b),
+                       minlength=m).astype(np.int32)
 
 
 def ensure_esc_capacity(nnz: int, out_cap: int, *, where: str = "ESC") -> int:

@@ -51,10 +51,12 @@ def row_ids_from_indptr(indptr: jax.Array, capacity: int) -> jax.Array:
     return jnp.searchsorted(indptr, pos, side="right").astype(jnp.int32) - 1
 
 
-@partial(jax.jit, static_argnames=("m_regs", "num_rows", "seed"))
-def build_sketches(indptr, indices, *, m_regs: int, num_rows: int,
-                   seed: int = 0) -> jax.Array:
-    """Sketches for every row of a CSR matrix: (num_rows, m_regs) int32."""
+def sketch_registers_impl(indptr, indices, m_regs: int, num_rows: int,
+                          seed: int = 0) -> jax.Array:
+    """Traceable sketch-construction body — shared by the standalone
+    :func:`build_sketches` jit and the fused analysis wave launches
+    (``core.analysis._fused_wave2``), so both compile the same graph and
+    return bit-identical registers."""
     p = m_regs.bit_length() - 1
     assert 1 << p == m_regs, "m_regs must be a power of two"
     cap = indices.shape[0]
@@ -70,6 +72,13 @@ def build_sketches(indptr, indices, *, m_regs: int, num_rows: int,
     regs = jax.ops.segment_max(val, seg, num_segments=num_rows * m_regs)
     regs = jnp.maximum(regs, 0)  # empty segments come back as INT_MIN
     return regs.reshape(num_rows, m_regs)
+
+
+@partial(jax.jit, static_argnames=("m_regs", "num_rows", "seed"))
+def build_sketches(indptr, indices, *, m_regs: int, num_rows: int,
+                   seed: int = 0) -> jax.Array:
+    """Sketches for every row of a CSR matrix: (num_rows, m_regs) int32."""
+    return sketch_registers_impl(indptr, indices, m_regs, num_rows, seed)
 
 
 def sketch_rows(b: CSR, m_regs: int, seed: int = 0) -> jax.Array:

@@ -40,7 +40,7 @@ import numpy as np
 from repro.kernels import ops as kops
 from . import esc as esc_mod
 from . import tuning as tuning_mod
-from .analysis import (AnalysisResult, OceanConfig, analyze,
+from .analysis import (SHARD_ROW_FLOOR, AnalysisResult, OceanConfig, analyze,
                        sharded_merge_estimate, sketches_for)
 from .binning import BinPlan, plan_bins
 from .formats import CSR, csr_from_arrays, flat_gather_index, pow2_at_least
@@ -298,32 +298,50 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
     """
     stage: Dict[str, float] = {}
 
-    # Binning prework slotted behind analysis wave 2: when the workflow is
-    # going to be upper_bound (decidable from wave-1 products alone — the
-    # Table-1 gate needs only nproducts_avg), the ESC bin's membership and
-    # gather structure are pure functions of the product counts, so they
-    # can be computed on the host while the wave-2 launches (output
-    # ranges) are still in flight. The binning stage below reuses the
-    # prework only after verifying the recomputed ESC row set matches —
-    # a mismatch (never expected) just falls back to recomputing.
+    # Binning/prediction prework slotted behind analysis wave 2 — host work
+    # decidable from wave-1 products alone, run while the wave-2 launches
+    # (output ranges / sketches) are still in flight:
+    #   * upper_bound territory: the ESC bin's membership and gather
+    #     structure are pure functions of the product counts. The binning
+    #     stage below reuses the prework only after verifying the
+    #     recomputed ESC row set matches — a mismatch (never expected)
+    #     just falls back to recomputing.
+    #   * certain-symbolic territory (ER already below threshold, so
+    #     Table 1 cannot pick estimation no matter what the sampled CR
+    #     says): the whole symbolic prediction runs here via the host
+    #     twin of the exact sort (CPU backend only — elsewhere the device
+    #     sort is the right tool and overlaps on its own).
+    # Per-row A nnz (binning input) is computed here on every path.
     prework: Dict[str, object] = {}
 
     def _wave2_prework(prod_host: np.ndarray) -> None:
-        if known_sizes is not None or force_workflow not in (None,
-                                                             "upper_bound"):
+        ptr = np.asarray(a.indptr, np.int64)
+        prework["a_row_nnz"] = ptr[1:] - ptr[:-1]
+        if known_sizes is not None:
             return
         prods = np.asarray(prod_host, np.int64)
-        avg = int(prods.sum()) / max(a.m, 1)
-        if force_workflow is None and avg >= cfg.upper_bound_avg_products:
-            return  # estimation/symbolic territory: no ESC bin to prepare
-        if not hybrid:
-            return  # ESC rung disabled (V1/V2 ablations)
-        from .binning import ESC_THRESHOLD
-        esc_rows = np.nonzero((prods > 0) & (prods < ESC_THRESHOLD))[0]
-        sub_ptr, src = flat_gather_index(a.indptr, esc_rows)
-        prework.update(
-            esc_rows=esc_rows, sub_ptr=sub_ptr, src=src,
-            p_cap=pow2_at_least(int(prods[esc_rows].sum()), floor=64))
+        total = int(prods.sum())
+        avg = total / max(a.m, 1)
+        if force_workflow in (None, "upper_bound") and hybrid and (
+                force_workflow == "upper_bound"
+                or avg < cfg.upper_bound_avg_products):
+            from .binning import ESC_THRESHOLD
+            esc_rows = np.nonzero((prods > 0) & (prods < ESC_THRESHOLD))[0]
+            sub_ptr, src = flat_gather_index(a.indptr, esc_rows)
+            prework.update(
+                esc_rows=esc_rows, sub_ptr=sub_ptr, src=src,
+                p_cap=pow2_at_least(int(prods[esc_rows].sum()), floor=64))
+            return
+        er = total / max(a.nnz, 1)
+        certain_symbolic = (force_workflow == "symbolic"
+                            or (force_workflow is None
+                                and avg >= cfg.upper_bound_avg_products
+                                and er < cfg.er_threshold))
+        if certain_symbolic and jax.default_backend() == "cpu":
+            prework["symbolic_pred"] = np.asarray(
+                esc_mod.symbolic_exact_host(
+                    a.indptr, a.indices, b.indptr, b.indices,
+                    num_rows_a=a.m, n_cols_b=b.n), np.float64)
 
     # ---------------- analysis ----------------
     t0 = time.perf_counter()
@@ -345,7 +363,10 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
     total_products = analysis.total_products
     out_lo = np.asarray(analysis.out_lo)
     out_hi = np.asarray(analysis.out_hi)
-    a_row_nnz = np.asarray(a.indptr[1:] - a.indptr[:-1], np.int64)
+    a_row_nnz = prework.get("a_row_nnz")
+    if a_row_nnz is None:
+        ptr = np.asarray(a.indptr, np.int64)
+        a_row_nnz = ptr[1:] - ptr[:-1]
     stage["analysis"] = time.perf_counter() - t0
 
     # ---------------- size prediction ----------------
@@ -364,19 +385,35 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
         if sketches is None:
             sketches = sketches_for(b, analysis.m_regs, cfg.seed,
                                     sketch_cache)
+        # Sentinel concat padded to the pow2 row bucket: rows past b.m are
+        # all-zero (the HLL identity / Pallas pad sentinel), so values are
+        # untouched while the merge-stage jit specialization stays shared
+        # across matrices in the same bucket.
+        rb_pad = pow2_at_least(max(b.m, 1), floor=SHARD_ROW_FLOOR)
         sk = jnp.concatenate(
-            [sketches, jnp.zeros((1, sketches.shape[1]), jnp.int32)], axis=0)
+            [sketches, jnp.zeros((rb_pad + 1 - sketches.shape[0],
+                                  sketches.shape[1]), jnp.int32)], axis=0)
         est = sharded_merge_estimate(a, sk, clip_max=b.n,
                                      devices=analysis_devices)
         pred = np.maximum(np.asarray(est, np.float64), 1.0)
         pred = np.where(products > 0, pred, 0.0)
         pred = np.minimum(pred, products)  # distinct count <= products
     elif wf == "symbolic":
-        p_cap = pow2_at_least(total_products, floor=64)
-        pred = np.asarray(
-            esc_mod.symbolic_exact(a.indptr, a.indices, b.indptr, b.indices,
-                                   p_cap=p_cap, num_rows_a=a.m,
-                                   n_cols_b=b.n), np.float64)
+        pred = prework.get("symbolic_pred")
+        if pred is None and jax.default_backend() == "cpu":
+            # Device dispatch plus the pow2-padded device sort dominate
+            # fresh-plan latency on CPU; the host twin sorts the exact
+            # product count and is bit-identical (see symbolic_exact_host).
+            pred = np.asarray(esc_mod.symbolic_exact_host(
+                a.indptr, a.indices, b.indptr, b.indices,
+                num_rows_a=a.m, n_cols_b=b.n), np.float64)
+        elif pred is None:
+            p_cap = pow2_at_least(total_products, floor=64)
+            pred = np.asarray(
+                esc_mod.symbolic_exact(a.indptr, a.indices, b.indptr,
+                                       b.indices, p_cap=p_cap,
+                                       num_rows_a=a.m, n_cols_b=b.n),
+                np.float64)
     else:  # upper_bound
         pred = products.astype(np.float64)
     stage["prediction"] = time.perf_counter() - t0
@@ -447,7 +484,8 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
     esc_exec = None
     if len(plan.esc_rows):
         rows = plan.esc_rows
-        if prework and np.array_equal(prework["esc_rows"], rows):
+        if (prework.get("esc_rows") is not None
+                and np.array_equal(prework["esc_rows"], rows)):
             # the wave-2-overlapped prework computed this exact row set
             sub_ptr, src = prework["sub_ptr"], prework["src"]
             p_cap = prework["p_cap"]

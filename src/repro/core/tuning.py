@@ -43,12 +43,16 @@ from .formats import pow2_at_least
 # Candidate grid. Load factors below 0.5 waste VMEM; above ~0.85 linear
 # probing degrades. f_chunk=64 only matters on the Pallas path (smaller
 # DMA granularity for short B rows), as does the row tile (tile_rows=1 is
-# the row-sequential degeneracy; 8 matches the f32 sublane tile).
+# the row-sequential degeneracy; 8 matches the f32 sublane tile). The
+# tile ladder descends from the widest candidate: per-step work shrinks
+# monotonically down the ladder, so once a step times *worse* than its
+# predecessor the rest of the tail can only lose and the sweep prunes it
+# (the kernel is bit-identical at every tile, so pruning is timing-only).
 LOAD_FACTOR_CANDIDATES = (0.5, HASH_LOAD_FACTOR)
 F_CHUNK_CANDIDATES = (128,)
 F_CHUNK_CANDIDATES_PALLAS = (128, 64)
 TILE_CANDIDATES = (8,)
-TILE_CANDIDATES_PALLAS = (8, 1)
+TILE_CANDIDATES_PALLAS = (8, 4, 2, 1)
 
 # The rung the planner consults for the load factor it hands to binning
 # (binning runs before per-bin rungs are known, so one representative
@@ -114,6 +118,29 @@ class TuningCache:
 
 DEFAULT_TUNING_CACHE = TuningCache()
 
+# In-memory log of every autotune measurement — including the losing
+# candidates and which tile-ladder tails were pruned. Benchmarks drain it
+# into the bench artifact (``tuning/...`` rows in BENCH_smoke.json) so
+# losing-candidate timings survive for later hardware runs.
+MEASUREMENT_LOG: Dict[int, list] = {}
+_LOG_LOCK = threading.Lock()
+
+
+def _log_measurement(rung: int, entry: Dict) -> None:
+    with _LOG_LOCK:
+        MEASUREMENT_LOG.setdefault(int(rung), []).append(entry)
+
+
+def measurement_log() -> Dict[int, list]:
+    """Snapshot of all recorded autotune measurements, keyed by rung."""
+    with _LOG_LOCK:
+        return {r: [dict(e) for e in v] for r, v in MEASUREMENT_LOG.items()}
+
+
+def clear_measurement_log() -> None:
+    with _LOG_LOCK:
+        MEASUREMENT_LOG.clear()
+
 
 def tuning_key(rung: int) -> str:
     """Digest of everything the measurement depends on: the rung, the jax
@@ -162,7 +189,8 @@ def _measure(rung: int) -> HashTuning:
         for fc in f_cands:
             work = _synthetic_workload(rung, fc)
             p_cap = pow2_at_least(int(work[3].sum()), floor=64)
-            for tr in t_cands:
+            prev_dt = None
+            for ti, tr in enumerate(t_cands):
                 def run():
                     out = kops.hash_bin_op(
                         *work, table=table, spill=hash_spill_of(table),
@@ -175,9 +203,26 @@ def _measure(rung: int) -> HashTuning:
                 run()
                 run()
                 dt = time.perf_counter() - t0
+                _log_measurement(rung, {
+                    "load_factor": lf, "f_chunk": fc, "tile_rows": tr,
+                    "seconds": dt})
                 if dt < best_t:
                     best_t, best = dt, HashTuning(load_factor=lf, f_chunk=fc,
                                                   tile_rows=tr)
+                if prev_dt is not None and dt > prev_dt:
+                    # Monotone regression down the descending tile ladder:
+                    # timing the rest of the tail is wasted autotune
+                    # budget. Record what was skipped so the artifact
+                    # shows the sweep was pruned, not exhaustive.
+                    skipped = [int(t) for t in t_cands[ti + 1:]]
+                    if skipped:
+                        _log_measurement(rung, {
+                            "load_factor": lf, "f_chunk": fc,
+                            "pruned_tiles": skipped})
+                    break
+                prev_dt = dt
+    _log_measurement(rung, {"winner": dataclasses.asdict(best),
+                            "seconds": best_t})
     return best
 
 

@@ -37,7 +37,7 @@ from .planner import (DEFAULT_PLAN_CACHE, ExecutionPlan, OceanReport,
                       execute_sharded_plan, gather_rows, structure_key)
 
 __all__ = ["OceanReport", "ocean_spgemm", "ocean_spgemm_many",
-           "spgemm_reference", "gather_rows"]
+           "spgemm_reference", "gather_rows", "warm_plan"]
 
 
 def _resolve_cache(cache: Union[bool, PlanCache, None]):
@@ -188,6 +188,53 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
                                     executor=executor, post=post)
     return execute_plan(fresh, a, b, stage=fresh.build_seconds,
                         executor=executor, post=post)
+
+
+def warm_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
+              force_workflow: Optional[str] = None,
+              assisted: bool = True, hybrid: bool = True,
+              cache: Union[bool, PlanCache, None] = True,
+              sketch_cache: Optional[Dict] = None,
+              devices: DeviceSpec = None,
+              analysis_devices: DeviceSpec = None,
+              known_sizes=None) -> Tuple[str, bool]:
+    """Build (or verify) the cached plan for ``A @ B`` without executing it.
+
+    The speculative half of ``ocean_spgemm``: identical keying, identical
+    ``build_plan``/``partition_plan`` calls, identical cache inserts — so a
+    later ``ocean_spgemm`` with the same arguments is a pure cache hit and
+    returns bit-identical results to a cold call (plans are deterministic
+    functions of structure + config). Used by the serving pool's plan
+    warmer to convert queue wait time into plan-setup time.
+
+    Returns ``(cache_key, built)`` where ``built`` says whether any plan
+    was constructed (``False`` == already warm). Lookups go through
+    ``peek`` so warming never skews request-level hit/miss statistics.
+    """
+    cache_obj = _resolve_cache(cache)
+    if cache_obj is None:
+        raise ValueError("warm_plan needs a cache to warm (cache=False/None)")
+    devs = resolve_devices(devices) if devices is not None else None
+    an_devs = (resolve_devices(analysis_devices)
+               if analysis_devices is not None else devs)
+    key = structure_key(a, b, cfg, force_workflow, assisted, hybrid,
+                        known_sizes=known_sizes)
+    lkey = key if devs is None else key + "|" + topology_key(devs)
+    if cache_obj.peek(lkey) is not None:
+        return lkey, False
+    built = False
+    base = cache_obj.peek(key) if devs is not None else None
+    if base is None:
+        base = build_plan(a, b, cfg, force_workflow=force_workflow,
+                          assisted=assisted, hybrid=hybrid,
+                          sketch_cache=sketch_cache, key=key,
+                          analysis_devices=an_devs, known_sizes=known_sizes)
+        cache_obj.insert(key, base)
+        built = True
+    if devs is not None:
+        cache_obj.insert(lkey, partition_plan(base, devs))
+        built = True
+    return lkey, built
 
 
 def ocean_spgemm_many(a_list: Sequence[CSR], b: CSR,

@@ -37,7 +37,7 @@ from repro.core.analysis import OceanConfig
 from repro.core.formats import CSR
 from repro.core.partition import DeviceSpec
 from repro.core.planner import OceanReport
-from repro.core.workflow import ocean_spgemm_many
+from repro.core.workflow import ocean_spgemm_many, warm_plan
 
 from .spgemm_service import SpGEMMService
 
@@ -66,12 +66,19 @@ class PoolConfig:
     caps how many compatible requests one worker coalesces into a single
     ``ocean_spgemm_many`` call. ``tenant_plan_quota`` bounds any one
     tenant's share of the shared plan cache (``None`` = global LRU only).
+    ``warm_plans`` runs the background plan warmer: a thread that
+    speculatively builds plans (and sketches) for queued requests'
+    structure keys before a worker picks them up, converting queue wait
+    time into plan-setup time (results are unaffected — plans are
+    deterministic, and a worker that races the warmer just builds the
+    same plan itself).
     """
     workers: int = 2
     max_queue: int = 64
     max_batch: int = 8
     plan_cache_size: int = 64
     tenant_plan_quota: Optional[int] = None
+    warm_plans: bool = True
 
 
 class PoolFuture:
@@ -121,6 +128,11 @@ class _Pending:
     batch_key: tuple
     future: PoolFuture
     t_submit: float
+    # plan-warmer progress for this request: "new" (untouched) ->
+    # "warming" -> "warmed" (warmer built the plan) / "cached" (was
+    # already in the cache) / "error" (warm attempt failed; the worker
+    # will surface the real error, or succeed if it was transient)
+    warm_state: str = "new"
 
 
 class SpGEMMPool:
@@ -163,6 +175,18 @@ class SpGEMMPool:
         self._closed = False      # no new submissions
         self._running = False     # workers alive
         self._threads: List[threading.Thread] = []
+        # Plan warmer: starts with the pool object (not with start()) so
+        # queued submissions warm even before workers run — that's the
+        # deterministic-batching idiom (autostart=False, submit burst,
+        # start) where warming has the most time to win.
+        self._warm_cv = threading.Condition(self._lock)
+        self._warm_stop = False
+        self._warmer: Optional[threading.Thread] = None
+        if pool.warm_plans:
+            self._warmer = threading.Thread(
+                target=self._warmer_loop, daemon=True,
+                name="spgemm-pool-warmer")
+            self._warmer.start()
         if autostart:
             self.start()
 
@@ -212,10 +236,14 @@ class SpGEMMPool:
             self._queue.clear()
             self.stats.note_queue_depth(0)
             self._work.notify_all()
+            self._warm_stop = True
+            self._warm_cv.notify_all()
         for r in leftovers:
             r.future.set_exception(RuntimeError("pool shut down"))
         for t in self._threads:
             t.join(timeout)
+        if self._warmer is not None:
+            self._warmer.join(timeout)
 
     def __enter__(self) -> "SpGEMMPool":
         self.start()
@@ -249,6 +277,7 @@ class SpGEMMPool:
                 batch_key=key, future=fut, t_submit=time.perf_counter()))
             self.stats.note_queue_depth(len(self._queue))
             self._work.notify()
+            self._warm_cv.notify()
         return fut
 
     def multiply(self, a: CSR, b: CSR, *, tenant: str = "default",
@@ -256,6 +285,72 @@ class SpGEMMPool:
                  **kw) -> Tuple[CSR, OceanReport]:
         """Synchronous convenience: submit + wait."""
         return self.submit(a, b, tenant=tenant, **kw).result(timeout)
+
+    # -------------------- plan warmer --------------------
+
+    def warm_wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the warmer has visited every queued request (each
+        ``warm_state`` has left "new"/"warming"). Returns False on
+        timeout; returns True immediately when warming is disabled. Used
+        by the deterministic-batching idiom (autostart=False burst) to
+        measure warm-path hit rates without racing the warmer."""
+        if self._warmer is None:
+            return True
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            while any(r.warm_state in ("new", "warming")
+                      for r in self._queue):
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._warm_cv.wait(remaining)
+        return True
+
+    def _warm_one(self, r: _Pending) -> bool:
+        """Build (or confirm) the plan for one queued request through the
+        same caches a worker will use. Returns True only when the warmer
+        actually built the plan (a later worker hit is then a *warm* hit,
+        not an ordinary cache hit)."""
+        svc = self.service
+        bucket = svc.sketch_cache_for(r.b, r.tenant)
+        before = set(bucket.keys())
+        _, built = warm_plan(
+            r.a, r.b, svc.cfg, force_workflow=r.force_workflow,
+            assisted=r.assisted, hybrid=r.hybrid,
+            cache=svc.plan_cache_for(r.tenant), sketch_cache=bucket,
+            devices=svc.devices, analysis_devices=svc.analysis_devices)
+        new_keys = set(bucket.keys()) - before
+        if new_keys and hasattr(bucket, "mark_warm"):
+            bucket.mark_warm(new_keys)
+        return built
+
+    def _warmer_loop(self) -> None:
+        while True:
+            with self._lock:
+                target: Optional[_Pending] = None
+                while not self._warm_stop:
+                    target = next((r for r in self._queue
+                                   if r.warm_state == "new"), None)
+                    if target is not None:
+                        break
+                    self._warm_cv.wait()
+                if self._warm_stop:
+                    return
+                target.warm_state = "warming"
+            try:
+                built = self._warm_one(target)
+                state = "warmed" if built else "cached"
+            except Exception:
+                # Bad request (the worker will surface the real error) or
+                # transient planner failure — either way warming is best
+                # effort and must never take the pool down.
+                state = "error"
+            with self._lock:
+                target.warm_state = state
+                if state == "warmed":
+                    self.stats.plans_warmed += 1
+                self._warm_cv.notify_all()
 
     # -------------------- workers --------------------
 
@@ -322,6 +417,8 @@ class SpGEMMPool:
                 self.stats.requests += 1
                 self.stats.plan_hits += int(rep.plan_cache_hit)
                 self.stats.plan_misses += int(not rep.plan_cache_hit)
+                if rep.plan_cache_hit and r.warm_state == "warmed":
+                    self.stats.note_plan_warm_hit(r.tenant)
                 self.stats.total_seconds += t_done - r.t_submit
                 self.stats.setup_seconds += rep.setup_seconds
                 self.stats.overlap_seconds += rep.overlap_seconds

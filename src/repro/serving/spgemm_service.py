@@ -79,6 +79,21 @@ class ServiceStats:
     queue_depth: int = 0           # current pool queue depth
     queue_depth_peak: int = 0      # high-water mark of the queue
     queue_wait_seconds: float = 0.0  # total submit -> dispatch wait
+    # plan warmer (serving.pool.SpGEMMPool): plans speculatively built
+    # from queued requests, and worker-side plan-cache hits served by a
+    # plan the warmer built (counted separately from organic plan_hits;
+    # None tenant key = the default un-namespaced tenant)
+    plans_warmed: int = 0
+    plan_warm_hits: int = 0
+    plan_warm_hits_by_tenant: Dict[Optional[str], int] = dataclasses.field(
+        default_factory=dict, compare=False)
+    # sketch-cache accounting, separate from plan-cache hits: sketch
+    # bucket lookups that hit, and the subset whose sketches the warmer
+    # had inserted before a worker touched the request (warm-path hits)
+    sketch_hits: int = 0
+    sketch_warm_hits: int = 0
+    sketch_warm_hits_by_tenant: Dict[Optional[str], int] = dataclasses.field(
+        default_factory=dict, compare=False)
     _latencies: List[float] = dataclasses.field(
         default_factory=list, repr=False, compare=False)
     _lock: threading.Lock = dataclasses.field(
@@ -162,6 +177,55 @@ class ServiceStats:
             if depth > self.queue_depth_peak:
                 self.queue_depth_peak = depth
 
+    def note_plan_warm_hit(self, tenant: Optional[str]) -> None:
+        """Count a plan-cache hit that was served by a warmed plan."""
+        with self._lock:
+            self.plan_warm_hits += 1
+            self.plan_warm_hits_by_tenant[tenant] = \
+                self.plan_warm_hits_by_tenant.get(tenant, 0) + 1
+
+    def note_sketch_hit(self, tenant: Optional[str], warm: bool) -> None:
+        """Count a sketch-bucket hit (``warm`` = the warmer built it)."""
+        with self._lock:
+            self.sketch_hits += 1
+            if warm:
+                self.sketch_warm_hits += 1
+                self.sketch_warm_hits_by_tenant[tenant] = \
+                    self.sketch_warm_hits_by_tenant.get(tenant, 0) + 1
+
+
+class SketchCache(dict):
+    """Per-(tenant, RHS) sketch bucket with warm-hit accounting.
+
+    Behaves as the plain dict every consumer expects (``core.analysis``
+    probes with ``in``/``[]``/``get`` and inserts with assignment), with
+    two additions: the pool's plan warmer marks the keys it inserted via
+    :meth:`mark_warm`, and every subsequent hit is counted on
+    :class:`ServiceStats` — separately from plan-cache hits — so the
+    warmer's effect on sketch reuse is observable per tenant."""
+
+    def __init__(self, *, tenant: Optional[str] = None, stats=None):
+        super().__init__()
+        self.tenant = tenant
+        self._stats = stats
+        self._warm: set = set()
+
+    def mark_warm(self, keys) -> None:
+        """Tag ``keys`` as warmer-inserted (hits on them count warm)."""
+        self._warm.update(keys)
+
+    def __getitem__(self, key):
+        val = super().__getitem__(key)
+        if self._stats is not None:
+            self._stats.note_sketch_hit(self.tenant, key in self._warm)
+        return val
+
+    def get(self, key, default=None):
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
 
 class SpGEMMService:
     """Stateful SpGEMM endpoint with plan caching across requests.
@@ -221,8 +285,10 @@ class SpGEMMService:
         """The per-(tenant, RHS-structure) sketch bucket for ``b``."""
         buckets = self._tenant_sketch_caches.setdefault(
             tenant, OrderedDict())
-        return lru_bucket(buckets, structure_hash(b), dict,
-                          maxsize=RHS_BUCKETS_PER_TENANT)
+        return lru_bucket(
+            buckets, structure_hash(b),
+            lambda: SketchCache(tenant=tenant, stats=self.stats),
+            maxsize=RHS_BUCKETS_PER_TENANT)
 
     def multiply(self, a: CSR, b: CSR, *,
                  tenant: Optional[str] = None,

@@ -317,3 +317,53 @@ def test_analyze_known_sizes_short_circuits_selection():
                                   np.asarray(r0.products_row))
     with pytest.raises(ValueError):
         analyze(a, a, known_sizes=sizes[:-1])
+
+
+# ---------------------------------------------------------------------------
+# Bucketed analysis specializations: same-bucket matrices share jits
+# ---------------------------------------------------------------------------
+
+def test_analysis_jit_specializations_shared_across_matrices():
+    """Two different matrix pairs whose dimensions land in the same pow2
+    shape buckets replay the SAME analysis-stage jit specializations —
+    across matrices and across 1/2/4-device topologies. This is the
+    unclamped-bucketing win: block shapes depend only on the pow2 band,
+    never on the particular matrix, so a new matrix in an already-seen
+    bucket compiles nothing."""
+    from repro.core import analysis, hll
+    probes = [analysis._fused_stats, analysis._fused_wave1,
+              analysis._fused_wave2, hll.build_sketches,
+              hll.merge_sketches, hll.estimate_cardinality]
+    if not all(hasattr(f, "_cache_size") for f in probes):
+        pytest.skip("jit cache-size probe unavailable on this jax")
+    # shared RHS (same b.n keeps estimate_cardinality's static clip_max
+    # identical); the two left-hand sides differ in rows/pattern/nnz but
+    # share every pow2 bucket: 220 and 250 rows -> 256, 2200 and 2500
+    # nnz -> 4096. Exactly-k rows keep the nnz-balanced contiguous splits
+    # even, so per-shard blocks land in the same bands too (220/4 -> 55
+    # rows -> 64-bucket, 250/4 -> 62..63 rows -> 64-bucket, etc.)
+    def exact_k_csr(seed, m, n, k):
+        rng = np.random.default_rng(seed)
+        d = np.zeros((m, n), np.float32)
+        for i in range(m):
+            cols = rng.choice(n, k, replace=False)
+            d[i, cols] = rng.standard_normal(k).astype(np.float32)
+        return formats.csr_from_dense(d)
+
+    b = formats.random_uniform_csr(71, 240, 260, 12.0)
+    a1 = exact_k_csr(72, 220, 240, 10)
+    a2 = exact_k_csr(73, 250, 240, 10)
+    r1 = {dev: analyze(a1, b, devices=dev) for dev in (None, 2, 4)}
+    assert r1[None].b_sketches is not None  # estimation gates engaged
+    sizes = [f._cache_size() for f in probes]
+    r2 = {dev: analyze(a2, b, devices=dev) for dev in (None, 2, 4)}
+    assert r2[None].b_sketches is not None
+    after = [f._cache_size() for f in probes]
+    grew = [(getattr(f, "__name__", str(f)), s0, s1)
+            for f, s0, s1 in zip(probes, sizes, after) if s1 != s0]
+    assert not grew, (
+        f"second same-bucket matrix compiled new analysis "
+        f"specializations: {grew}")
+    # and the replayed specializations still produce exact sharded parity
+    for dev in (2, 4):
+        assert_analysis_identical(r2[dev], r2[None])

@@ -1,0 +1,41 @@
+"""Trajectory-record schema guard: appended perf rows must keep the
+established key set (additive fields tolerated, dropped fields fail
+loudly) so CI's canaries never silently lose the field they compare
+against."""
+import pytest
+
+from benchmarks.run import check_trajectory_schema
+
+ROW = {"unix_time": 1.0, "smoke": True, "plan_setup_fresh_us": 100.0,
+       "plan_setup_cached_us": 10.0, "plan_warm_hits": 3}
+
+
+def test_empty_trajectory_accepts_anything():
+    check_trajectory_schema([], {"whatever": 1})
+
+
+def test_same_keys_accepted():
+    check_trajectory_schema([ROW], dict(ROW))
+
+
+def test_additive_fields_tolerated():
+    entry = dict(ROW, new_metric_us=5.0)
+    check_trajectory_schema([ROW], entry)
+
+
+def test_dropped_key_fails_loudly():
+    entry = dict(ROW)
+    del entry["plan_setup_fresh_us"]
+    with pytest.raises(SystemExit, match="plan_setup_fresh_us"):
+        check_trajectory_schema([ROW], entry)
+
+
+def test_only_latest_row_establishes_the_schema():
+    # older rows may predate additive fields; only the latest row's keys
+    # are the contract
+    old = {"unix_time": 1.0}
+    entry = dict(ROW)
+    check_trajectory_schema([old, ROW], entry)
+    del entry["plan_warm_hits"]
+    with pytest.raises(SystemExit, match="plan_warm_hits"):
+        check_trajectory_schema([old, ROW], entry)

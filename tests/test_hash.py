@@ -446,13 +446,47 @@ def test_tuning_measures_through_real_backend_path(monkeypatch):
     t_cands = (tuning.TILE_CANDIDATES_PALLAS if pallas
                else tuning.TILE_CANDIDATES)
     assert {kw["f_chunk"] for kw in calls} == set(f_cands)
-    assert {kw["tile"] for kw in calls} == set(t_cands)
+    # the tile ladder descends and may be pruned on monotone regression,
+    # so the sweep visits a non-empty prefix of the candidates — always
+    # including the widest tile — and never anything off the grid
+    tiles_seen = {kw["tile"] for kw in calls}
+    assert tiles_seen and tiles_seen <= set(t_cands)
+    assert t_cands[0] in tiles_seen
     assert t.f_chunk in f_cands and t.tile_rows in t_cands
 
 
 def test_tuning_key_separates_rungs():
     assert tuning.tuning_key(64) != tuning.tuning_key(128)
     assert tuning.tuning_key(64) == tuning.tuning_key(64)
+
+
+def test_tuning_measurement_log_records_candidates_and_pruning():
+    """Every timed candidate (winners AND losers) lands in the
+    measurement log, pruned tile-ladder tails are recorded as strict
+    tails of the descending ladder, and exactly one winner is stamped
+    per sweep."""
+    tuning.clear_measurement_log()
+    tuning.hash_tuning_for(64, cache=tuning.TuningCache())
+    log = tuning.measurement_log()
+    assert 64 in log and not set(log) - {64}
+    entries = log[64]
+    cands = [e for e in entries if "tile_rows" in e and "seconds" in e]
+    assert len(cands) >= 2  # losing candidates survive, not just the winner
+    assert all(e["seconds"] > 0.0 for e in cands)
+    winners = [e for e in entries if "winner" in e]
+    assert len(winners) == 1
+    pallas = kops._use_pallas_path()
+    t_cands = (tuning.TILE_CANDIDATES_PALLAS if pallas
+               else tuning.TILE_CANDIDATES)
+    assert winners[0]["winner"]["tile_rows"] in t_cands
+    for e in entries:
+        if "pruned_tiles" in e:
+            k = len(e["pruned_tiles"])
+            assert k >= 1 and tuple(e["pruned_tiles"]) == t_cands[-k:]
+    # snapshot semantics: the log survives reads, clears on request
+    assert tuning.measurement_log()
+    tuning.clear_measurement_log()
+    assert tuning.measurement_log() == {}
 
 
 def test_planner_exec_uses_tuned_f_chunk_and_tile():

@@ -154,3 +154,44 @@ def test_default_cache_counter_increments():
     workflow.ocean_spgemm(a, a)
     assert planner.DEFAULT_PLAN_CACHE.hits == 1
     assert planner.DEFAULT_PLAN_CACHE.misses == 1
+
+
+def test_symbolic_exact_host_matches_jit_path():
+    """The host numpy twin the planner speculates with on certain-symbolic
+    workflows must agree bit for bit with the jitted symbolic_exact —
+    including duplicate-column collisions, empty rows, and rectangular
+    shapes (the equality promised by esc.symbolic_exact_host's docstring)."""
+    from repro.core import esc
+    from repro.core.formats import pow2_at_least
+    cases = [
+        (formats.random_uniform_csr(80, 90, 90, 6.0),
+         formats.random_uniform_csr(81, 90, 110, 7.0)),
+        (formats.powerlaw_csr(82, 120, 120, 8.0),
+         formats.banded_csr(83, 120, 120, 20)),
+        (formats.hypersparse_csr(84, 200, 160),
+         formats.random_uniform_csr(85, 160, 60, 3.0)),
+    ]
+    for a, b in cases:
+        host = esc.symbolic_exact_host(
+            np.asarray(a.indptr), np.asarray(a.indices),
+            np.asarray(b.indptr), np.asarray(b.indices),
+            num_rows_a=a.m, n_cols_b=b.n)
+        prods = (np.asarray(b.indptr)[1:] - np.asarray(b.indptr)[:-1])[
+            np.asarray(a.indices)].sum()
+        p_cap = pow2_at_least(max(int(prods), 1), floor=64)
+        dev = esc.symbolic_exact(
+            jnp.asarray(a.indptr), jnp.asarray(a.indices),
+            jnp.asarray(b.indptr), jnp.asarray(b.indices),
+            num_rows_a=a.m, n_cols_b=b.n, p_cap=p_cap)
+        np.testing.assert_array_equal(host, np.asarray(dev))
+        assert host.dtype == np.int32
+
+
+def test_certain_symbolic_prediction_uses_host_twin_bit_identically():
+    """A forced-symbolic plan built through the speculative host path and
+    one built from the device path execute to identical outputs."""
+    a = formats.random_uniform_csr(86, 140, 140, 8.0)
+    plan = planner.build_plan(a, a, force_workflow="symbolic")
+    c1, _ = planner.execute_plan(plan, a, a)
+    c2, _ = workflow.ocean_spgemm(a, a, cache=False)
+    assert_bit_identical(c1, c2)

@@ -368,3 +368,123 @@ def test_stats_accounting_under_threaded_burst():
     assert st.batch_occupancy >= 1.0
     assert len(st.latency_sample()) == st.requests
     assert st.p99_seconds >= st.p50_seconds >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# Async plan warmer
+# ---------------------------------------------------------------------------
+
+def test_warmed_pool_bit_identical_to_cold_planning():
+    """Acceptance criterion: plans built speculatively by the background
+    warmer produce outputs bit-identical to cold per-request planning
+    (serial executor, no cache, no warmer)."""
+    a1, a2, a3, b = _mats()
+    reqs = [(a, t) for t in ("acme", "globex") for a in (a1, a2, a3)]
+    refs = [_serial_ref(a, b) for a, _ in reqs]
+    pool = SpGEMMPool(pool=PoolConfig(workers=2, max_batch=4,
+                                      max_queue=64), autostart=False)
+    futs = [pool.submit(a, b, tenant=t) for a, t in reqs]
+    assert pool.warm_wait(120), "warmer did not visit every queued request"
+    assert pool.stats.plans_warmed >= 1
+    pool.start()
+    assert pool.drain(120)
+    outs = [f.result(0) for f in futs]
+    pool.shutdown()
+    for (c, _), ref in zip(outs, refs):
+        assert_bit_identical(c, ref)
+    # every request's plan was already cached when a worker reached it
+    assert pool.stats.plan_hits == len(reqs)
+    assert pool.stats.plan_warm_hits >= 1
+
+
+def test_plan_warmer_accounting():
+    """plans_warmed counts unique builds; plan_warm_hits counts worker
+    hits served by a warmed plan, attributed per tenant; a duplicate
+    structure the warmer finds already cached is not double-counted."""
+    a1, a2, _, b = _mats()
+    reqs = [(a1, "acme"), (a2, "acme"), (a1, "globex"), (a1, "acme")]
+    refs = [_serial_ref(a, b) for a, _ in reqs]
+    pool = SpGEMMPool(pool=PoolConfig(workers=2, max_batch=4),
+                      autostart=False)
+    futs = [pool.submit(a, b, tenant=t) for a, t in reqs]
+    assert pool.warm_wait(120)
+    # three unique (tenant, structure) pairs -> three speculative builds;
+    # the fourth request's plan was already cached when the warmer got it
+    assert pool.stats.plans_warmed == 3
+    with pool._lock:
+        states = sorted(r.warm_state for r in pool._queue)
+    assert states == ["cached", "warmed", "warmed", "warmed"]
+    pool.start()
+    assert pool.drain(120)
+    outs = [f.result(0) for f in futs]
+    st = pool.stats
+    pool.shutdown()
+    for (c, _), ref in zip(outs, refs):
+        assert_bit_identical(c, ref)
+    assert st.plan_hits == len(reqs)
+    assert st.plan_warm_hits == 3
+    assert st.plan_warm_hits_by_tenant == {"acme": 2, "globex": 1}
+
+
+def test_sketch_warm_hits_counted_per_tenant():
+    """Sketch-cache accounting is separate from plan-cache hits: warming
+    the first request builds the tenant's B sketches (marked warm), and
+    warming a second structure against the same RHS re-probes them — a
+    warm sketch hit, observable per tenant."""
+    a1, a2, _, b = _mats()
+    pool = SpGEMMPool(pool=PoolConfig(workers=1), autostart=False)
+    f1 = pool.submit(a1, b, tenant="acme", force_workflow="estimation")
+    f2 = pool.submit(a2, b, tenant="acme", force_workflow="estimation")
+    assert pool.warm_wait(120)
+    st = pool.stats
+    assert st.sketch_hits >= 1
+    assert st.sketch_warm_hits >= 1
+    assert st.sketch_warm_hits_by_tenant.get("acme", 0) >= 1
+    pool.start()
+    assert pool.drain(120)
+    pool.shutdown()
+    for f, a in ((f1, a1), (f2, a2)):
+        c, _ = f.result(0)
+        assert_bit_identical(
+            c, _serial_ref(a, b, force_workflow="estimation"))
+
+
+def test_warm_plans_disabled_pool_unchanged():
+    """warm_plans=False: no warmer thread, warm_wait is a no-op, results
+    and organic stats are untouched."""
+    a1, _, _, b = _mats()
+    pool = SpGEMMPool(pool=PoolConfig(workers=1, warm_plans=False),
+                      autostart=False)
+    assert pool._warmer is None
+    fut = pool.submit(a1, b)
+    assert pool.warm_wait(0.01) is True
+    pool.start()
+    assert pool.drain(120)
+    c, _ = fut.result(0)
+    st = pool.stats
+    pool.shutdown()
+    assert_bit_identical(c, _serial_ref(a1, b))
+    assert st.plans_warmed == 0 and st.plan_warm_hits == 0
+
+
+def test_warmer_survives_bad_request():
+    """A request the planner cannot handle marks warm_state="error" and
+    the warmer moves on; the worker surfaces the real exception and later
+    requests still warm and serve."""
+    a1, _, _, b = _mats()
+    pool = SpGEMMPool(pool=PoolConfig(workers=1), autostart=False)
+    bad = pool.submit(None, b)            # not a CSR: planner-side error
+    # different batch key (executor knob), so the bad request's batch
+    # failure cannot take this one's future down with it
+    good = pool.submit(a1, b, executor="serial")
+    assert pool.warm_wait(120)
+    with pool._lock:
+        states = [r.warm_state for r in pool._queue]
+    assert states == ["error", "warmed"]
+    pool.start()
+    assert pool.drain(120)
+    with pytest.raises(Exception):
+        bad.result(120)
+    c, _ = good.result(120)
+    pool.shutdown()
+    assert_bit_identical(c, _serial_ref(a1, b))
