@@ -88,6 +88,20 @@ def run(rows: list, scale: int = 1):
         rows.append((f"overall/{name}/rungs", 0.0,
                      f"{occ} hash_rows={hash_rows}".strip()))
 
+        # estimation-accuracy telemetry: predicted vs exact per-row nnz of
+        # the fresh Ocean run (repro.obs.accuracy; feeds the CI
+        # observability canary through the summary/trajectory keys)
+        acc = rep_fresh.estimation_accuracy
+        if acc is not None:
+            causes = ";".join(f"{k}:{v}" for k, v in
+                              sorted(acc.overflow_causes.items())) or "none"
+            rows.append((
+                f"overall/{name}/est_accuracy", 0.0,
+                f"est_err_p50={acc.est_err_p50:.4g} "
+                f"est_err_p95={acc.est_err_p95:.4g} "
+                f"rung_mispredict_rate={acc.rung_mispredict_rate:.4g} "
+                f"overflow_causes={causes}"))
+
         # per-rung hash-kernel timing: the multi-row tiled kernel (the
         # bin's autotuned tile) against its tile=1 row-sequential
         # degeneracy, both through the real dispatching backend path

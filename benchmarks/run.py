@@ -131,6 +131,8 @@ def main() -> None:
     serving_parity_rows = 0
     plans_warmed = plan_warm_hits = sketch_warm_hits = 0
     tuning_rows = 0
+    est_err_p50s, est_err_p95s, mispredict_rates = [], [], []
+    overflow_causes: dict = {}
     for name, us, derived in rows:
         if name == "overall/plan_setup/total":
             setup_us = us
@@ -170,6 +172,19 @@ def main() -> None:
                 chain_plan_hits += int(part.split("=", 1)[1])
             if is_graph and part.startswith("ff_skips="):
                 chain_ff_skips += int(part.split("=", 1)[1])
+            if name.endswith("/est_accuracy"):
+                if part.startswith("est_err_p50="):
+                    est_err_p50s.append(float(part.split("=", 1)[1]))
+                if part.startswith("est_err_p95="):
+                    est_err_p95s.append(float(part.split("=", 1)[1]))
+                if part.startswith("rung_mispredict_rate="):
+                    mispredict_rates.append(float(part.split("=", 1)[1]))
+                if part.startswith("overflow_causes=") and \
+                        not part.endswith("=none"):
+                    for kv in part.split("=", 1)[1].split(";"):
+                        ck, cv = kv.split(":")
+                        overflow_causes[ck] = (overflow_causes.get(ck, 0)
+                                               + int(cv))
             if name.endswith("/rungs") and part.startswith("hash_rows="):
                 n_rows = int(part.split("=", 1)[1])
                 hash_bin_rows += n_rows
@@ -272,6 +287,18 @@ def main() -> None:
                "plans_warmed": plans_warmed,
                "plan_warm_hits": plan_warm_hits,
                "sketch_warm_hits": sketch_warm_hits,
+               # estimation-accuracy telemetry (repro.obs.accuracy):
+               # worst-case HLL-estimate error percentiles, per-rung
+               # misprediction rate, and overflow-fallback attribution
+               # across the overall suite's fresh Ocean runs (the CI
+               # observability canary asserts these are present and sane)
+               "est_err_p50": (max(est_err_p50s) if est_err_p50s
+                               else None),
+               "est_err_p95": (max(est_err_p95s) if est_err_p95s
+                               else None),
+               "rung_mispredict_rate": (max(mispredict_rates)
+                                        if mispredict_rates else None),
+               "overflow_fallback_causes": overflow_causes,
                # autotune sweep evidence: tuning/... rows carry every
                # measured candidate (including losers and pruned tile
                # tails) drained from core.tuning.measurement_log()
@@ -319,6 +346,11 @@ def main() -> None:
                 "serving_p50_us": summary["serving_p50_us"],
                 "plans_warmed": summary["plans_warmed"],
                 "plan_warm_hits": summary["plan_warm_hits"],
+                "est_err_p50": summary["est_err_p50"],
+                "est_err_p95": summary["est_err_p95"],
+                "rung_mispredict_rate": summary["rung_mispredict_rate"],
+                "overflow_fallback_causes":
+                    summary["overflow_fallback_causes"],
             }
             try:
                 with open(args.trajectory) as f:

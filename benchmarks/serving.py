@@ -97,6 +97,20 @@ def run(rows, scale: int = 1) -> None:
         f"queue_peak={st.queue_depth_peak} "
         f"wait_us={st.queue_wait_seconds / n * 1e6:.1f} parity=ok"))
 
+    # the exportable registry view of the same numbers: ServiceStats
+    # fields are views over st.registry, so the snapshot must agree with
+    # the row fields above (asserted — this is the registry's canary)
+    snap = st.snapshot()
+    assert snap["counters"]["requests"] == st.requests
+    assert snap["counters"]["batches"] == st.batches
+    hist = snap["histograms"]["latency_seconds"]
+    assert hist["count"] == n and abs(hist["p50"] - p50) < 1e-12
+    rows.append((
+        "serving/pool/registry", 0.0,
+        f"series={len(snap['counters']) + len(snap['gauges']) + len(snap['histograms'])} "
+        f"snapshot_requests={snap['counters']['requests']} "
+        f"snapshot_p50_us={hist['p50'] * 1e6:.1f} parity=ok"))
+
     # plan warming: same burst, but the background warmer is given time to
     # build every queued request's plan (and sketches) before workers
     # start — queue wait converts into plan-setup time, and the worker-

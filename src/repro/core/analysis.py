@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace
 from . import hll
 from .dispatch import (DeviceSpec, Launch, collect_in_completion_order,
                        device_context, overlap_host_work, resolve_devices,
@@ -403,6 +404,7 @@ class AnalysisPipeline:
         # Bucket both matrices onto the pow2 shape ladder so this single
         # fused launch (all three statistics stages, one dispatch, one
         # async D2H) reuses its jit specialization across matrices.
+        t0_w1 = time.perf_counter()
         sa_ptr, sa_idx, ra_pad = _block_arrays(a_ptr, a_idx, 0, a.m)
         sb_ptr, sb_idx, rb_pad = _block_arrays(b_ptr, b_idx, 0, b.m)
         prod_p, lo_p, hi_p = _fused_stats(sa_ptr, sa_idx, sb_ptr, sb_idx,
@@ -410,6 +412,8 @@ class AnalysisPipeline:
                                           num_rows_b=rb_pad)
         wave1 = [Launch("stats", 0, (prod_p, lo_p, hi_p))]
         start_async_host_copies(wave1)
+        trace.add_span("analysis.wave1", t0_w1,
+                       time.perf_counter() - t0_w1, fused=True)
         ov_s, ov_pending = 0.0, False
         if overlap_work is not None:
             # The fused launch is dispatched but not awaited: the prework
@@ -429,9 +433,14 @@ class AnalysisPipeline:
                 sketch_cache[key] = sk
             return sk, full
 
+        t0_w2 = time.perf_counter()
+        prod_row = np.asarray(prod_p)[: a.m]
+        out_lo = np.asarray(lo_p)[: a.m]
+        out_hi = np.asarray(hi_p)[: a.m]
+        trace.add_span("analysis.wave2", t0_w2, time.perf_counter() - t0_w2)
         return self._finish(
-            a, b, prod_row=np.asarray(prod_p)[: a.m],
-            out_lo=np.asarray(lo_p)[: a.m], out_hi=np.asarray(hi_p)[: a.m],
+            a, b, prod_row=prod_row,
+            out_lo=out_lo, out_hi=out_hi,
             build_sketches=build_sketches, sketch_builder=sketch_builder,
             n_shards=1, shard_seconds=None, known_sizes=known_sizes,
             wave2_overlap_seconds=ov_s, wave2_overlapped=ov_pending)
@@ -486,6 +495,7 @@ class AnalysisPipeline:
         # ---- wave 1: one fused launch per device slot holding both an
         # A-block (products) and its same-slot B-block (column ranges);
         # unpaired blocks fall back to the standalone stage jits ----
+        t0_w1 = time.perf_counter()
         launches: List[Launch] = []
         order = 0
         fused1 = set()
@@ -548,6 +558,8 @@ class AnalysisPipeline:
             else:
                 fold_brange(part, host[0], host[1])
             shard_s[part.index] += time.perf_counter() - t0
+        trace.add_span("analysis.wave1", t0_w1,
+                       time.perf_counter() - t0_w1, shards=n_dev)
 
         total_products = int(prod_row.astype(np.int64).sum())
         er = total_products / max(a.nnz, 1)
@@ -568,6 +580,7 @@ class AnalysisPipeline:
         bmin_pad[: b.m] = b_min
         bmax_pad = np.full(rb_full, -1, np.int32)
         bmax_pad[: b.m] = b_max
+        t0_w2 = time.perf_counter()
         launches = []
         fused2 = set()
         for part in a_parts:
@@ -638,6 +651,8 @@ class AnalysisPipeline:
             else:
                 sketch_parts.append((part.r0, part.r1, host[0]))
             shard_s[part.index] += time.perf_counter() - t0
+        trace.add_span("analysis.wave2", t0_w2,
+                       time.perf_counter() - t0_w2, shards=n_dev)
 
         def sketch_builder(m: int):
             if cached_sk is not None:

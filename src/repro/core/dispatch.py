@@ -24,6 +24,8 @@ from typing import Callable, Iterator, List, Sequence, Tuple, Union
 import jax
 import numpy as np
 
+from repro.obs import trace
+
 DeviceSpec = Union[None, int, Sequence, "jax.sharding.Mesh"]
 
 
@@ -113,7 +115,9 @@ def overlap_host_work(launches: Sequence[Launch],
     pending = any(not launch_ready(it) for it in launches)
     t0 = time.perf_counter()
     result = work()
-    return result, time.perf_counter() - t0, pending
+    dt = time.perf_counter() - t0
+    trace.add_span("dispatch.overlap_host_work", t0, dt, overlapped=pending)
+    return result, dt, pending
 
 
 def collect_in_completion_order(launches: Sequence[Launch]

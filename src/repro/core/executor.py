@@ -59,6 +59,8 @@ import jax
 import numpy as np
 
 from repro.kernels import ops as kops
+from repro.obs import accuracy as obs_accuracy
+from repro.obs import trace
 from . import esc as esc_mod
 from .dispatch import (Launch, collect_in_completion_order, device_context,
                        start_async_host_copies)
@@ -391,6 +393,9 @@ class _MergeState:
     def __init__(self, m_rows: int, post: Optional[MergePostOps] = None):
         self.kept: List[Tuple[int, _Slab]] = []
         self.overflow: Dict[int, np.ndarray] = {}
+        # overflow-fallback attribution: which bin family's capacity the
+        # overflowed rows broke (estimation-accuracy telemetry)
+        self.overflow_causes: Dict[str, int] = {}
         self.post = post
         self.colsum_parts: List[Tuple[int, np.ndarray]] = []
         # exact per-row nnz of the *raw* (pre-mask/pre-prune) product —
@@ -415,10 +420,16 @@ class _MergeState:
             # exact value when the fallback slab lands, before finalize,
             # so the fed-forward sizes are exact on every path.
             self.raw_counts[slab.rows] = slab.nnz
-        if it.tag[0] in ("dense", "hash"):  # ESC caps are upper bounds
+        kind, exec_ = it.tag
+        if kind in ("dense", "hash"):  # ESC caps are upper bounds
             over = slab.nnz > slab.cols.shape[1]
             if over.any():
                 self.overflow[it.order] = slab.rows[over]
+                cause = ("hash_spill" if kind == "hash"
+                         else "longrow_slab" if exec_.is_longrow
+                         else "dense_window")
+                self.overflow_causes[cause] = (
+                    self.overflow_causes.get(cause, 0) + int(over.sum()))
                 keep = ~over
                 slab = _Slab(slab.rows[keep], slab.cols[keep],
                              slab.vals[keep], slab.nnz[keep])
@@ -480,14 +491,16 @@ def _run_overflow_fallback(state: _MergeState, products: np.ndarray,
     rows = state.fallback_rows()
     if rows is None:
         return 0
-    sub = gather_rows(a, rows)
-    p_cap = pow2_at_least(int(products[rows].sum()), floor=64)
-    res = esc_mod.esc_spgemm(
-        sub.indptr, sub.indices, sub.values, b.indptr, b.indices,
-        b.values, p_cap=p_cap, out_cap=p_cap, num_rows_a=sub.m,
-        n_cols_b=b.n)
-    slab, _ = _esc_to_slab(res, rows, sub.m, p_cap)
-    state.add_fallback(slab)
+    with trace.span("exec.overflow_fallback") as sp:
+        sub = gather_rows(a, rows)
+        p_cap = pow2_at_least(int(products[rows].sum()), floor=64)
+        res = esc_mod.esc_spgemm(
+            sub.indptr, sub.indices, sub.values, b.indptr, b.indices,
+            b.values, p_cap=p_cap, out_cap=p_cap, num_rows_a=sub.m,
+            n_cols_b=b.n)
+        slab, _ = _esc_to_slab(res, rows, sub.m, p_cap)
+        state.add_fallback(slab)
+        sp.set(rows=len(rows))
     return len(rows)
 
 
@@ -504,6 +517,7 @@ def _collect_serial(items: List[Launch], plan: ExecutionPlan, a: CSR,
     state = _MergeState(a.m, post)
     slabs = [(it, _materialize(it)) for it in items]
     stage["numeric"] = dispatch_s + (time.perf_counter() - t0)
+    trace.add_span("exec.collect", t0, time.perf_counter() - t0)
     t0 = time.perf_counter()
     for it, slab in slabs:
         state.add(it, slab)
@@ -512,7 +526,9 @@ def _collect_serial(items: List[Launch], plan: ExecutionPlan, a: CSR,
     t0 = time.perf_counter()
     c, total = _compact_slabs(state.finalize(), (a.m, b.n), a_values.dtype)
     stage["postprocess"] = time.perf_counter() - t0
-    return c, total, n_overflow, 0.0, 0.0, state.raw_counts
+    trace.add_span("exec.compact", t0, stage["postprocess"])
+    return (c, total, n_overflow, 0.0, 0.0, state.raw_counts,
+            state.overflow_causes)
 
 
 def _collect_pipelined(items: List[Launch], plan: ExecutionPlan, a: CSR,
@@ -525,14 +541,22 @@ def _collect_pipelined(items: List[Launch], plan: ExecutionPlan, a: CSR,
     state = _MergeState(a.m, post)
     collect_s = merge_s = overlap_s = 0.0
     n_left = len(items)
+    traced = trace.enabled()   # hot loop: no span/attr allocation when off
     for it in collect_in_completion_order(items):
         n_left -= 1
         t0 = time.perf_counter()
         slab = _materialize(it)
-        collect_s += time.perf_counter() - t0
+        dt_c = time.perf_counter() - t0
+        collect_s += dt_c
+        if traced:
+            trace.add_span("exec.collect", t0, dt_c, order=it.order,
+                           kind=it.tag[0])
         t0 = time.perf_counter()
         state.add(it, slab)
         dt = time.perf_counter() - t0
+        if traced:
+            trace.add_span("exec.merge", t0, dt, order=it.order,
+                           overlapped=bool(n_left))
         merge_s += dt
         if n_left:
             # merge work done before the last slab was collected — the
@@ -542,13 +566,17 @@ def _collect_pipelined(items: List[Launch], plan: ExecutionPlan, a: CSR,
             overlap_s += dt
     t0 = time.perf_counter()
     n_overflow = _run_overflow_fallback(state, plan.products, a, b)
+    t1 = time.perf_counter()
     c, total = _compact_slabs(state.finalize(), (a.m, b.n), a_values.dtype)
-    merge_s += time.perf_counter() - t0
+    t2 = time.perf_counter()
+    trace.add_span("exec.compact", t1, t2 - t1)
+    merge_s += t2 - t0
     stage["dispatch"] = dispatch_s
     stage["collect"] = collect_s
     stage["merge"] = merge_s
     frac = overlap_s / merge_s if merge_s > 0.0 else 0.0
-    return c, total, n_overflow, overlap_s, frac, state.raw_counts
+    return (c, total, n_overflow, overlap_s, frac, state.raw_counts,
+            state.overflow_causes)
 
 
 def _collect_threaded(items: List[Launch], plan: ExecutionPlan, a: CSR,
@@ -575,8 +603,10 @@ def _collect_threaded(items: List[Launch], plan: ExecutionPlan, a: CSR,
     slabs: "queue.Queue[Optional[Tuple[Launch, _Slab]]]" = queue.Queue()
     spans: List[Tuple[float, float]] = []   # (start, duration) per add
     errors: List[BaseException] = []
+    worker_tid: List[int] = []
 
     def worker():
+        worker_tid.append(threading.get_ident())
         while True:
             item = slabs.get()
             if item is None:
@@ -594,11 +624,16 @@ def _collect_threaded(items: List[Launch], plan: ExecutionPlan, a: CSR,
                           daemon=True)
     th.start()
     collect_s = 0.0
+    traced = trace.enabled()   # hot loop: no span/attr allocation when off
     try:
         for it in collect_in_completion_order(items):
             t0 = time.perf_counter()
             slab = _materialize(it)
-            collect_s += time.perf_counter() - t0
+            dt_c = time.perf_counter() - t0
+            collect_s += dt_c
+            if traced:
+                trace.add_span("exec.collect", t0, dt_c, order=it.order,
+                               kind=it.tag[0])
             slabs.put((it, slab))
     finally:
         collect_end = time.perf_counter()
@@ -606,17 +641,27 @@ def _collect_threaded(items: List[Launch], plan: ExecutionPlan, a: CSR,
         th.join()
     if errors:
         raise errors[0]
+    if traced and worker_tid:
+        # the worker already timed each merge; replay its (t0, duration)
+        # pairs onto its own timeline lane now that it has drained
+        for w0, wdt in spans:
+            trace.add_span("exec.merge_worker", w0, wdt,
+                           tid=worker_tid[0], thread="ocean-merge-worker")
     merge_s = sum(dt for _, dt in spans)
     overlap_s = sum(min(max(collect_end - t0, 0.0), dt) for t0, dt in spans)
     t0 = time.perf_counter()
     n_overflow = _run_overflow_fallback(state, plan.products, a, b)
+    t1 = time.perf_counter()
     c, total = _compact_slabs(state.finalize(), (a.m, b.n), a_values.dtype)
-    merge_s += time.perf_counter() - t0
+    t2 = time.perf_counter()
+    trace.add_span("exec.compact", t1, t2 - t1)
+    merge_s += t2 - t0
     stage["dispatch"] = dispatch_s
     stage["collect"] = collect_s
     stage["merge"] = merge_s
     frac = overlap_s / merge_s if merge_s > 0.0 else 0.0
-    return c, total, n_overflow, overlap_s, frac, state.raw_counts
+    return (c, total, n_overflow, overlap_s, frac, state.raw_counts,
+            state.overflow_causes)
 
 
 _COLLECT_OF = {PIPELINED: _collect_pipelined, THREADED: _collect_threaded,
@@ -649,10 +694,26 @@ def _execute(plan: ExecutionPlan, shards: List[_ShardWork], a: CSR, b: CSR,
     t0 = time.perf_counter()
     items = _dispatch(shards, a_values, b)
     dispatch_s = time.perf_counter() - t0
+    trace.add_span("exec.dispatch", t0, dispatch_s, launches=len(items))
 
     collect = _COLLECT_OF[mode]
-    c, total, n_overflow, overlap_s, frac, raw_counts = collect(
+    c, total, n_overflow, overlap_s, _frac, raw_counts, causes = collect(
         items, plan, a, b, a_values, stage, dispatch_s, post)
+    # overlap is merge work by definition; clamp so the derived
+    # merge_overlap_frac view stays in [0, 1] even under clock jitter
+    merge_s = stage.get("merge", 0.0)
+    overlap_s = min(max(overlap_s, 0.0), merge_s)
+
+    # estimation-accuracy telemetry: exact per-row nnz of the raw product
+    # (the merge state's pre-filter counts when fused post-ops pruned the
+    # output, else the output's own indptr diff)
+    exact_nnz = (raw_counts if raw_counts is not None
+                 else np.diff(np.asarray(c.indptr, np.int64)))
+    if plan.feed_forward and causes:
+        # a stale feed-forward size is the likely culprit when the fed
+        # plan's bins overflow; qualify the attribution
+        causes = {f"{k}+stale_feed": v for k, v in causes.items()}
+    accuracy = obs_accuracy.measure_accuracy(plan, exact_nnz, causes)
 
     report = OceanReport(
         workflow=plan.workflow, er=plan.er, sampled_cr=plan.sampled_cr,
@@ -662,12 +723,13 @@ def _execute(plan: ExecutionPlan, shards: List[_ShardWork], a: CSR, b: CSR,
         overflow_rows=n_overflow, nnz_out=total, plan_cache_hit=cache_hit,
         feed_forward=plan.feed_forward,
         n_shards=n_shards, shard_imbalance=shard_imbalance,
-        executor=mode, overlap_seconds=overlap_s, merge_overlap_frac=frac,
+        executor=mode, overlap_seconds=overlap_s,
         analysis_shards=plan.analysis_shards,
         analysis_shard_seconds=plan.analysis_shard_seconds,
         raw_row_nnz=raw_counts,
         wave2_overlap_seconds=plan.wave2_overlap_seconds,
-        wave2_overlapped=plan.wave2_overlapped)
+        wave2_overlapped=plan.wave2_overlapped,
+        estimation_accuracy=accuracy, decision=plan.decision)
     return c, report
 
 

@@ -38,6 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kops
+from repro.obs import accuracy as obs_accuracy
+from repro.obs import trace
 from . import esc as esc_mod
 from . import tuning as tuning_mod
 from .analysis import (SHARD_ROW_FLOOR, AnalysisResult, OceanConfig, analyze,
@@ -69,7 +71,6 @@ class OceanReport:
     # moved off the post-barrier critical path (overlapped with device
     # work on async backends; pipelined executor only, serial reports 0.0)
     overlap_seconds: float = 0.0
-    merge_overlap_frac: float = 0.0
     # device shards the plan's analysis stage ran across, with per-shard
     # host-side seconds (dispatch enqueue + collect/merge per shard — not
     # device execution time; build-time facts of the plan: a cache hit
@@ -89,6 +90,13 @@ class OceanReport:
     # whether wave-2 launches were genuinely still in flight when it ran
     wave2_overlap_seconds: float = 0.0
     wave2_overlapped: bool = False
+    # estimate-vs-exact telemetry measured after the numeric pass
+    # (repro.obs.accuracy; None when the plan predates pred_row_nnz)
+    estimation_accuracy: Optional[object] = None
+    # workflow-decision audit record captured at plan-build time: the
+    # workflow chosen plus every input to the choice (Table 1 thresholds,
+    # ER, sampled CR, forcing) — a build-time fact replayed on cache hits
+    decision: Optional[Dict] = None
 
     @property
     def total_seconds(self) -> float:
@@ -102,6 +110,47 @@ class OceanReport:
         return sum(self.stage_seconds.get(k, 0.0)
                    for k in ("plan_lookup", "analysis", "prediction",
                              "binning", "partition"))
+
+    @property
+    def merge_overlap_frac(self) -> float:
+        """Overlapped merge work as a fraction of all merge work — a
+        *view* over ``overlap_seconds`` / ``stage_seconds["merge"]`` (one
+        measurement, so the fraction can never drift from the seconds it
+        summarizes), clamped to [0, 1]."""
+        merge_s = self.stage_seconds.get("merge", 0.0)
+        if merge_s <= 0.0 or self.overlap_seconds <= 0.0:
+            return 0.0
+        return min(1.0, self.overlap_seconds / merge_s)
+
+    def audit(self) -> List[str]:
+        """Timing-field consistency audit. Returns a list of violation
+        descriptions (empty == consistent): non-negative stage/overlap
+        times, fractions within [0, 1], and child-span sums never
+        exceeding their parent wall time."""
+        bad: List[str] = []
+        for k, v in self.stage_seconds.items():
+            if v < 0.0:
+                bad.append(f"stage_seconds[{k!r}] negative: {v}")
+        if self.overlap_seconds < 0.0:
+            bad.append(f"overlap_seconds negative: {self.overlap_seconds}")
+        if self.wave2_overlap_seconds < 0.0:
+            bad.append("wave2_overlap_seconds negative: "
+                       f"{self.wave2_overlap_seconds}")
+        if not 0.0 <= self.merge_overlap_frac <= 1.0:
+            bad.append(f"merge_overlap_frac out of [0, 1]: "
+                       f"{self.merge_overlap_frac}")
+        merge_s = self.stage_seconds.get("merge")
+        if merge_s is not None and self.overlap_seconds > merge_s * (
+                1.0 + 1e-9):
+            bad.append(f"overlap_seconds {self.overlap_seconds} exceeds "
+                       f"parent merge time {merge_s}")
+        for s in self.analysis_shard_seconds or ():
+            if s < 0.0:
+                bad.append(f"analysis_shard_seconds entry negative: {s}")
+        if self.setup_seconds > self.total_seconds * (1.0 + 1e-9):
+            bad.append(f"setup_seconds {self.setup_seconds} exceeds "
+                       f"total_seconds {self.total_seconds}")
+        return bad
 
 
 def gather_rows(a: CSR, rows: np.ndarray) -> CSR:
@@ -231,6 +280,13 @@ class ExecutionPlan:
     # OceanReport.wave2_overlap_seconds)
     wave2_overlap_seconds: float = 0.0
     wave2_overlapped: bool = False
+    # the per-row size prediction binning consumed (float64; HLL estimate,
+    # symbolic exact, product upper bound, or clamped feed-forward sizes
+    # depending on workflow) — kept so the executor can measure
+    # estimate-vs-exact accuracy after the numeric pass
+    pred_row_nnz: Optional[np.ndarray] = None
+    # workflow-decision audit record (repro.obs.accuracy.record_decision)
+    decision: Optional[Dict] = None
 
     def reuse_b_sketches(self) -> Dict:
         """Seed a sketch cache from this plan for later builds against the
@@ -368,6 +424,7 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
         ptr = np.asarray(a.indptr, np.int64)
         a_row_nnz = ptr[1:] - ptr[:-1]
     stage["analysis"] = time.perf_counter() - t0
+    trace.add_span("plan.analysis", t0, stage["analysis"], workflow=wf)
 
     # ---------------- size prediction ----------------
     t0 = time.perf_counter()
@@ -417,6 +474,7 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
     else:  # upper_bound
         pred = products.astype(np.float64)
     stage["prediction"] = time.perf_counter() - t0
+    trace.add_span("plan.prediction", t0, stage["prediction"])
 
     # ---------------- binning ----------------
     t0 = time.perf_counter()
@@ -498,6 +556,12 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
                            cost=np.asarray(plan.esc_costs, np.int64),
                            n_valid=len(rows))
     stage["binning"] = time.perf_counter() - t0
+    trace.add_span("plan.binning", t0, stage["binning"])
+
+    decision = obs_accuracy.record_decision(
+        workflow=wf, forced=force_workflow, feed_forward=(wf == "known"),
+        er=analysis.er, sampled_cr=analysis.sampled_cr,
+        nproducts_avg=analysis.nproducts_avg, cfg=cfg)
 
     return ExecutionPlan(
         key=key, shape_a=a.shape, shape_b=b.shape, workflow=wf,
@@ -511,7 +575,8 @@ def build_plan(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
         build_seconds=stage, analysis_shards=analysis.n_shards,
         analysis_shard_seconds=analysis.shard_seconds,
         feed_forward=(wf == "known"),
-        wave2_overlap_seconds=ov_s, wave2_overlapped=ov_pending)
+        wave2_overlap_seconds=ov_s, wave2_overlapped=ov_pending,
+        pred_row_nnz=np.asarray(pred, np.float64), decision=decision)
 
 
 # ---------------------------------------------------------------------------

@@ -27,6 +27,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 
+from repro.obs import trace
 from . import esc as esc_mod
 from .analysis import AnalysisResult, OceanConfig
 from .formats import CSR, pow2_at_least
@@ -125,6 +126,7 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
             splan = partition_plan(plan, devices)
             stage = {"analysis": 0.0, "prediction": 0.0, "binning": 0.0,
                      "partition": time.perf_counter() - t0}
+            trace.add_span("plan.partition", t0, stage["partition"])
             return execute_sharded_plan(splan, a, b, stage=stage,
                                         executor=executor, post=post)
         return execute_plan(plan, a, b, executor=executor, post=post)
@@ -140,6 +142,8 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
         lkey = key if devs is None else key + "|" + topology_key(devs)
         cached = cache_obj.lookup(lkey)
         lookup_s = time.perf_counter() - t0
+        trace.add_span("plan.lookup", t0, lookup_s,
+                       hit=bool(cached is not None))
         if cached is not None:
             # the cached path's entire host-side setup cost is the O(nnz)
             # structure hash + LRU lookup
@@ -172,6 +176,7 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
         t0 = time.perf_counter()
         splan = partition_plan(base, devs)
         stage["partition"] = time.perf_counter() - t0
+        trace.add_span("plan.partition", t0, stage["partition"])
         cache_obj.insert(lkey, splan)
         return execute_sharded_plan(splan, a, b, stage=stage,
                                     executor=executor, post=post)
@@ -184,6 +189,7 @@ def ocean_spgemm(a: CSR, b: CSR, cfg: OceanConfig = OceanConfig(), *,
         t0 = time.perf_counter()
         splan = partition_plan(fresh, devs)
         stage["partition"] = time.perf_counter() - t0
+        trace.add_span("plan.partition", t0, stage["partition"])
         return execute_sharded_plan(splan, a, b, stage=stage,
                                     executor=executor, post=post)
     return execute_plan(fresh, a, b, stage=fresh.build_seconds,

@@ -38,6 +38,7 @@ from repro.core.formats import CSR
 from repro.core.partition import DeviceSpec
 from repro.core.planner import OceanReport
 from repro.core.workflow import ocean_spgemm_many, warm_plan
+from repro.obs import trace
 
 from .spgemm_service import SpGEMMService
 
@@ -313,6 +314,10 @@ class SpGEMMPool:
         actually built the plan (a later worker hit is then a *warm* hit,
         not an ordinary cache hit)."""
         svc = self.service
+        with trace.span("pool.warm", tenant=str(r.tenant)):
+            return self._warm_one_inner(r, svc)
+
+    def _warm_one_inner(self, r: _Pending, svc) -> bool:
         bucket = svc.sketch_cache_for(r.b, r.tenant)
         before = set(bucket.keys())
         _, built = warm_plan(
@@ -364,6 +369,7 @@ class SpGEMMPool:
                 self._work.wait()
             if not self._queue:
                 return None
+            t0_take = time.perf_counter()
             head = self._queue.popleft()
             batch = [head]
             rest: List[_Pending] = []
@@ -376,6 +382,10 @@ class SpGEMMPool:
             self._queue = deque(rest)
             self._inflight += 1
             self.stats.note_queue_depth(len(self._queue))
+            if trace.enabled():
+                trace.add_span("pool.batch_assembly", t0_take,
+                               time.perf_counter() - t0_take,
+                               size=len(batch))
             return batch
 
     def _worker_loop(self) -> None:
@@ -410,6 +420,17 @@ class SpGEMMPool:
                 r.future.set_exception(exc)
             return
         t_done = time.perf_counter()
+        if trace.enabled():
+            trace.add_span("pool.batch", t_dispatch, t_done - t_dispatch,
+                           size=len(batch))
+            for r in batch:
+                # own synthetic lane per request: waits from different
+                # batches partially overlap a worker's timeline, which
+                # would break same-tid span nesting
+                trace.add_span("pool.queue_wait", r.t_submit,
+                               t_dispatch - r.t_submit,
+                               tid=id(r), thread="pool-queue",
+                               tenant=str(r.tenant))
         with self._lock:
             self.stats.batches += 1
             self.stats.batched_requests += len(batch)

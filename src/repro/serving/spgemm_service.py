@@ -20,8 +20,6 @@ queue depth, batch occupancy, shed rate) for both. See ``docs/serving.md``.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
 import threading
 import time
 from collections import OrderedDict
@@ -32,6 +30,7 @@ from repro.core.formats import CSR, lru_bucket, structure_hash
 from repro.core.partition import DeviceSpec, resolve_devices
 from repro.core.planner import OceanReport, PlanCache
 from repro.core.workflow import ocean_spgemm
+from repro.obs.metrics import MetricsRegistry
 
 # per-RHS buckets retained per tenant (sketch caches / size feeds); a
 # tenant's stream usually reuses a handful of right-hand sides
@@ -43,61 +42,111 @@ RHS_BUCKETS_PER_TENANT = 8
 LATENCY_SAMPLE_CAP = 4096
 
 
-@dataclasses.dataclass
+def _counter_property(name: str, doc: Optional[str] = None) -> property:
+    """A ServiceStats field backed by the registry series ``name``: reads
+    return the series value, ``stats.field += n`` writes through. The
+    field and any exported snapshot can never disagree — they are one
+    number."""
+    def fget(self):
+        return self.registry.counter(name).value
+
+    def fset(self, v):
+        self.registry.counter(name).value = v
+
+    return property(fget, fset, doc=doc)
+
+
+def _gauge_property(name: str, agg: str) -> property:
+    def fget(self):
+        return self.registry.gauge(name, agg=agg).value
+
+    def fset(self, v):
+        self.registry.gauge(name, agg=agg).value = v
+
+    return property(fget, fset)
+
+
 class ServiceStats:
     """Request counters + SLO metrics shared by :class:`SpGEMMService`
     and :class:`~repro.serving.pool.SpGEMMPool`.
 
-    Latency percentiles are exact linear-interpolated quantiles (numpy's
-    default convention) over a bounded sample of the most recent request
-    latencies; queue/batch/shed fields are maintained by the pool (they
-    stay zero for direct synchronous service use). See ``docs/serving.md``
-    for the metrics glossary.
+    Every public counter/gauge field is a *view* over this instance's
+    :class:`~repro.obs.metrics.MetricsRegistry` (``stats.registry``):
+    ``stats.requests += 1`` writes the ``requests`` series, and
+    ``stats.registry.snapshot()`` exports the same numbers — one set of
+    values, not two that can drift. Latency percentiles are exact
+    linear-interpolated quantiles (numpy's default convention) over a
+    bounded histogram reservoir of the most recent request latencies;
+    queue/batch/shed fields are maintained by the pool (they stay zero for
+    direct synchronous service use). Per-worker aggregation is
+    :meth:`merge` (fold another stats object in, race-free against
+    concurrent recording on either side) and :meth:`reset` zeroes every
+    series in place. See ``docs/serving.md`` for the metrics glossary and
+    ``docs/observability.md`` for the registry layer.
     """
-    requests: int = 0
-    plan_hits: int = 0
-    plan_misses: int = 0
-    total_seconds: float = 0.0
-    setup_seconds: float = 0.0
+
+    requests = _counter_property("requests")
+    plan_hits = _counter_property("plan_hits")
+    plan_misses = _counter_property("plan_misses")
+    total_seconds = _counter_property("total_seconds")
+    setup_seconds = _counter_property("setup_seconds")
     # pipelined-executor overlap: host-merge work moved off the
     # post-barrier critical path (see OceanReport.overlap_seconds), and
     # the total merge work it is a fraction of
-    overlap_seconds: float = 0.0
-    merge_seconds: float = 0.0
+    overlap_seconds = _counter_property("overlap_seconds")
+    merge_seconds = _counter_property("merge_seconds")
     # chain traffic (run_chain): iterations across all chains, how many
     # reused a cached plan outright, and how many fresh builds were sized
     # from a feed-forward SizeFeed (estimation skipped, workflow 'known')
-    chains: int = 0
-    chain_iterations: int = 0
-    chain_plan_hits: int = 0
-    chain_feed_forward_skips: int = 0
-    chain_estimated_builds: int = 0
+    chains = _counter_property("chains")
+    chain_iterations = _counter_property("chain_iterations")
+    chain_plan_hits = _counter_property("chain_plan_hits")
+    chain_feed_forward_skips = _counter_property("chain_feed_forward_skips")
+    chain_estimated_builds = _counter_property("chain_estimated_builds")
     # pool traffic (serving.pool): admission control + micro-batching
-    shed: int = 0                  # requests rejected by admission control
-    batches: int = 0               # micro-batches dispatched to workers
-    batched_requests: int = 0      # requests served through those batches
-    queue_depth: int = 0           # current pool queue depth
-    queue_depth_peak: int = 0      # high-water mark of the queue
-    queue_wait_seconds: float = 0.0  # total submit -> dispatch wait
+    shed = _counter_property(
+        "shed", "requests rejected by admission control")
+    batches = _counter_property(
+        "batches", "micro-batches dispatched to workers")
+    batched_requests = _counter_property(
+        "batched_requests", "requests served through those batches")
+    queue_depth = _gauge_property("queue_depth", "sum")
+    queue_depth_peak = _gauge_property("queue_depth_peak", "max")
+    queue_wait_seconds = _counter_property(
+        "queue_wait_seconds", "total submit -> dispatch wait")
     # plan warmer (serving.pool.SpGEMMPool): plans speculatively built
     # from queued requests, and worker-side plan-cache hits served by a
     # plan the warmer built (counted separately from organic plan_hits;
     # None tenant key = the default un-namespaced tenant)
-    plans_warmed: int = 0
-    plan_warm_hits: int = 0
-    plan_warm_hits_by_tenant: Dict[Optional[str], int] = dataclasses.field(
-        default_factory=dict, compare=False)
+    plans_warmed = _counter_property("plans_warmed")
+    plan_warm_hits = _counter_property("plan_warm_hits")
     # sketch-cache accounting, separate from plan-cache hits: sketch
     # bucket lookups that hit, and the subset whose sketches the warmer
     # had inserted before a worker touched the request (warm-path hits)
-    sketch_hits: int = 0
-    sketch_warm_hits: int = 0
-    sketch_warm_hits_by_tenant: Dict[Optional[str], int] = dataclasses.field(
-        default_factory=dict, compare=False)
-    _latencies: List[float] = dataclasses.field(
-        default_factory=list, repr=False, compare=False)
-    _lock: threading.Lock = dataclasses.field(
-        default_factory=threading.Lock, repr=False, compare=False)
+    sketch_hits = _counter_property("sketch_hits")
+    sketch_warm_hits = _counter_property("sketch_warm_hits")
+
+    def __init__(self):
+        self.registry = MetricsRegistry()
+        self._lock = threading.Lock()
+        # pre-create the latency reservoir so its cap is pinned
+        self._latency_hist = self.registry.histogram(
+            "latency_seconds", cap=LATENCY_SAMPLE_CAP)
+
+    @property
+    def plan_warm_hits_by_tenant(self) -> Dict[Optional[str], int]:
+        """Warm plan-cache hits per tenant (plain dict view of the
+        ``plan_warm_hits`` series that carry a ``tenant`` label)."""
+        return self.registry.labeled_values("plan_warm_hits", "tenant")
+
+    @property
+    def sketch_warm_hits_by_tenant(self) -> Dict[Optional[str], int]:
+        """Warm sketch-bucket hits per tenant."""
+        return self.registry.labeled_values("sketch_warm_hits", "tenant")
+
+    def snapshot(self) -> Dict[str, Dict]:
+        """JSON-ready export of every series (``registry.snapshot()``)."""
+        return self.registry.snapshot()
 
     @property
     def hit_rate(self) -> float:
@@ -121,30 +170,20 @@ class ServiceStats:
         """Add one request latency to the bounded reservoir (oldest
         entries drop once ``LATENCY_SAMPLE_CAP`` is exceeded)."""
         with self._lock:
-            self._latencies.append(seconds)
-            excess = len(self._latencies) - LATENCY_SAMPLE_CAP
-            if excess > 0:
-                del self._latencies[:excess]
+            self._latency_hist.record(seconds)
 
     def latency_sample(self) -> List[float]:
         """Snapshot of the retained latency sample (seconds, submit
         order)."""
         with self._lock:
-            return list(self._latencies)
+            return self._latency_hist.sample()
 
     def latency_percentile(self, q: float) -> float:
         """Exact ``q``-th percentile (0..100) of the retained sample,
         linear interpolation between closest ranks (numpy's default
         method). 0.0 when no latency has been recorded."""
         with self._lock:
-            xs = sorted(self._latencies)
-        if not xs:
-            return 0.0
-        rank = (len(xs) - 1) * (q / 100.0)
-        lo = int(math.floor(rank))
-        hi = int(math.ceil(rank))
-        frac = rank - lo
-        return xs[lo] * (1.0 - frac) + xs[hi] * frac
+            return self._latency_hist.percentile(q)
 
     @property
     def p50_seconds(self) -> float:
@@ -173,25 +212,40 @@ class ServiceStats:
     def note_queue_depth(self, depth: int) -> None:
         """Record the pool's current queue depth (tracks the peak)."""
         with self._lock:
-            self.queue_depth = depth
-            if depth > self.queue_depth_peak:
-                self.queue_depth_peak = depth
+            self.registry.gauge("queue_depth", agg="sum").set(depth)
+            self.registry.gauge("queue_depth_peak", agg="max").set_max(depth)
 
     def note_plan_warm_hit(self, tenant: Optional[str]) -> None:
         """Count a plan-cache hit that was served by a warmed plan."""
         with self._lock:
-            self.plan_warm_hits += 1
-            self.plan_warm_hits_by_tenant[tenant] = \
-                self.plan_warm_hits_by_tenant.get(tenant, 0) + 1
+            self.registry.counter("plan_warm_hits").inc()
+            self.registry.counter("plan_warm_hits", tenant=tenant).inc()
 
     def note_sketch_hit(self, tenant: Optional[str], warm: bool) -> None:
         """Count a sketch-bucket hit (``warm`` = the warmer built it)."""
         with self._lock:
-            self.sketch_hits += 1
+            self.registry.counter("sketch_hits").inc()
             if warm:
-                self.sketch_warm_hits += 1
-                self.sketch_warm_hits_by_tenant[tenant] = \
-                    self.sketch_warm_hits_by_tenant.get(tenant, 0) + 1
+                self.registry.counter("sketch_warm_hits").inc()
+                self.registry.counter("sketch_warm_hits",
+                                      tenant=tenant).inc()
+
+    # -------------------- aggregation --------------------
+
+    def merge(self, other: "ServiceStats") -> None:
+        """Fold ``other``'s series into this stats object (counters sum,
+        queue_depth sums, queue_depth_peak takes the max, latency
+        reservoirs concatenate under the cap). Safe against concurrent
+        recording on either side; per-worker pools merge into a fleet
+        aggregate this way."""
+        with self._lock:
+            self.registry.merge(other.registry)
+
+    def reset(self) -> None:
+        """Zero every series in place (identities survive, values
+        restart) — e.g. between benchmark phases."""
+        with self._lock:
+            self.registry.reset()
 
 
 class SketchCache(dict):

@@ -30,6 +30,20 @@ def test_dropped_key_fails_loudly():
         check_trajectory_schema([ROW], entry)
 
 
+def test_observability_keys_are_additive_then_established():
+    # the accuracy-telemetry keys ride in as additive fields against a
+    # pre-observability trajectory, then become part of the contract once
+    # a row carries them
+    acc = dict(ROW, est_err_p50=0.1, est_err_p95=0.4,
+               rung_mispredict_rate=0.02,
+               overflow_fallback_causes={"hash_spill": 3})
+    check_trajectory_schema([ROW], acc)
+    entry = dict(acc)
+    del entry["est_err_p95"]
+    with pytest.raises(SystemExit, match="est_err_p95"):
+        check_trajectory_schema([acc], entry)
+
+
 def test_only_latest_row_establishes_the_schema():
     # older rows may predate additive fields; only the latest row's keys
     # are the contract

@@ -1,0 +1,441 @@
+"""Observability layer: tracer fast path, Perfetto export round-trip,
+estimation-accuracy telemetry, the metrics registry, and ServiceStats
+aggregation."""
+import json
+import threading
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import formats
+from repro.core.planner import OceanReport
+from repro.core.workflow import ocean_spgemm
+from repro.obs import accuracy, metrics, trace
+from repro.serving.spgemm_service import ServiceStats
+from tools.trace_export import validate_chrome_trace, write_chrome_trace
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_and_parents():
+    tr = trace.Tracer()
+    with trace.tracing(tr):
+        with trace.span("outer", k=1):
+            with trace.span("inner") as sp:
+                sp.set(found=True)
+    evs = tr.events()
+    assert [e["name"] for e in evs] == ["inner", "outer"]  # close order
+    inner, outer = evs
+    assert inner["parent"] == "outer" and outer["parent"] is None
+    assert inner["attrs"] == {"found": True}
+    assert outer["attrs"] == {"k": 1}
+    assert inner["t0"] >= outer["t0"]
+    assert inner["dur"] <= outer["dur"]
+
+
+def test_add_span_retroactive_nests_under_open_span():
+    tr = trace.Tracer()
+    with trace.tracing(tr):
+        with trace.span("stage"):
+            trace.add_span("sub", tr.epoch, 0.001, rows=3)
+    sub = tr.events()[0]
+    assert sub["name"] == "sub" and sub["parent"] == "stage"
+    assert sub["attrs"] == {"rows": 3}
+
+
+def test_add_span_cross_thread_is_parentless():
+    tr = trace.Tracer()
+    with trace.tracing(tr):
+        with trace.span("stage"):
+            tr.add_span("worker", tr.epoch, 0.001, tid=999,
+                        thread="merge-worker")
+    w = tr.events()[0]
+    assert w["tid"] == 999 and w["thread"] == "merge-worker"
+    assert w["parent"] is None  # other thread's nesting is unknown
+
+
+def test_tracing_restores_previous_tracer():
+    assert trace.current() is None
+    tr1, tr2 = trace.Tracer(), trace.Tracer()
+    with trace.tracing(tr1):
+        assert trace.current() is tr1
+        with trace.tracing(tr2):
+            assert trace.current() is tr2
+        assert trace.current() is tr1
+    assert trace.current() is None and not trace.enabled()
+
+
+def test_disabled_path_constructs_no_span(monkeypatch):
+    """The no-op fast path: with tracing off, span() must return the
+    NULL_SPAN singleton without ever constructing a Span."""
+    calls = {"n": 0}
+    orig_init = trace.Span.__init__
+
+    def counting_init(self, *a, **kw):
+        calls["n"] += 1
+        orig_init(self, *a, **kw)
+
+    monkeypatch.setattr(trace.Span, "__init__", counting_init)
+    assert trace.current() is None
+    for _ in range(100):
+        with trace.span("hot", attr=1) as sp:
+            sp.set(more=2)
+        trace.add_span("hot2", 0.0, 1.0, rows=5)
+    assert calls["n"] == 0
+    assert trace.span("x") is trace.NULL_SPAN
+    # and the same shim proves the enabled path does construct spans
+    tr = trace.Tracer()
+    with trace.tracing(tr):
+        with trace.span("on"):
+            pass
+    assert calls["n"] == 1 and len(tr) == 1
+
+
+def test_threaded_spans_keep_independent_stacks():
+    tr = trace.Tracer()
+    errs = []
+
+    def worker(i):
+        try:
+            with trace.span(f"w{i}"):
+                with trace.span(f"w{i}.inner"):
+                    pass
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    with trace.tracing(tr):
+        ts = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+    assert not errs and len(tr) == 16
+    for e in tr.events():
+        if e["name"].endswith(".inner"):
+            assert e["parent"] == e["name"][:-len(".inner")]
+
+
+# ---------------------------------------------------------------------------
+# Perfetto export
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_round_trip(tmp_path):
+    tr = trace.Tracer()
+    with trace.tracing(tr):
+        with trace.span("outer"):
+            with trace.span("inner", rows=2):
+                pass
+        tr.add_span("lane2", tr.epoch, 0.5, tid=7, thread="other")
+    path = tmp_path / "trace.json"
+    doc = write_chrome_trace(tr, str(path))
+    # the written file re-parses and validates
+    reparsed = validate_chrome_trace(path.read_text())
+    assert reparsed == json.loads(json.dumps(doc))
+    evs = doc["traceEvents"]
+    assert {e["name"] for e in evs} == {"outer", "inner", "lane2"}
+    assert all(e["ph"] == "X" and e["dur"] >= 0.0 and e["ts"] >= 0.0
+               for e in evs)
+    by_name = {e["name"]: e for e in evs}
+    assert by_name["inner"]["args"] == {"rows": 2, "parent": "outer"}
+    assert by_name["lane2"]["tid"] == 7
+    assert len({e["tid"] for e in evs}) == 2
+
+
+def test_validator_rejects_malformed_traces():
+    with pytest.raises(ValueError, match="traceEvents"):
+        validate_chrome_trace(json.dumps({"traceEvents": []}))
+    base = {"name": "a", "ph": "X", "ts": 0.0, "dur": 5.0,
+            "pid": 0, "tid": 1}
+    with pytest.raises(ValueError, match="missing"):
+        validate_chrome_trace(json.dumps(
+            {"traceEvents": [{k: v for k, v in base.items()
+                              if k != "dur"}]}))
+    with pytest.raises(ValueError, match="negative"):
+        validate_chrome_trace(json.dumps(
+            {"traceEvents": [dict(base, dur=-1.0)]}))
+    # partial overlap on one lane is not proper nesting
+    bad = [dict(base), dict(base, name="b", ts=3.0, dur=5.0)]
+    with pytest.raises(ValueError, match="overlaps"):
+        validate_chrome_trace(json.dumps({"traceEvents": bad}))
+    # while true nesting on one lane passes
+    ok = [dict(base), dict(base, name="b", ts=1.0, dur=2.0)]
+    validate_chrome_trace(json.dumps({"traceEvents": ok}))
+
+
+def test_traced_spgemm_exports_well_formed(tmp_path):
+    """End-to-end: one traced multiply covers the pipeline span set and
+    the exported trace validates; the same run untraced records nothing."""
+    a = formats.random_uniform_csr(11, 48, 40, 4.0)
+    b = formats.random_uniform_csr(12, 40, 52, 4.0)
+    c_ref, _ = ocean_spgemm(a, b, cache=False)
+    tr = trace.Tracer()
+    with trace.tracing(tr):
+        c, rep = ocean_spgemm(a, b, cache=False, executor="threaded")
+    assert np.array_equal(np.asarray(c.indptr), np.asarray(c_ref.indptr))
+    names = set(tr.names())
+    assert {"plan.analysis", "plan.prediction", "plan.binning",
+            "exec.dispatch", "exec.collect", "exec.compact"} <= names
+    path = tmp_path / "spgemm_trace.json"
+    doc = write_chrome_trace(tr, str(path))
+    validate_chrome_trace(path.read_text())
+    assert len(doc["traceEvents"]) == len(tr)
+    # tracing uninstalled: the same call records nothing anywhere
+    n_before = len(tr)
+    ocean_spgemm(a, b, cache=False, executor="threaded")
+    assert len(tr) == n_before and trace.current() is None
+
+
+# ---------------------------------------------------------------------------
+# estimation-accuracy telemetry
+# ---------------------------------------------------------------------------
+
+def _fake_plan(pred, products, *, dense=(), hash_=(), esc_rows=None,
+               workflow="estimation", feed_forward=False):
+    return SimpleNamespace(
+        workflow=workflow, feed_forward=feed_forward,
+        pred_row_nnz=np.asarray(pred, np.float64),
+        products=np.asarray(products, np.int64),
+        dense=list(dense), hash=list(hash_),
+        esc=None if esc_rows is None else SimpleNamespace(
+            rows=np.asarray(esc_rows, np.int64)))
+
+
+def test_measure_accuracy_math():
+    # rows: exact [10, 20, 0(dead), 8]; pred [10, 30, 5, 4]
+    pred = [10.0, 30.0, 5.0, 4.0]
+    exact = [10, 20, 0, 8]
+    dense = [SimpleNamespace(is_longrow=False, window=256, cap=32,
+                             rows=np.array([0, 1]))]
+    hash_ = [SimpleNamespace(table=64, spill=16, rows=np.array([3]))]
+    plan = _fake_plan(pred, [5, 5, 0, 5], dense=dense, hash_=hash_)
+    acc = accuracy.measure_accuracy(plan, np.asarray(exact))
+    assert acc.n_rows == 3  # dead row 2 excluded
+    # signed errors over live rows: 0.0, 0.5, -0.5 -> |err| sorted 0, .5, .5
+    assert acc.est_err_p50 == pytest.approx(0.5)
+    assert acc.est_err_p95 == pytest.approx(0.5)
+    assert sum(acc.signed_err_hist.values()) == 3
+    assert acc.signed_err_hist["[0.5,1)"] == 1      # +0.5 overprediction
+    assert acc.signed_err_hist["[-0.5,-0.2)"] == 1  # -0.5 underprediction
+    # dense cap 32 >= 4x max(exact,1) for rows 0 (10) and 1 (20)? 32<40,80
+    d = acc.per_rung["dense_w256"]
+    assert d == {"rows": 2, "capacity": 32, "underpredicted": 0,
+                 "overpredicted": 0}
+    # hash capacity table+spill = 80 >= 4*8 -> row 3 overpredicted
+    h = acc.per_rung["hash_t64"]
+    assert h["rows"] == 1 and h["overpredicted"] == 1
+    assert acc.rung_mispredict_rate == pytest.approx(1 / 3)
+    s = acc.summary()
+    assert set(s) == {"workflow", "n_rows", "est_err_p50", "est_err_p95",
+                      "rung_mispredict_rate", "overflow_fallback_causes"}
+
+
+def test_measure_accuracy_underprediction_and_esc_exempt():
+    dense = [SimpleNamespace(is_longrow=False, window=256, cap=8,
+                             rows=np.array([0]))]
+    plan = _fake_plan([4.0, 100.0], [3, 3], dense=dense, esc_rows=[1])
+    acc = accuracy.measure_accuracy(plan, np.asarray([16, 1]),
+                                    {"dense_window": 1})
+    assert acc.per_rung["dense_w256"]["underpredicted"] == 1
+    # ESC rows never mispredict: the pass is exact
+    assert acc.per_rung["esc"] == {"rows": 1, "capacity": 0,
+                                   "underpredicted": 0, "overpredicted": 0}
+    assert acc.overflow_causes == {"dense_window": 1}
+
+
+def test_measure_accuracy_none_without_prediction():
+    plan = _fake_plan([1.0], [1])
+    plan.pred_row_nnz = None  # plans frozen before this telemetry
+    assert accuracy.measure_accuracy(plan, np.asarray([1])) is None
+
+
+def test_accuracy_feeds_installed_registry():
+    reg = metrics.MetricsRegistry()
+    plan = _fake_plan([10.0], [5], dense=[SimpleNamespace(
+        is_longrow=False, window=256, cap=32, rows=np.array([0]))])
+    prev = metrics.install_registry(reg)
+    try:
+        accuracy.measure_accuracy(plan, np.asarray([10]),
+                                  {"hash_spill": 2})
+    finally:
+        metrics.install_registry(prev)
+    snap = reg.snapshot()
+    assert snap["counters"]["ocean.executions{workflow=estimation}"] == 1
+    assert snap["counters"][
+        "ocean.overflow_fallback_rows{cause=hash_spill}"] == 2
+    assert snap["counters"]["ocean.rung_rows{rung=dense_w256}"] == 1
+
+
+def test_record_decision_contents():
+    cfg = SimpleNamespace(er_threshold=2.0, cr_threshold=0.5,
+                          upper_bound_avg_products=16.0)
+    rec = accuracy.record_decision(
+        workflow="upper_bound", forced=None, feed_forward=False, er=1.5,
+        sampled_cr=0.4, nproducts_avg=7.0, cfg=cfg)
+    assert rec["workflow"] == "upper_bound" and rec["forced"] is None
+    assert rec["er"] == 1.5 and rec["sampled_cr"] == 0.4
+    assert rec["er_threshold"] == 2.0 and rec["cr_threshold"] == 0.5
+
+
+def test_report_carries_accuracy_and_decision():
+    a = formats.random_uniform_csr(21, 64, 48, 4.0)
+    b = formats.random_uniform_csr(22, 48, 56, 4.0)
+    _, rep = ocean_spgemm(a, b, cache=False)
+    acc = rep.estimation_accuracy
+    assert acc is not None and acc.n_rows > 0
+    assert acc.est_err_p95 >= acc.est_err_p50 >= 0.0
+    assert 0.0 <= acc.rung_mispredict_rate <= 1.0
+    assert sum(r["rows"] for r in acc.per_rung.values()) > 0
+    assert rep.decision is not None
+    assert rep.decision["workflow"] == rep.workflow
+    assert rep.audit() == []
+
+
+# ---------------------------------------------------------------------------
+# OceanReport.audit
+# ---------------------------------------------------------------------------
+
+def _report(**kw):
+    base = dict(workflow="estimation", er=1.0, sampled_cr=None,
+                nproducts_avg=1.0, total_products=10, m_regs=64,
+                stage_seconds={"analysis": 0.1, "merge": 0.2},
+                bins={}, overflow_rows=0, nnz_out=5)
+    base.update(kw)
+    return OceanReport(**base)
+
+
+def test_audit_flags_violations():
+    assert _report().audit() == []
+    assert any("negative" in v for v in _report(
+        stage_seconds={"analysis": -0.1}).audit())
+    bad = _report(overlap_seconds=0.5)  # > merge stage 0.2
+    assert any("exceeds parent merge" in v for v in bad.audit())
+    assert bad.merge_overlap_frac == 1.0  # the view clamps
+    assert any("negative" in v
+               for v in _report(wave2_overlap_seconds=-1.0).audit())
+    assert any("analysis_shard_seconds" in v for v in _report(
+        analysis_shard_seconds=[0.1, -0.2]).audit())
+
+
+def test_merge_overlap_frac_is_a_view():
+    rep = _report(overlap_seconds=0.1)
+    assert rep.merge_overlap_frac == pytest.approx(0.5)
+    rep.stage_seconds["merge"] = 0.0
+    assert rep.merge_overlap_frac == 0.0  # no merge work -> no fraction
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_registry_labeled_series_and_snapshot():
+    reg = metrics.MetricsRegistry()
+    reg.counter("req").inc()
+    reg.counter("req", tenant="acme").inc(2)
+    reg.counter("req", tenant="globex").inc(3)
+    assert reg.counter("req").value == 1  # get-or-create returns same obj
+    assert reg.labeled_values("req", "tenant") == {"acme": 2, "globex": 3}
+    reg.gauge("depth").set(4)
+    reg.gauge("peak", agg="max").set_max(7)
+    reg.histogram("lat").record(1.0)
+    snap = reg.snapshot()
+    assert snap["counters"] == {"req": 1, "req{tenant=acme}": 2,
+                                "req{tenant=globex}": 3}
+    assert snap["gauges"] == {"depth": 4, "peak": 7}
+    assert snap["histograms"]["lat"]["count"] == 1
+    json.dumps(snap)  # export form must be JSON-ready
+
+
+def test_registry_merge_policies_and_reset():
+    a, b = metrics.MetricsRegistry(), metrics.MetricsRegistry()
+    a.counter("n").inc(2)
+    b.counter("n").inc(5)
+    a.gauge("depth").set(1)
+    b.gauge("depth").set(2)
+    a.gauge("peak", agg="max").set(9)
+    b.gauge("peak", agg="max").set(4)
+    a.gauge("mode", agg="last").set(1)
+    b.gauge("mode", agg="last").set(2)
+    a.histogram("lat").record(1.0)
+    b.histogram("lat").record(3.0)
+    a.merge(b)
+    assert a.counter("n").value == 7
+    assert a.gauge("depth").value == 3          # sum
+    assert a.gauge("peak", agg="max").value == 9  # max keeps larger
+    assert a.gauge("mode", agg="last").value == 2  # merged-in wins
+    h = a.histogram("lat")
+    assert h.count == 2 and sorted(h.sample()) == [1.0, 3.0]
+    a.reset()
+    assert a.counter("n").value == 0 and a.gauge("peak").value == 0
+    assert a.histogram("lat").count == 0 and not a.histogram("lat").sample()
+
+
+def test_histogram_reservoir_keeps_newest_and_percentiles_exact():
+    h = metrics.Histogram(cap=8)
+    for v in range(20):
+        h.record(float(v))
+    assert h.count == 20 and h.total == sum(range(20))
+    assert h.sample() == [float(v) for v in range(12, 20)]  # newest cap
+    xs = h.sample()
+    for q in (50, 95, 99):
+        assert h.percentile(q) == pytest.approx(
+            float(np.percentile(xs, q)))
+    assert metrics.Histogram().percentile(50) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# ServiceStats aggregation (registry-backed views)
+# ---------------------------------------------------------------------------
+
+def test_service_stats_merge_under_threaded_burst():
+    """Per-worker ServiceStats merged concurrently into one aggregate:
+    counters sum exactly, peaks take the max, reservoirs concatenate."""
+    total = ServiceStats()
+    n_workers, per = 8, 50
+    errs = []
+
+    def worker(i):
+        try:
+            st = ServiceStats()
+            for j in range(per):
+                st.requests += 1
+                st.note_queue_depth(i + 1)
+                st.note_plan_warm_hit("acme" if j % 2 else "globex")
+                st.record_latency(0.001 * (i + 1))
+            total.merge(st)
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    ts = [threading.Thread(target=worker, args=(i,))
+          for i in range(n_workers)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errs
+    assert total.requests == n_workers * per
+    assert total.plan_warm_hits == n_workers * per
+    assert total.plan_warm_hits_by_tenant == {
+        "acme": n_workers * (per // 2), "globex": n_workers * (per // 2)}
+    assert total.queue_depth_peak == n_workers  # max across workers
+    assert len(total.latency_sample()) == n_workers * per
+    snap = total.snapshot()
+    assert snap["counters"]["requests"] == total.requests
+    assert snap["histograms"]["latency_seconds"]["count"] == \
+        n_workers * per
+    total.reset()
+    assert total.requests == 0 and total.queue_depth_peak == 0
+    assert total.latency_sample() == []
+    assert total.plan_warm_hits_by_tenant == {"acme": 0, "globex": 0}
+
+
+def test_service_stats_fields_are_registry_views():
+    st = ServiceStats()
+    st.requests += 3
+    st.batches = 2
+    assert st.registry.counter("requests").value == 3
+    st.registry.counter("batches").inc(5)
+    assert st.batches == 7  # reads come from the same series
+    assert st.snapshot()["counters"]["requests"] == 3
